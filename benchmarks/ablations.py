@@ -1,0 +1,126 @@
+"""Component ablations of OmniSense (beyond-paper analysis).
+
+Quantifies each design element's contribution at a fixed budget by
+disabling one at a time:
+
+  * ``no_discovery``   — spherical object discovery off (paper argues
+    the history-only loop enters a vicious circle; this measures it);
+  * ``no_pipelining``  — the allocator plans with SERIAL latencies
+    (d_pre + d_inf sequential per SRoI), i.e. paper Fig. 6 disabled;
+  * ``content_blind``  — the gav.ccv estimation replaced by each
+    model's mean accuracy (no content awareness: the allocator still
+    budgets, but cannot match models to region content);
+  * ``no_special``     — oversized objects are not given special SRoIs
+    (they are simply dropped from prediction).
+
+    PYTHONPATH=src:. python -m benchmarks.ablations
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core import sroi as sroi_mod
+from repro.core.omnisense import OmniSenseLoop
+from repro.data.synthetic import make_video
+from repro.serving import profiles
+from repro.serving.evaluation import sph_map
+from repro.serving.network import NetworkModel
+from repro.serving.scheduler import OmniSenseLatencyModel, OracleBackend
+
+N_FRAMES = 30
+BUDGET = 1.8
+
+
+class SerialLatencyModel(OmniSenseLatencyModel):
+    """Moves all cost into d_pre so the DP's pipelining recurrence
+    degenerates to the serial sum (ablates paper Fig. 6)."""
+
+    def delays(self, srois, variants):
+        d_pre, d_inf = super().delays(srois, variants)
+        return d_pre + d_inf, np.zeros_like(d_inf)
+
+
+def _content_blind(loop: OmniSenseLoop):
+    def blind_matrix(srois):
+        m, r = len(loop.variants), len(srois)
+        out = np.zeros((1 + m, r))
+        for j, s in enumerate(srois):
+            for i, var in enumerate(loop.variants):
+                out[1 + i, j] = s.alpha * float(np.mean(var.gav))
+        return out
+
+    loop._weighted_acc_matrix = blind_matrix
+    return loop
+
+
+def _run(loop, backend, video, frames):
+    preds = []
+    for f in frames:
+        backend.set_frame(f)
+        res = loop.process_frame(None)
+        preds.extend((f, d) for d in res.detections)
+    gts = [(f, d) for f in frames for d in video.visible_objects(f)]
+    return sph_map(preds, gts)
+
+
+def run(csv=print) -> dict:
+    video = make_video(n_frames=N_FRAMES + 4, n_objects=50, seed=3)
+    frames = range(N_FRAMES)
+    variants = profiles.make_ladder()
+    out = {}
+
+    def fresh(latency_cls=OmniSenseLatencyModel, **loop_kw):
+        lat = latency_cls(profiles.paper_profile(), NetworkModel())
+        backend = OracleBackend(video)
+        costs = [lat._pre(v) + lat._inf(v) for v in variants]
+        kw = dict(budget_s=BUDGET, explore_costs=costs)
+        kw.update(loop_kw)
+        return OmniSenseLoop(variants, lat, backend, **kw), backend
+
+    loop, backend = fresh()
+    out["full"] = _run(loop, backend, video, frames)
+
+    loop, backend = fresh(explore_every=0)
+    loop._discovery.patience = 10 ** 9  # discovery fully off
+    out["no_discovery"] = _run(loop, backend, video, frames)
+
+    loop, backend = fresh(latency_cls=SerialLatencyModel)
+    out["no_pipelining"] = _run(loop, backend, video, frames)
+
+    loop, backend = fresh()
+    out["content_blind"] = _run(_content_blind(loop), backend, video, frames)
+
+    # no_special: strip oversized objects before prediction
+    loop, backend = fresh()
+    orig = sroi_mod.predict_srois
+
+    def no_special(history, **kw):
+        f = kw.get("f", math.radians(60.0))
+        kept = [o for o in history if o.fov[0] <= f and o.fov[1] <= f]
+        return orig(kept, **kw)
+
+    sroi_mod.predict_srois = no_special
+    try:
+        import repro.core.omnisense as om
+        om.sroi.predict_srois = no_special
+        out["no_special"] = _run(loop, backend, video, frames)
+    finally:
+        sroi_mod.predict_srois = orig
+        om.sroi.predict_srois = orig
+
+    for k, v in out.items():
+        delta = "" if k == "full" else \
+            f"{100 * (v - out['full']) / max(out['full'], 1e-9):+.1f}% vs full"
+        csv(f"ablation,{k},sph_map,{v:.4f},{delta}")
+    return out
+
+
+def main():
+    return run()
+
+
+if __name__ == "__main__":
+    main()

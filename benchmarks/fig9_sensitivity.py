@@ -1,0 +1,75 @@
+"""Paper Fig. 9 — sensitivity to image compression quality and bandwidth.
+
+9a: PNG (lossless) vs JPEG quality 100/75/50/25.  Lossy compression
+shrinks the wire payload (latency saved -> model upgrades) but degrades
+every model's accuracy; moderate compression should WIN over lossless
+and aggressive compression should LOSE (the paper's finding).
+
+9b: uplink 8.95 / 17.9 / 35.8 / 71.6 Mbps at a fixed budget: accuracy
+should rise with bandwidth and saturate once delivery stops being the
+bottleneck.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.omnisense import OmniSenseLoop
+from repro.data.synthetic import make_video
+from repro.serving import profiles
+from repro.serving.evaluation import sph_map
+from repro.serving.network import NetworkModel
+from repro.serving.scheduler import OmniSenseLatencyModel, OracleBackend
+
+N_FRAMES = 30
+BUDGET = 1.6
+
+# accuracy penalty of feeding models JPEG-degraded inputs (paper: mild
+# until quality < ~75, then steep)
+QUALITY_PENALTY = {"png": 1.0, "jpg-100": 0.995, "jpg-75": 0.97,
+                   "jpg-50": 0.92, "jpg-25": 0.82}
+
+
+def _run(video, variants, costs, bandwidth_mbps: float):
+    lat = OmniSenseLatencyModel(costs, NetworkModel(bandwidth_mbps))
+    backend = OracleBackend(video)
+    loop = OmniSenseLoop(variants, lat, backend, budget_s=BUDGET)
+    preds, e2e = [], []
+    frames = range(N_FRAMES)
+    for f in frames:
+        backend.set_frame(f)
+        res = loop.process_frame(None)
+        preds.extend((f, d) for d in res.detections)
+        e2e.append(res.planned_latency)
+    gts = [(f, d) for f in frames for d in video.visible_objects(f)]
+    return sph_map(preds, gts), float(np.mean(e2e))
+
+
+def run(csv=print) -> dict:
+    video = make_video(n_frames=N_FRAMES + 4, n_objects=60, seed=3)
+    out = {"9a": {}, "9b": {}}
+
+    for tag, penalty in QUALITY_PENALTY.items():
+        if tag == "png":
+            costs = profiles.paper_profile()
+        else:
+            costs = profiles.jpeg_profile(int(tag.split("-")[1]))
+        variants = profiles.make_ladder(quality_penalty=penalty)
+        acc, t = _run(video, variants, costs, 17.9)
+        out["9a"][tag] = (acc, t)
+        csv(f"fig9a,{tag},sph_map,{acc:.4f},{t:.3f}")
+
+    variants = profiles.make_ladder()
+    for bw in (8.95, 17.9, 35.8, 71.6):
+        acc, t = _run(video, variants, profiles.paper_profile(), bw)
+        out["9b"][bw] = (acc, t)
+        csv(f"fig9b,{bw}Mbps,sph_map,{acc:.4f},{t:.3f}")
+    return out
+
+
+def main():
+    return run()
+
+
+if __name__ == "__main__":
+    main()

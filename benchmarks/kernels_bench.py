@@ -1,0 +1,69 @@
+"""Micro-benchmarks of the Pallas kernels (interpret mode on CPU —
+numbers establish per-call overhead shape, not TPU throughput; the TPU
+roofline story lives in EXPERIMENTS.md section Perf) and the pure-jnp
+reference paths that actually execute on this host.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, repeats=5) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / repeats * 1e6  # us
+
+
+def run(csv=print) -> dict:
+    from repro.core import projection
+    from repro.core.sphere import sph_iou_matrix
+    from repro.kernels.sphiou.ops import sphiou_matrix
+
+    out = {}
+    rng = np.random.default_rng(0)
+
+    # gnomonic jnp path (the production CPU path; kernel is TPU-target)
+    erp = jnp.asarray(rng.random((512, 1024, 3)).astype(np.float32))
+    fov = (math.radians(60), math.radians(60))
+    t = _time(lambda e: projection.project_sroi(
+        e, jnp.asarray(0.3), jnp.asarray(0.1), fov, (416, 416)), erp)
+    out["gnomonic_jnp_416"] = t
+    csv(f"kernels,gnomonic_jnp_416,us_per_call,{t:.0f},512x1024->416x416")
+
+    # sphiou: jnp oracle vs pallas-interpret
+    boxes = jnp.asarray(np.stack([
+        rng.uniform(-3, 3, 256), rng.uniform(-1.2, 1.2, 256),
+        rng.uniform(0.1, 1.0, 256), rng.uniform(0.1, 1.0, 256)],
+        axis=-1).astype(np.float32))
+    t_ref = _time(lambda b: sph_iou_matrix(b, b), boxes)
+    out["sphiou_jnp_256"] = t_ref
+    csv(f"kernels,sphiou_jnp_256x256,us_per_call,{t_ref:.0f},")
+    t_k = _time(lambda b: sphiou_matrix(b, b), boxes)
+    out["sphiou_pallas_interp_256"] = t_k
+    csv(f"kernels,sphiou_pallas_interpret_256x256,us_per_call,{t_k:.0f},"
+        "interpret-mode (correctness harness)")
+
+    # attention: chunked jnp (production fallback) per 1k tokens
+    from repro.kernels.attention.ops import flash_attention_ref
+
+    q = jnp.asarray(rng.standard_normal((1, 256, 8, 64)).astype(np.float32))
+    t_att = _time(lambda q: flash_attention_ref(q, q, q, causal=True), q)
+    out["attention_ref_256"] = t_att
+    csv(f"kernels,attention_ref_b1s256h8d64,us_per_call,{t_att:.0f},")
+    return out
+
+
+def main():
+    return run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Roofline report generator: dry-run JSONs -> EXPERIMENTS.md tables.
+
+Reads ``experiments/dryrun/*.json`` and emits the section Roofline table
+(three terms per cell, dominant bottleneck, MODEL_FLOPS/HLO_FLOPS) plus
+the hillclimb-candidate ranking.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+
+def load(out_dir="experiments/dryrun", mesh="singlepod"):
+    rows = []
+    for p in sorted(pathlib.Path(out_dir).glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        rows.append(rec)
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def table(rows, csv=print):
+    csv("| arch | shape | kind | compute | memory | collective | dominant "
+        "| useful | frac | note |")
+    csv("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if "skipped" in r:
+            csv(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | — "
+                f"| {r['skipped'].split(':')[0]} |")
+            continue
+        rf = r["roofline"]
+        note = ""
+        temp_gb = r["memory"]["temp_size_in_bytes"] / 1e9
+        if temp_gb > 16:
+            note = f"temp {temp_gb:.0f}GB/dev >16GB!"
+        csv(f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} "
+            f"| {fmt_s(rf['collective_s'])} | {rf['dominant'].replace('_s','')} "
+            f"| {rf['useful_flops_ratio']:.2f} "
+            f"| {rf['roofline_fraction']:.3f} | {note} |")
+
+
+def candidates(rows, csv=print):
+    live = [r for r in rows if "skipped" not in r and r["kind"] == "train"]
+    live_all = [r for r in rows if "skipped" not in r]
+    by_frac = sorted(live, key=lambda r: r["roofline"]["roofline_fraction"])
+    by_coll = sorted(live_all,
+                     key=lambda r: -r["roofline"]["collective_s"])
+    csv("\nworst roofline fraction (train cells):")
+    for r in by_frac[:5]:
+        csv(f"  {r['arch']}/{r['shape']}: frac={r['roofline']['roofline_fraction']:.4f} "
+            f"dom={r['roofline']['dominant']}")
+    csv("most collective-bound:")
+    for r in by_coll[:5]:
+        csv(f"  {r['arch']}/{r['shape']}: coll={fmt_s(r['roofline']['collective_s'])} "
+            f"(vs compute {fmt_s(r['roofline']['compute_s'])})")
+
+
+def main():
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "singlepod"
+    rows = load(mesh=mesh)
+    table(rows)
+    candidates(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+
+Prints ``name,key,metric,value,derived`` CSV lines.  Figures covered:
+  * Fig. 2/3  — NOA distributions of the dataset (measurement study)
+  * Fig. 7    — OmniSense vs ERP/CubeMap accuracy & latency + claims
+  * Fig. 8    — mobile-side system overhead breakdown
+  * Fig. 9a/b — compression-quality and bandwidth sensitivity
+  * kernels   — per-kernel microbenchmarks
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import ablations, fig2_noa, fig7_overall, \
+        fig8_overhead, fig9_sensitivity, kernels_bench
+
+    print("table,key,metric,value,derived")
+    fig2_noa.run()
+    results = fig7_overall.run()
+    fig7_overall.derived_claims(results)
+    fig8_overhead.run()
+    fig9_sensitivity.run()
+    ablations.run()
+    kernels_bench.run()
+
+
+if __name__ == "__main__":
+    main()

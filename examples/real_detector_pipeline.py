@@ -1,0 +1,62 @@
+"""The REAL inference path, end to end, on actual pixels.
+
+Renders synthetic ERP frames, extracts SRoI perspective images with the
+Pallas gnomonic kernel (interpret mode on CPU), runs the JAX CSP
+detector ladder on them, back-projects detections to SphBBs and applies
+spherical NMS — i.e. every data-plane stage of the paper's Fig. 5 with
+no oracle anywhere. Detectors are randomly initialised (no pretrained
+weights offline), so boxes are not semantically meaningful; the point
+is the full pipeline executing on real tensors.
+
+    PYTHONPATH=src python examples/real_detector_pipeline.py
+"""
+
+import dataclasses
+import math
+import time
+
+import jax
+import numpy as np
+
+from repro.core.omnisense import OmniSenseLoop
+from repro.data.synthetic import make_video, render_erp
+from repro.models import detector as det_mod
+from repro.serving import profiles
+from repro.serving.network import NetworkModel
+from repro.serving.scheduler import JaxDetectorBackend, OmniSenseLatencyModel
+
+
+def main():
+    video = make_video(n_frames=6, n_objects=20, seed=7)
+    # reduced detector ladder (CPU-friendly input sizes)
+    cfgs = [dataclasses.replace(c, input_size=max(64, c.input_size // 8
+                                                  // 32 * 32),
+                                n_classes=16)
+            for c in det_mod.PAPER_LADDER[:3]]
+    params = [det_mod.init_params(jax.random.PRNGKey(i), c)
+              for i, c in enumerate(cfgs)]
+    variants = profiles.make_ladder(n_categories=16)[:3]
+    backend = JaxDetectorBackend(cfgs, params, conf=0.05, max_det=4)
+    lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+    loop = OmniSenseLoop(variants, lat, backend, budget_s=2.0,
+                         n_categories=16,
+                         explore_costs=[0.1, 0.2, 0.3])
+
+    for f in range(3):
+        frame = render_erp(video, f, height=192, width=384)
+        t0 = time.perf_counter()
+        res = loop.process_frame(frame)
+        wall = time.perf_counter() - t0
+        print(f"frame {f}: {len(res.srois)} SRoIs -> "
+              f"{len(res.detections)} SphBB detections "
+              f"(host wall {wall:.2f}s, incl. jit compiles on first frames)")
+        for d in res.detections[:3]:
+            print(f"    cat={d.category:2d} score={d.score:.2f} "
+                  f"box=({d.box[0]:+.2f},{d.box[1]:+.2f},"
+                  f"{d.box[2]:.2f},{d.box[3]:.2f})")
+    print("\nfull real-tensor pipeline OK "
+          "(gnomonic Pallas kernel -> detector -> SphBB -> spherical NMS)")
+
+
+if __name__ == "__main__":
+    main()

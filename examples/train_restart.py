@@ -1,0 +1,75 @@
+"""Training substrate demo: train, crash, restart from checkpoint.
+
+Trains the smollm smoke config on the synthetic token pipeline with the
+prefetcher, async-checkpoints every 20 steps, simulates a crash at step
+50, and restarts from the latest manifest — the loss curve continues
+where it left off. (~1 minute on CPU.)
+
+    PYTHONPATH=src python examples/train_restart.py
+"""
+
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.configs import base as cfgbase
+from repro.data.pipeline import Prefetcher, lm_batches
+from repro.models import transformer as lm_mod
+from repro.training import optimizer as opt_mod
+from repro.training import steps as steps_mod
+
+
+def main():
+    cfg = cfgbase.get_arch("smollm_135m").smoke
+    opt = opt_mod.adamw(lr=3e-3, warmup_steps=10)
+    step_fn = jax.jit(steps_mod.lm_train_step(cfg, opt))
+
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+    mgr = CheckpointManager(ckpt_dir, keep_n=2)
+
+    def data():
+        return Prefetcher(lm_batches(cfg.vocab_size, batch=8, seq=32,
+                                     n_batches=200), depth=2)
+
+    # ---- phase 1: train to step 50, checkpointing every 20 ----
+    params = lm_mod.init_params(jax.random.PRNGKey(0), cfg)
+    state = steps_mod.make_state(params, opt)
+    losses = []
+    it = data()
+    for i, batch in zip(range(50), it):
+        state, metrics = step_fn(state, {k: jax.numpy.asarray(v)
+                                         for k, v in batch.items()})
+        losses.append(float(metrics["loss"]))
+        if (i + 1) % 20 == 0:
+            mgr.save_async(i + 1, state)
+    mgr.wait()
+    print(f"phase 1: step 50, loss {losses[0]:.3f} -> {losses[-1]:.3f}, "
+          f"checkpoints at {mgr.steps()}")
+
+    # ---- simulated crash + restart ----
+    del state
+    latest = mgr.latest_step()
+    template = steps_mod.make_state(
+        lm_mod.init_params(jax.random.PRNGKey(0), cfg), opt)
+    state = jax.tree.map(jax.numpy.asarray, mgr.restore(latest, template))
+    print(f"restart: restored step {latest} "
+          f"(optimizer step counter = {int(state['opt']['step'])})")
+
+    it2 = data()
+    for _ in zip(range(latest), it2):
+        pass  # skip consumed batches (deterministic pipeline)
+    more = []
+    for i, batch in zip(range(50), it2):
+        state, metrics = step_fn(state, {k: jax.numpy.asarray(v)
+                                         for k, v in batch.items()})
+        more.append(float(metrics["loss"]))
+    print(f"phase 2: step {latest} -> {latest + 50}, "
+          f"loss {more[0]:.3f} -> {more[-1]:.3f}")
+    assert more[-1] < losses[0], "loss should keep improving after restart"
+    print("\ncheckpoint/restart training substrate OK")
+
+
+if __name__ == "__main__":
+    main()

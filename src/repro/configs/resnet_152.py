@@ -1,0 +1,37 @@
+"""resnet-152 [arXiv:1512.03385; paper].
+
+img_res=224 depths=(3,8,36,3) width=64 bottleneck blocks.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import VISION_SHAPES
+from repro.models.vision import ResNetConfig
+
+FAMILY = "vision"
+SHAPES = VISION_SHAPES
+SKIP: dict = {}
+
+
+def full_config() -> ResNetConfig:
+    return ResNetConfig(
+        name="resnet-152",
+        img_res=224,
+        depths=(3, 8, 36, 3),
+        width=64,
+        n_classes=1000,
+        param_dtype=jnp.bfloat16,
+        compute_dtype=jnp.bfloat16,
+        remat=True,
+    )
+
+
+def smoke_config() -> ResNetConfig:
+    return ResNetConfig(
+        name="resnet152-smoke",
+        img_res=64,
+        depths=(2, 2, 3, 2),
+        width=16,
+        n_classes=10,
+        remat=False,
+    )

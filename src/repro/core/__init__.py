@@ -1,0 +1,16 @@
+"""OmniSense core: spherical geometry, SRoI prediction, accuracy
+estimation, latency-constrained allocation, and the per-frame loop."""
+
+from repro.core import accuracy, allocation, discovery, projection, sphere, sroi
+from repro.core.omnisense import FrameResult, OmniSenseLoop
+
+__all__ = [
+    "accuracy",
+    "allocation",
+    "discovery",
+    "projection",
+    "sphere",
+    "sroi",
+    "FrameResult",
+    "OmniSenseLoop",
+]

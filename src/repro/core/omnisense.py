@@ -1,0 +1,206 @@
+"""The per-frame OmniSense loop (paper Fig. 5) tying the core together.
+
+    frame -> SRoI predictor -> resource allocator -> inference scheduler
+          -> spherical NMS -> results (fed back to the predictor)
+
+This module is substrate-agnostic: the detector, the latency model and
+the execution backend are injected, so the same loop drives
+
+  * the CPU prototype used in tests/examples (real small detectors),
+  * the reproduction benchmark (paper-regime latency tables), and
+  * the pod serving runtime in ``repro.serving.server``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Protocol, Sequence
+
+import numpy as np
+
+from repro.core import accuracy as acc_mod
+from repro.core import allocation, discovery, sroi
+from repro.core.sphere import sph_nms_host
+
+
+class LatencyModel(Protocol):
+    """Provides the allocator's delay terms for a frame's SRoIs."""
+
+    def delays(
+        self, srois: Sequence[sroi.SRoI], variants: Sequence[acc_mod.ModelProfile]
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Return (d_pre, d_inf), each (1 + n_variants, n_srois); row 0
+        is the zero-cost "skip" pseudo-model."""
+        ...
+
+
+class InferenceBackend(Protocol):
+    """Executes one SRoI with one variant; returns spherical detections."""
+
+    def infer_sroi(
+        self, frame: np.ndarray, region: sroi.SRoI, variant: acc_mod.ModelProfile
+    ) -> list[sroi.Detection]:
+        ...
+
+    def infer_erp(
+        self, frame: np.ndarray, variant: acc_mod.ModelProfile
+    ) -> list[sroi.Detection]:
+        """Full-ERP inference used by the discovery mechanism."""
+        ...
+
+
+@dataclasses.dataclass
+class FrameResult:
+    detections: list[sroi.Detection]
+    srois: list[sroi.SRoI]
+    plan: allocation.Plan | None
+    planned_latency: float
+    overhead_s: float  # SRoI prediction + allocation + post-processing
+    discovered: bool
+
+
+class OmniSenseLoop:
+    """Stateful per-stream analytics session."""
+
+    def __init__(
+        self,
+        variants: Sequence[acc_mod.ModelProfile],
+        latency_model: LatencyModel,
+        backend: InferenceBackend,
+        budget_s: float,
+        f_deg: float = 60.0,
+        gamma: float = 1.1,
+        delta: int = 2,
+        nms_threshold: float = 0.6,
+        n_categories: int = acc_mod.N_CATEGORIES,
+        explore_every: int = 6,
+        explore_costs: list[float] | None = None,
+        on_plan: Callable[[allocation.Plan, list[sroi.SRoI]], None] | None = None,
+    ) -> None:
+        self.variants = list(variants)
+        self.latency_model = latency_model
+        self.backend = backend
+        self.budget_s = budget_s
+        self.f = math.radians(f_deg)
+        self.gamma = gamma
+        self.delta = delta
+        self.nms_threshold = nms_threshold
+        self.n_categories = n_categories
+        # periodic spherical-object discovery: every `explore_every`
+        # frames the loop reserves the full-ERP pass cost from the
+        # allocator's budget and spends it on exploration (the paper's
+        # discovery mechanism, run on a cadence so moving cameras keep
+        # finding regions the history has never seen).
+        self.explore_every = explore_every
+        # per-variant full-ERP pass cost; exploration picks the largest
+        # model affordable within ~60% of the budget, so tight budgets
+        # explore with cheap models instead of starving the SRoI plan.
+        self.explore_costs = explore_costs or [0.0] * len(self.variants)
+        self._frame_idx = 0
+        self.on_plan = on_plan
+        # detection history: most recent `delta` frames
+        self._history: list[list[sroi.Detection]] = []
+        self._discovery = discovery.DiscoveryState()
+
+    # -- helpers ----------------------------------------------------------
+
+    def _flat_history(self) -> list[sroi.Detection]:
+        out: list[sroi.Detection] = []
+        for frame_dets in self._history[-self.delta :]:
+            out.extend(frame_dets)
+        return out
+
+    def _weighted_acc_matrix(self, srois: Sequence[sroi.SRoI]) -> np.ndarray:
+        """(1 + M, R): row 0 = skip (zero accuracy)."""
+        m, r = len(self.variants), len(srois)
+        out = np.zeros((1 + m, r), dtype=np.float64)
+        for j, s in enumerate(srois):
+            for i, var in enumerate(self.variants):
+                out[1 + i, j] = acc_mod.weighted_accuracy(var.gav, s.ccv, s.alpha)
+        return out
+
+    # -- main entry --------------------------------------------------------
+
+    def process_frame(self, frame: np.ndarray) -> FrameResult:
+        t0 = time.perf_counter()
+        self._frame_idx += 1
+        explore_frame = (self.explore_every > 0
+                         and self._frame_idx % self.explore_every == 0)
+        affordable = [i for i, c in enumerate(self.explore_costs)
+                      if c <= 0.6 * self.budget_s]
+        explore_idx = max(affordable) if affordable else             int(np.argmin(self.explore_costs))
+        explore_cost = self.explore_costs[explore_idx]
+        budget = self.budget_s
+        if explore_frame:
+            budget = max(0.0, budget - explore_cost)
+        srois = sroi.predict_srois(
+            self._flat_history(),
+            f=self.f,
+            gamma=self.gamma,
+            n_categories=self.n_categories,
+        )
+
+        plan = None
+        planned_latency = 0.0
+        detections: list[sroi.Detection] = []
+        if srois:
+            acc = self._weighted_acc_matrix(srois)
+            d_pre, d_inf = self.latency_model.delays(srois, self.variants)
+            plan = allocation.allocate(acc, d_pre, d_inf, budget)
+            if plan is not None:
+                planned_latency = plan.t_done
+                if self.on_plan is not None:
+                    self.on_plan(plan, list(srois))
+        overhead_alloc = time.perf_counter() - t0
+
+        # ---- execute the plan (inference is NOT overhead) ----
+        if plan is not None:
+            for j, model_idx in enumerate(plan.models):
+                if model_idx == 0:
+                    continue  # skipped SRoI
+                var = self.variants[model_idx - 1]
+                dets = self.backend.infer_sroi(frame, srois[j], var)
+                # special SRoIs keep only their largest detection
+                if srois[j].special and dets:
+                    dets = [max(dets, key=lambda d: d.noa())]
+                detections.extend(dets)
+
+        # ---- spherical object discovery ----
+        self._discovery.observe(len(srois))
+        discovered = False
+        if explore_frame or self._discovery.should_discover(
+                self.budget_s, planned_latency):
+            detections.extend(self.backend.infer_erp(
+                frame, self.variants[explore_idx]))
+            discovered = True
+            planned_latency = min(self.budget_s,
+                                  planned_latency + explore_cost)
+
+        # ---- post-processing: spherical NMS ----
+        t1 = time.perf_counter()
+        if detections:
+            boxes = np.stack([d.box for d in detections])
+            scores = np.array([d.score for d in detections])
+            keep = sph_nms_host(boxes, scores, self.nms_threshold)
+            detections = [d for d, k in zip(detections, keep) if k]
+        overhead_post = time.perf_counter() - t1
+
+        # ---- feed back into history ----
+        self._history.append(detections)
+        if len(self._history) > self.delta:
+            self._history = self._history[-self.delta :]
+
+        return FrameResult(
+            detections=detections,
+            srois=srois,
+            plan=plan,
+            planned_latency=planned_latency,
+            overhead_s=overhead_alloc + overhead_post,
+            discovered=discovered,
+        )
+
+    def seed_history(self, detections: list[sroi.Detection]) -> None:
+        """Bootstrap the history (e.g. from an initial full-ERP pass)."""
+        self._history.append(list(detections))

@@ -1,0 +1,347 @@
+"""Spherical geometry primitives for 360-degree video analytics.
+
+Implements the spherical criteria of Zhao et al. (AAAI'20) used by the
+OmniSense paper:
+
+  * ``SphBB`` — a spherical bounding box ``(theta, phi, dtheta, dphi)``
+    where ``theta`` is the longitude of the box centre in ``[-pi, pi]``,
+    ``phi`` the latitude in ``[-pi/2, pi/2]`` and ``dtheta``/``dphi``
+    the horizontal/vertical field-of-view occupied by the object,
+    *defined in the box's own tangent frame* (i.e. the box is the
+    rotation of an equator-centred spherical rectangle).
+  * ``sph_area`` — the area of a SphBB on the unit sphere,
+    ``2 * dtheta * sin(dphi / 2)`` (rotation invariant; paper footnote 1).
+  * ``sph_iou`` — pairwise spherical IoU.  Box A's centre is rotated to
+    the equator origin and box B's centre is expressed exactly in that
+    rotated frame; the intersection is then evaluated as the
+    lat/long-interval overlap of two equator-centred rectangles (the
+    fast approximation of the AAAI'20 spherical criteria).
+  * ``sph_nms`` — greedy spherical non-maximum suppression (paper
+    default threshold 0.6), in both a jit-compatible ``lax`` form and a
+    fast host/NumPy form used by the online serving loop.
+
+All functions are vectorised over leading axes and safe to ``jax.jit``.
+Angles are radians everywhere; degrees only at config boundaries.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# --------------------------------------------------------------------------
+# Coordinate transforms
+# --------------------------------------------------------------------------
+
+
+def sph_to_cart(theta: Array, phi: Array) -> Array:
+    """(lon, lat) -> unit vector, shape (..., 3).
+
+    x axis points at (theta=0, phi=0); z is the north pole.
+    """
+    cp = jnp.cos(phi)
+    return jnp.stack([cp * jnp.cos(theta), cp * jnp.sin(theta), jnp.sin(phi)], axis=-1)
+
+
+def cart_to_sph(v: Array) -> tuple[Array, Array]:
+    """Unit vector (..., 3) -> (lon, lat)."""
+    x, y, z = v[..., 0], v[..., 1], v[..., 2]
+    theta = jnp.arctan2(y, x)
+    phi = jnp.arcsin(jnp.clip(z, -1.0, 1.0))
+    return theta, phi
+
+
+def wrap_angle(a: Array) -> Array:
+    """Wrap angle(s) to [-pi, pi)."""
+    return (a + jnp.pi) % (2.0 * jnp.pi) - jnp.pi
+
+
+def rotation_to_origin(theta: Array, phi: Array) -> Array:
+    """Rotation matrix R (.., 3, 3) with R @ dir(theta, phi) == (1, 0, 0).
+
+    Composition: first undo longitude (rotate about z by -theta), then undo
+    latitude (rotate about y by +phi).
+    """
+    ct, st = jnp.cos(theta), jnp.sin(theta)
+    cp, sp = jnp.cos(phi), jnp.sin(phi)
+    zero = jnp.zeros_like(ct)
+    one = jnp.ones_like(ct)
+    # Rz(-theta)
+    rz = jnp.stack(
+        [
+            jnp.stack([ct, st, zero], axis=-1),
+            jnp.stack([-st, ct, zero], axis=-1),
+            jnp.stack([zero, zero, one], axis=-1),
+        ],
+        axis=-2,
+    )
+    # Ry(phi): rotates the +x axis toward +z by -phi... chosen so that
+    # Ry @ (cos(phi), 0, sin(phi)) = (1, 0, 0).
+    ry = jnp.stack(
+        [
+            jnp.stack([cp, zero, sp], axis=-1),
+            jnp.stack([zero, one, zero], axis=-1),
+            jnp.stack([-sp, zero, cp], axis=-1),
+        ],
+        axis=-2,
+    )
+    return ry @ rz
+
+
+def rotation_from_origin(theta: Array, phi: Array) -> Array:
+    """Inverse of :func:`rotation_to_origin` (transpose)."""
+    r = rotation_to_origin(theta, phi)
+    return jnp.swapaxes(r, -1, -2)
+
+
+# --------------------------------------------------------------------------
+# SphBB area / IoU
+# --------------------------------------------------------------------------
+
+
+def sph_area(boxes: Array) -> Array:
+    """Area on the unit sphere of SphBBs (..., 4) -> (...).
+
+    ``area = 2 * dtheta * sin(dphi / 2)`` (paper footnote 1).  Rotation
+    invariant because the box is defined in its own tangent frame.
+    """
+    dtheta = boxes[..., 2]
+    dphi = boxes[..., 3]
+    return 2.0 * dtheta * jnp.sin(dphi / 2.0)
+
+
+def _interval_overlap(lo1: Array, hi1: Array, lo2: Array, hi2: Array) -> tuple[Array, Array]:
+    lo = jnp.maximum(lo1, lo2)
+    hi = jnp.minimum(hi1, hi2)
+    return lo, hi
+
+
+def sph_intersection(boxes_a: Array, boxes_b: Array) -> Array:
+    """Pairwise intersection area between two broadcastable SphBB arrays.
+
+    ``boxes_a``: (..., 4) and ``boxes_b``: (..., 4), already broadcast
+    against each other (callers usually expand dims to form an N x M
+    grid).  Box A is rotated to the origin; box B's centre is expressed
+    exactly in A's frame; both are then treated as equator-centred
+    lat/long rectangles (AAAI'20 fast criteria).
+    """
+    ta, pa = boxes_a[..., 0], boxes_a[..., 1]
+    tb, pb = boxes_b[..., 0], boxes_b[..., 1]
+    # exact position of B's centre in A's frame
+    r = rotation_to_origin(ta, pa)
+    db = sph_to_cart(tb, pb)
+    db_in_a = jnp.einsum("...ij,...j->...i", r, db)
+    dlon, dlat = cart_to_sph(db_in_a)
+
+    half_ta, half_pa = boxes_a[..., 2] / 2.0, boxes_a[..., 3] / 2.0
+    half_tb, half_pb = boxes_b[..., 2] / 2.0, boxes_b[..., 3] / 2.0
+
+    lon_lo, lon_hi = _interval_overlap(-half_ta, half_ta, dlon - half_tb, dlon + half_tb)
+    lat_lo, lat_hi = _interval_overlap(-half_pa, half_pa, dlat - half_pb, dlat + half_pb)
+
+    lon_w = jnp.maximum(lon_hi - lon_lo, 0.0)
+    # exact area element in latitude: integral of cos(phi) d(phi)
+    lat_w = jnp.maximum(jnp.sin(lat_hi) - jnp.sin(lat_lo), 0.0)
+    lat_w = jnp.where(lat_hi > lat_lo, lat_w, 0.0)
+    return lon_w * lat_w
+
+
+def sph_iou(boxes_a: Array, boxes_b: Array) -> Array:
+    """Pairwise SphIoU of broadcastable SphBB arrays -> (...).
+
+    The single-direction fast approximation is slightly asymmetric for
+    large boxes at different latitudes (whichever box is rotated to the
+    origin sees less distortion); we symmetrise by averaging the two
+    directions, which restores IoU(a, b) == IoU(b, a) exactly.
+    """
+    inter = 0.5 * (sph_intersection(boxes_a, boxes_b)
+                   + sph_intersection(boxes_b, boxes_a))
+    union = sph_area(boxes_a) + sph_area(boxes_b) - inter
+    return inter / jnp.maximum(union, 1e-12)
+
+
+def sph_iou_matrix(boxes_a: Array, boxes_b: Array) -> Array:
+    """(N, 4) x (M, 4) -> (N, M) SphIoU matrix (pure jnp reference).
+
+    The Pallas kernel in ``repro.kernels.sphiou`` computes the same
+    matrix tile-by-tile; this function is its oracle.
+    """
+    return sph_iou(boxes_a[:, None, :], boxes_b[None, :, :])
+
+
+# --------------------------------------------------------------------------
+# Spherical NMS
+# --------------------------------------------------------------------------
+
+
+def sph_nms(
+    boxes: Array,
+    scores: Array,
+    iou_threshold: float = 0.6,
+    max_out: int | None = None,
+) -> Array:
+    """Greedy spherical NMS, jit-compatible.
+
+    Returns a boolean keep-mask of shape (N,).  Suppression follows the
+    paper's default SphIoU threshold of 0.6.  ``max_out`` bounds the
+    number of survivors (useful for fixed-shape serving buffers).
+    """
+    n = boxes.shape[0]
+    order = jnp.argsort(-scores)
+    boxes_sorted = boxes[order]
+    iou = sph_iou_matrix(boxes_sorted, boxes_sorted)
+
+    def body(i, keep):
+        # i is suppressed if any higher-scoring kept box overlaps it
+        mask_higher = (jnp.arange(n) < i) & keep
+        overlapped = jnp.any(jnp.where(mask_higher, iou[:, i] > iou_threshold, False))
+        return keep.at[i].set(~overlapped)
+
+    keep_sorted = jax.lax.fori_loop(0, n, body, jnp.ones((n,), dtype=bool))
+    if max_out is not None:
+        rank = jnp.cumsum(keep_sorted.astype(jnp.int32)) - 1
+        keep_sorted = keep_sorted & (rank < max_out)
+    # un-sort
+    keep = jnp.zeros((n,), dtype=bool).at[order].set(keep_sorted)
+    return keep
+
+
+def _sph_intersection_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """NumPy twin of :func:`sph_intersection` for (N,4)x(M,4) grids."""
+    ta, pa = a[:, None, 0], a[:, None, 1]
+    ha, va = a[:, None, 2] / 2, a[:, None, 3] / 2
+    tb, pb = b[None, :, 0], b[None, :, 1]
+    hb, vb = b[None, :, 2] / 2, b[None, :, 3] / 2
+    dt = tb - ta
+    cpa, spa = np.cos(pa), np.sin(pa)
+    cpb, spb = np.cos(pb), np.sin(pb)
+    cdt = np.cos(dt)
+    x = cpa * cpb * cdt + spa * spb
+    y = cpb * np.sin(dt)
+    z = -spa * cpb * cdt + cpa * spb
+    dlon = np.arctan2(y, x)
+    dlat = np.arcsin(np.clip(z, -1.0, 1.0))
+    lon_w = np.maximum(np.minimum(ha, dlon + hb) - np.maximum(-ha, dlon - hb), 0)
+    lat_hi = np.minimum(va, dlat + vb)
+    lat_lo = np.maximum(-va, dlat - vb)
+    lat_w = np.where(lat_hi > lat_lo, np.sin(lat_hi) - np.sin(lat_lo), 0.0)
+    return lon_w * np.maximum(lat_w, 0.0)
+
+
+def sph_iou_matrix_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Pure-NumPy (N, M) SphIoU — the host serving path (no jax dispatch
+    overhead per frame; identical math to :func:`sph_iou_matrix`)."""
+    inter = 0.5 * (_sph_intersection_np(a, b) + _sph_intersection_np(b, a).T)
+    area_a = 2.0 * a[:, 2] * np.sin(a[:, 3] / 2.0)
+    area_b = 2.0 * b[:, 2] * np.sin(b[:, 3] / 2.0)
+    union = area_a[:, None] + area_b[None, :] - inter
+    return inter / np.maximum(union, 1e-12)
+
+
+def sph_nms_host(
+    boxes: np.ndarray,
+    scores: np.ndarray,
+    iou_threshold: float = 0.6,
+) -> np.ndarray:
+    """NumPy greedy spherical NMS for the host-side serving loop.
+
+    Same semantics as :func:`sph_nms`; avoids a device round-trip for
+    the handful of boxes the online loop handles per frame.
+    """
+    n = len(scores)
+    if n == 0:
+        return np.zeros((0,), dtype=bool)
+    order = np.argsort(-scores)
+    iou = sph_iou_matrix_np(np.asarray(boxes, np.float64),
+                            np.asarray(boxes, np.float64))
+    keep = np.zeros((n,), dtype=bool)
+    suppressed = np.zeros((n,), dtype=bool)
+    for idx in order:
+        if suppressed[idx]:
+            continue
+        keep[idx] = True
+        overl = iou[idx] > iou_threshold
+        overl[idx] = False
+        suppressed |= overl
+    return keep
+
+
+# --------------------------------------------------------------------------
+# ERP pixel <-> sphere
+# --------------------------------------------------------------------------
+
+
+def erp_to_sph(u: Array, v: Array, width: int, height: int) -> tuple[Array, Array]:
+    """ERP pixel coords (u right, v down; origin top-left) -> (lon, lat)."""
+    theta = (u / width - 0.5) * 2.0 * jnp.pi
+    phi = (0.5 - v / height) * jnp.pi
+    return theta, phi
+
+
+def sph_to_erp(theta: Array, phi: Array, width: int, height: int) -> tuple[Array, Array]:
+    """(lon, lat) -> ERP pixel coords (float)."""
+    u = (theta / (2.0 * jnp.pi) + 0.5) * width
+    v = (0.5 - phi / jnp.pi) * height
+    return u, v
+
+
+# --------------------------------------------------------------------------
+# PI detections -> SphBBs
+# --------------------------------------------------------------------------
+
+
+def pi_box_to_sphbb(
+    rect: Array,
+    center_theta: Array,
+    center_phi: Array,
+    fov: tuple[float, float],
+    pi_size: tuple[int, int],
+) -> Array:
+    """Back-project rectangular detections on a PI into SphBBs.
+
+    ``rect``: (..., 4) boxes as (x0, y0, x1, y1) in PI pixel coords.
+    ``fov``: (horizontal, vertical) field of view of the PI in radians.
+    ``pi_size``: (width, height) of the PI in pixels.
+
+    The PI is tangent at (center_theta, center_phi) (gnomonic).  Each
+    corner is lifted to a direction on the sphere; the detection's own
+    centre direction defines its tangent frame, and dtheta/dphi are the
+    angular extents of the corners in that frame — the "spherical
+    coordinate transformation" of paper section III-A.
+    """
+    w, h = pi_size
+    half_x = jnp.tan(fov[0] / 2.0)
+    half_y = jnp.tan(fov[1] / 2.0)
+
+    def lift(px, py):
+        # pixel -> tangent-plane coords
+        x = (px / w - 0.5) * 2.0 * half_x
+        y = (0.5 - py / h) * 2.0 * half_y
+        d = jnp.stack([jnp.ones_like(x), x, y], axis=-1)
+        d = d / jnp.linalg.norm(d, axis=-1, keepdims=True)
+        r = rotation_from_origin(center_theta, center_phi)
+        return jnp.einsum("...ij,...j->...i", r, d)
+
+    x0, y0, x1, y1 = rect[..., 0], rect[..., 1], rect[..., 2], rect[..., 3]
+    cx, cy = (x0 + x1) / 2.0, (y0 + y1) / 2.0
+    center_dir = lift(cx, cy)
+    ct, cp = cart_to_sph(center_dir)
+
+    corners = jnp.stack(
+        [lift(x0, y0), lift(x1, y0), lift(x0, y1), lift(x1, y1)], axis=-2
+    )  # (..., 4, 3)
+    r_inv = rotation_to_origin(ct, cp)
+    local = jnp.einsum("...ij,...kj->...ki", r_inv, corners)
+    lon, lat = cart_to_sph(local)
+    dtheta = jnp.max(lon, axis=-1) - jnp.min(lon, axis=-1)
+    dphi = jnp.max(lat, axis=-1) - jnp.min(lat, axis=-1)
+    return jnp.stack([ct, cp, dtheta, dphi], axis=-1)
+
+
+def normalized_object_area(boxes: Array) -> Array:
+    """NOA: SphBB area normalised by the sphere's surface area (4*pi)."""
+    return sph_area(boxes) / (4.0 * jnp.pi)

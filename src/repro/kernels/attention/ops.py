@@ -1,0 +1,119 @@
+"""Jitted public wrapper for flash attention.
+
+Handles: GQA head broadcasting, (B, S, H, D) <-> (BH, S, D) layout,
+padding Sq/Skv to block multiples with correct masking, block-size
+selection for short sequences, and interpret-mode fallback off-TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention import attention as _a
+from repro.kernels.attention.ref import mha_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pick_block(size: int, preferred: int) -> int:
+    if size >= preferred:
+        return preferred
+    b = 1
+    while b * 2 <= size:
+        b *= 2
+    return b
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Skv, Hkv, D)
+    v: jax.Array,  # (B, Skv, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    scale: float | None = None,
+    block_q: int = _a.DEFAULT_BLOCK_Q,
+    block_k: int = _a.DEFAULT_BLOCK_K,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Multi-head attention with optional GQA, causality and window.
+
+    ``q_offset`` is the absolute position of q[0] (used at decode time,
+    where Sq=1 and the KV cache holds ``Skv`` entries).
+    Returns (B, Sq, Hq, D) in q's dtype.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    assert hq % hkv == 0, "GQA requires query heads to be a multiple of kv heads"
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    # (B, S, H, D) -> (B*H, S, D)
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * hq, x.shape[1], d)
+
+    qf, kf, vf = fold(q), fold(k), fold(v)
+
+    bq = _pick_block(sq, block_q)
+    bk = _pick_block(skv, block_k)
+    pad_q = (-sq) % bq
+    pad_k = (-skv) % bk
+    qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+    vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+
+    out = _a.mha_pallas(
+        qf,
+        kf,
+        vf,
+        scale=scale,
+        causal=causal,
+        window=window,
+        kv_len=skv,
+        q_offset=q_offset,
+        block_q=bq,
+        block_k=bk,
+        interpret=interpret,
+    )
+    out = out[:, :sq, :]
+    return out.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    scale: float | None = None,
+) -> jax.Array:
+    """Oracle with the same (B, S, H, D) GQA API."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * hq, x.shape[1], d)
+
+    out = mha_ref(
+        fold(q), fold(k), fold(v), scale=scale, causal=causal, window=window,
+        q_offset=q_offset,
+    )
+    return out.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash attention kernel.
+
+Materialises the full (Sq, Skv) score matrix in f32 — O(S^2) memory,
+fine for test shapes, intractable for the long-context cells (which is
+the point of the kernel).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(
+    q: jax.Array,  # (BH, Sq, D)
+    k: jax.Array,  # (BH, Skv, D)
+    v: jax.Array,  # (BH, Skv, D)
+    *,
+    scale: float,
+    causal: bool = False,
+    window: int | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    sq, skv = q.shape[1], k.shape[1]
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None], p, 0.0)  # rows fully masked -> 0, not NaN
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

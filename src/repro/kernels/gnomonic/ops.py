@@ -1,0 +1,93 @@
+"""Jitted public wrapper around the gnomonic Pallas kernel.
+
+``gnomonic_sample`` plans the strip decomposition on the host (the
+sampling map is geometry, not data), checks the VMEM budget, and
+dispatches either to the Pallas kernel or — for pathological bands —
+to the jnp oracle.  Interpret mode is used automatically off-TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.projection import gnomonic_coords
+from repro.kernels.gnomonic import gnomonic as _g
+from repro.kernels.gnomonic.ref import gnomonic_sample_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pick_strip_h(out_h: int) -> int:
+    for cand in (8, 4, 2, 1):
+        if out_h % cand == 0:
+            return cand
+    return 1
+
+
+def gnomonic_sample(
+    erp: jax.Array,
+    u_map: np.ndarray,
+    v_map: np.ndarray,
+    *,
+    interpret: bool | None = None,
+    vmem_cap: int = _g.VMEM_CAP_BYTES,
+) -> jax.Array:
+    """Sample ``erp`` (H, W, C) at host-concrete maps (out_h, out_w).
+
+    Returns (out_h, out_w, C) with identical semantics to
+    :func:`repro.core.projection.sample_erp_bilinear` (horizontal wrap,
+    vertical clamp, pixel-centre bilinear).
+    """
+    u_map = np.asarray(u_map, dtype=np.float32)
+    v_map = np.asarray(v_map, dtype=np.float32)
+    erp_h, erp_w, c = erp.shape
+    out_h, out_w = u_map.shape
+    if interpret is None:
+        interpret = not _on_tpu()
+
+    strip_h = _pick_strip_h(out_h)
+    row_off, src_rows = _g.plan_strips(v_map, erp_h, strip_h)
+    band_bytes = src_rows * (erp_w + _g.SEAM_PAD) * c * erp.dtype.itemsize
+    if band_bytes > vmem_cap:
+        # pole-centred / degenerate PI: band would blow VMEM; use oracle
+        return gnomonic_sample_ref(erp, jnp.asarray(u_map), jnp.asarray(v_map))
+
+    # wrap u into [0, erp_w) exactly as the oracle's mod does, then pad
+    # the seam so u0 + 1 never leaves the array.
+    u_wrapped = np.mod(u_map, erp_w).astype(np.float32)
+    # floor(u) of values in [erp_w - 1, erp_w) is erp_w - 1; +1 hits the pad
+    erp_padded = jnp.concatenate([erp, erp[:, : _g.SEAM_PAD, :]], axis=1)
+
+    return _g.gnomonic_pallas(
+        erp_padded,
+        jnp.asarray(u_wrapped),
+        jnp.asarray(v_map),
+        jnp.asarray(row_off),
+        src_rows=src_rows,
+        strip_h=strip_h,
+        erp_h=erp_h,
+        interpret=interpret,
+    )
+
+
+def project_sroi_kernel(
+    erp: jax.Array,
+    center_theta: float,
+    center_phi: float,
+    fov: tuple[float, float],
+    out_size: tuple[int, int],
+    **kw,
+) -> jax.Array:
+    """SRoI -> PI via the Pallas path (host-concrete geometry)."""
+    u, v = gnomonic_coords(
+        jnp.asarray(center_theta),
+        jnp.asarray(center_phi),
+        fov,
+        out_size,
+        erp.shape[:2],
+    )
+    return gnomonic_sample(erp, np.asarray(u), np.asarray(v), **kw)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the gnomonic resampling kernel.
+
+Delegates to :func:`repro.core.projection.sample_erp_bilinear`, which is
+the framework's reference sampler — the kernel must match it bit-for-bit
+up to float associativity.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.projection import gnomonic_coords, sample_erp_bilinear
+
+
+def gnomonic_sample_ref(erp: jax.Array, u: jax.Array, v: jax.Array) -> jax.Array:
+    return sample_erp_bilinear(erp, u, v)
+
+
+__all__ = ["gnomonic_sample_ref", "gnomonic_coords"]

@@ -1,0 +1,41 @@
+"""Jitted public wrapper around the SphIoU Pallas kernel.
+
+Handles padding to block multiples (padded boxes get zero-area FoVs,
+whose IoU against anything is 0) and the (N, 4) <-> (4, N) transpose
+at the API boundary.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sphiou import sphiou as _s
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def sphiou_matrix(
+    boxes_a: jax.Array,  # (N, 4)
+    boxes_b: jax.Array,  # (M, 4)
+    *,
+    block_n: int = 256,
+    block_m: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(N, M) SphIoU matrix via the Pallas kernel."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, m = boxes_a.shape[0], boxes_b.shape[0]
+    block_n = min(block_n, max(8, n))
+    block_m = min(block_m, max(8, m))
+    pad_n = (-n) % block_n
+    pad_m = (-m) % block_m
+    a = jnp.pad(boxes_a.astype(jnp.float32), ((0, pad_n), (0, 0)))
+    b = jnp.pad(boxes_b.astype(jnp.float32), ((0, pad_m), (0, 0)))
+    out = _s.sphiou_pallas(
+        a.T, b.T, block_n=block_n, block_m=block_m, interpret=interpret
+    )
+    return out[:n, :m]

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the SphIoU kernel: the framework reference
+``repro.core.sphere.sph_iou_matrix``."""
+
+from __future__ import annotations
+
+from repro.core.sphere import sph_iou_matrix as sphiou_ref
+
+__all__ = ["sphiou_ref"]

@@ -1,0 +1,350 @@
+"""Cell builder: (architecture x input shape x mesh) -> lowerable step.
+
+A *cell* bundles everything the dry-run and roofline need:
+
+  * ``step``          — the jit-able function (train / prefill / decode /
+                        denoise / serve)
+  * ``abstract_args`` — ShapeDtypeStruct pytrees for every argument
+                        (no device allocation, ever)
+  * ``in_shardings``  — NamedSharding pytrees matching abstract_args
+  * ``model_flops``   — analytic "useful" FLOPs (6ND-style) for the
+                        MODEL_FLOPS / HLO_FLOPS roofline ratio
+  * ``comment``       — human-readable notes (e.g. sampler-loop factor)
+
+``input_specs(arch, shape)`` returns only the abstract inputs — the
+shape-audit entry point required by the brief.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cfgbase
+from repro.distributed import sharding as shd
+from repro.models import diffusion as diff_mod
+from repro.models import transformer as lm_mod
+from repro.models import vision as vis_mod
+from repro.training import optimizer as opt_mod
+from repro.training import steps as steps_mod
+
+Sds = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    step: Callable
+    abstract_args: tuple
+    in_specs: tuple  # PartitionSpec pytrees (mesh-independent description)
+    model_flops: float
+    comment: str = ""
+
+    def in_shardings(self, mesh: Mesh):
+        """NamedShardings adapted to the mesh: axes absent from the mesh
+        (e.g. 'pod' on single-pod) or not dividing the dimension evenly
+        (e.g. batch=1 long-context cells) are dropped per-leaf."""
+        shd.set_mesh_axis_sizes(mesh)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+        def fix(abstract, spec):
+            axes = []
+            for dim, ax in enumerate(spec):
+                ax = shd._filter_axes(ax)
+                if ax is None:
+                    axes.append(None)
+                    continue
+                names = ax if isinstance(ax, tuple) else (ax,)
+                size = int(np.prod([sizes[a] for a in names]))
+                ok = dim < len(abstract.shape) and abstract.shape[dim] % size == 0
+                axes.append(ax if ok else None)
+            while axes and axes[-1] is None:
+                axes.pop()
+            return NamedSharding(mesh, P(*axes))
+
+        return jax.tree.map(fix, self.abstract_args, self.in_specs,
+                            is_leaf=lambda x: isinstance(x, Sds))
+
+
+def _abstract(tree):
+    return jax.tree.map(lambda x: Sds(x.shape, x.dtype), tree)
+
+
+def _eval_params(init_fn) -> Any:
+    return _abstract(jax.eval_shape(init_fn))
+
+
+def _opt_abstract(params_abs) -> dict:
+    """AdamW state: f32 moments mirroring params + i32 step."""
+    moments = jax.tree.map(lambda s: Sds(s.shape, jnp.float32), params_abs)
+    return {"mu": moments,
+            "nu": jax.tree.map(lambda s: Sds(s.shape, jnp.float32), params_abs),
+            "step": Sds((), jnp.int32)}
+
+
+def _state_abstract(params_abs) -> dict:
+    return {"params": params_abs, "opt": _opt_abstract(params_abs),
+            "step": Sds((), jnp.int32)}
+
+
+def _state_specs(param_specs) -> dict:
+    return {"params": param_specs,
+            "opt": {"mu": param_specs, "nu": param_specs, "step": P()},
+            "step": P()}
+
+
+_OPT = opt_mod.adamw(lr=1e-4)
+
+
+# --------------------------------------------------------------------------
+# LM cells
+# --------------------------------------------------------------------------
+
+
+def _lm_cell(arch: cfgbase.ArchSpec, shape: cfgbase.ShapeSpec) -> Cell:
+    cfg: lm_mod.TransformerConfig = arch.config
+    b, s = shape.global_batch, shape.seq_len
+    params_abs = _eval_params(lambda: lm_mod.init_params(jax.random.PRNGKey(0), cfg))
+    param_specs = shd.spec_tree(
+        params_abs,
+        shd.lm_param_rules(n_experts=cfg.n_experts if cfg.moe else 0))
+    tokens_active = b * s
+
+    if shape.kind == "train":
+        step = steps_mod.lm_train_step(cfg, _OPT)
+        batch_abs = {"tokens": Sds((b, s), jnp.int32),
+                     "targets": Sds((b, s), jnp.int32)}
+        args = (_state_abstract(params_abs), batch_abs)
+        specs = (_state_specs(param_specs), shd.lm_batch_specs("train"))
+        flops = 6.0 * cfg.n_active_params * tokens_active
+        comment = f"6*N_active*D with N_active={cfg.n_active_params:.3e}"
+    elif shape.kind == "prefill":
+        step = steps_mod.lm_prefill_step(cfg, max_len=s)
+        batch_abs = {"tokens": Sds((b, s), jnp.int32)}
+        args = (params_abs, batch_abs)
+        specs = (param_specs, shd.lm_batch_specs("prefill"))
+        flops = 2.0 * cfg.n_active_params * tokens_active
+        comment = "forward-only 2*N_active*D"
+    else:  # decode
+        step = steps_mod.lm_decode_step(cfg)
+        s_cache = lm_mod.cache_length(cfg, s)
+        cache_shape = (cfg.n_layers, b, s_cache, cfg.n_kv_heads, cfg.d_head)
+        batch_abs = {
+            "token": Sds((b,), jnp.int32),
+            "cache_k": Sds(cache_shape, cfg.compute_dtype),
+            "cache_v": Sds(cache_shape, cfg.compute_dtype),
+            "cache_len": Sds((), jnp.int32),
+        }
+        args = (params_abs, batch_abs)
+        specs = (param_specs, shd.lm_batch_specs("decode"))
+        # one token per stream + KV-cache attention reads
+        flops = 2.0 * cfg.n_active_params * b \
+            + 4.0 * cfg.n_layers * b * s_cache * cfg.n_heads * cfg.d_head
+        comment = (f"decode: 2*N_active*B + attention over cache "
+                   f"(S_cache={s_cache})")
+    return Cell(arch.arch_id, shape.name, shape.kind, step, args, specs,
+                flops, comment)
+
+
+# --------------------------------------------------------------------------
+# vision cells
+# --------------------------------------------------------------------------
+
+
+def _vision_flops_per_image(cfg, res: int) -> float:
+    """Analytic 2*MAC forward-FLOPs per image."""
+    if isinstance(cfg, vis_mod.ViTConfig):
+        n_tok = (res // cfg.patch) ** 2 + 1
+        d, f = cfg.d_model, cfg.d_ff
+        per_layer = 2 * n_tok * (4 * d * d + 2 * d * f) + 4 * n_tok * n_tok * d
+        stem = 2 * n_tok * cfg.patch ** 2 * 3 * d
+        return cfg.n_layers * per_layer + stem
+    if isinstance(cfg, vis_mod.ConvNeXtConfig):
+        total, res_c = 0.0, res // 4
+        total += 2 * (res // 4) ** 2 * 4 * 4 * 3 * cfg.dims[0]
+        prev = cfg.dims[0]
+        for depth, dim in zip(cfg.depths, cfg.dims):
+            if dim != prev:
+                res_c //= 2
+                total += 2 * res_c ** 2 * 2 * 2 * prev * dim
+            total += depth * 2 * res_c ** 2 * (7 * 7 * dim + 8 * dim * dim)
+            prev = dim
+        return total
+    # ResNet bottlenecks
+    total = 2 * (res // 2) ** 2 * 7 * 7 * 3 * cfg.width
+    res_c = res // 4
+    c_in = cfg.width
+    for i, depth in enumerate(cfg.depths):
+        mid = cfg.width * 2 ** i
+        out = mid * 4
+        if i > 0:
+            res_c //= 2
+        total += 2 * res_c ** 2 * (c_in * mid + 9 * mid * mid + mid * out + c_in * out)
+        total += (depth - 1) * 2 * res_c ** 2 * (out * mid + 9 * mid * mid + mid * out)
+        c_in = out
+    return total
+
+
+def _vision_cell(arch: cfgbase.ArchSpec, shape: cfgbase.ShapeSpec) -> Cell:
+    cfg = arch.config
+    res, b = shape.img_res, shape.batch
+    if getattr(cfg, "img_res", res) != res:
+        cfg = dataclasses.replace(cfg, img_res=res)
+    init = {vis_mod.ViTConfig: vis_mod.vit_init,
+            vis_mod.ConvNeXtConfig: vis_mod.convnext_init,
+            vis_mod.ResNetConfig: vis_mod.resnet_init}[type(cfg)]
+    params_abs = _eval_params(lambda: init(jax.random.PRNGKey(0), cfg))
+    param_specs = shd.spec_tree(params_abs, shd.vision_param_rules())
+    fwd = _vision_flops_per_image(cfg, res) * b
+
+    if shape.kind == "train":
+        step = steps_mod.vision_train_step(cfg, _OPT)
+        batch_abs = {"images": Sds((b, res, res, 3), cfg.compute_dtype),
+                     "labels": Sds((b,), jnp.int32)}
+        args = (_state_abstract(params_abs), batch_abs)
+        specs = (_state_specs(param_specs), shd.vision_batch_specs())
+        flops, comment = 3.0 * fwd, "3x analytic forward MACs (fwd+bwd)"
+    else:
+        step = steps_mod.vision_serve_step(cfg)
+        batch_abs = {"images": Sds((b, res, res, 3), cfg.compute_dtype)}
+        args = (params_abs, batch_abs)
+        specs = (param_specs, {"images": shd.vision_batch_specs()["images"]})
+        flops, comment = fwd, "analytic forward MACs"
+    return Cell(arch.arch_id, shape.name, shape.kind, step, args, specs,
+                flops, comment)
+
+
+# --------------------------------------------------------------------------
+# diffusion cells
+# --------------------------------------------------------------------------
+
+
+def _diffusion_flops(cfg, res_latent: int, b: int) -> float:
+    if isinstance(cfg, diff_mod.MMDiTConfig):
+        n_img = (res_latent // cfg.patch) ** 2
+        n_tok = n_img + cfg.n_ctx_tokens
+        d, f = cfg.d_model, cfg.d_model * cfg.mlp_ratio
+        dbl = 2 * (2 * n_tok * (4 * d * d + 2 * d * f) / 2  # two streams share attn
+                   ) + 4 * n_tok * n_tok * d
+        # double block: per-stream qkv+o and mlp on its own tokens
+        dbl = 2 * (n_img + cfg.n_ctx_tokens) * (4 * d * d + 2 * d * f) \
+            + 4 * n_tok * n_tok * d
+        sgl = 2 * n_tok * (4 * d * d + 2 * d * f) + 4 * n_tok * n_tok * d
+        return b * (cfg.n_double_blocks * dbl + cfg.n_single_blocks * sgl)
+    # UNet analytic: res blocks (convs) + spatial transformers
+    # (self-attention is quadratic in tokens and dominates at high res).
+    def xformer_flops(tokens: int, d: int, depth: int) -> float:
+        per_tok = (4 * d * d          # self qkv + out
+                   + 2 * d * d + 2 * d * cfg.ctx_dim  # cross q/out + kv
+                   + 12 * d * d)      # GEGLU ff (d->8d, 4d->d)
+        quad = 4 * tokens * tokens * d + 4 * tokens * cfg.n_ctx_tokens * d
+        return depth * (2 * tokens * per_tok + quad)
+
+    total = 0.0
+    res_c = res_latent
+    chans = [cfg.ch * m for m in cfg.ch_mult]
+    c_prev = cfg.ch
+    for li, c in enumerate(chans):
+        for _ in range(cfg.n_res_blocks):
+            total += 2 * res_c ** 2 * 9 * (c_prev * c + c * c)
+            if li > 0:
+                total += xformer_flops(res_c ** 2, c, cfg.transformer_depth[li])
+            c_prev = c
+        if li < len(chans) - 1:
+            total += 2 * (res_c // 2) ** 2 * 9 * c * c
+            res_c //= 2
+    # mid: 2 res blocks + depth-10 transformer at the bottleneck res
+    total += 2 * 2 * res_c ** 2 * 9 * c_prev * c_prev
+    total += xformer_flops(res_c ** 2, c_prev, cfg.transformer_depth[-1])
+    # up path mirrors down with one extra res block per level and skip
+    # concat inputs (~2x the down-path conv cost)
+    return b * total * 2.4
+
+
+def _diffusion_cell(arch: cfgbase.ArchSpec, shape: cfgbase.ShapeSpec) -> Cell:
+    cfg = arch.config
+    vae = 8
+    lat = shape.img_res // vae
+    b = shape.batch
+    if cfg.latent_res != lat:
+        cfg = dataclasses.replace(cfg, latent_res=lat)
+    is_flux = isinstance(cfg, diff_mod.MMDiTConfig)
+    init = diff_mod.mmdit_init if is_flux else diff_mod.unet_init
+    params_abs = _eval_params(lambda: init(jax.random.PRNGKey(0), cfg))
+    param_specs = shd.spec_tree(params_abs, shd.diffusion_param_rules())
+    fwd = _diffusion_flops(cfg, lat, b)
+    ch = cfg.latent_ch
+
+    common = {"latents": Sds((b, lat, lat, ch), cfg.compute_dtype),
+              "ctx": Sds((b, cfg.n_ctx_tokens,
+                          cfg.d_ctx if is_flux else cfg.ctx_dim),
+                         cfg.compute_dtype)}
+    if is_flux:
+        extras = {"pooled": Sds((b, cfg.d_pooled), cfg.compute_dtype),
+                  "guidance": Sds((b,), jnp.float32)}
+    else:
+        extras = {"add_emb": Sds((b, cfg.d_add), cfg.compute_dtype)}
+
+    batch_spec = shd.diffusion_batch_specs(cfg)
+    if shape.kind == "train":
+        step = steps_mod.diffusion_train_step(cfg, _OPT)
+        batch_abs = {**common, **extras, "seed": Sds((), jnp.int32)}
+        spec = {k: batch_spec[k] for k in common | extras} | {"seed": P()}
+        args = (_state_abstract(params_abs), batch_abs)
+        specs = (_state_specs(param_specs), spec)
+        flops = 3.0 * fwd
+        comment = "3x analytic forward (fwd+bwd); one denoise step"
+    else:
+        step = steps_mod.diffusion_denoise_step(cfg)
+        t_extra = ({"t": Sds((b,), jnp.float32), "dt": Sds((b,), jnp.float32)}
+                   if is_flux else
+                   {"t": Sds((b,), jnp.float32), "t_prev": Sds((b,), jnp.float32)})
+        batch_abs = {**common, **extras, **t_extra}
+        spec = {k: batch_spec[k] for k in batch_abs}
+        args = (params_abs, batch_abs)
+        specs = (param_specs, spec)
+        flops = fwd
+        comment = (f"ONE denoise step; full sample = {shape.steps} steps "
+                   f"(sampler loop in benchmarks)")
+    return Cell(arch.arch_id, shape.name, shape.kind, step, args, specs,
+                flops, comment)
+
+
+# --------------------------------------------------------------------------
+# public API
+# --------------------------------------------------------------------------
+
+
+def build_cell(arch_id: str, shape_name: str) -> Cell:
+    arch = cfgbase.get_arch(arch_id)
+    if shape_name in arch.skip:
+        raise ValueError(f"{arch_id}/{shape_name}: {arch.skip[shape_name]}")
+    shape = arch.shapes[shape_name]
+    if arch.family == "lm":
+        return _lm_cell(arch, shape)
+    if arch.family == "vision":
+        return _vision_cell(arch, shape)
+    if arch.family == "diffusion":
+        return _diffusion_cell(arch, shape)
+    raise ValueError(arch.family)
+
+
+def input_specs(arch_id: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every input of the cell's step."""
+    return build_cell(arch_id, shape_name).abstract_args
+
+
+def iter_cells(include_skipped: bool = True):
+    """Yield (arch_id, shape_name, skip_reason|None) for all 40 cells."""
+    for arch_id in cfgbase.list_archs():
+        arch = cfgbase.get_arch(arch_id)
+        for shape_name in arch.shapes:
+            yield arch_id, shape_name, arch.skip.get(shape_name)

@@ -1,0 +1,362 @@
+"""Trip-count-aware cost analysis of optimised HLO text.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` counts each ``while``
+body ONCE, but every model here scans over stacked layer params (an
+88-layer transformer is a trip-count-88 while loop), so FLOPs, HBM
+traffic and collective bytes would be undercounted by 1-2 orders of
+magnitude.  This analyzer parses the post-SPMD HLO text, recovers loop
+trip counts from scan-generated conditions, and multiplies each
+computation's costs by its dynamic execution count.
+
+Model:
+  * FLOPs   — ``dot`` (2 x out_numel x contracted size) and
+    ``convolution`` (2 x out_numel x kernel_spatial x in_features/group)
+    wherever they appear (top level or inside fusion bodies).
+  * HBM bytes — fusion-IO model: for every *control-level* op of an
+    HBM-traffic class (fusion, dot, convolution, copy, slice ops, sort,
+    collectives, ...), operand bytes + result bytes.  Ops inside fusion
+    bodies are register traffic and not counted.
+  * collective bytes — operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (and -start forms).
+
+All numbers are PER DEVICE (the module is the SPMD-partitioned program
+of one device); multiply by chip count for global totals.
+
+Known approximations (documented in EXPERIMENTS.md):
+  * trip counts come from the largest integer constant in the loop
+    condition computation (exact for scan-lowered loops);
+  * conditional branches count as always-taken (upper bound);
+  * reducer/comparator computations (``to_apply=``) are ignored for
+    FLOPs (elementwise);
+  * the bytes model charges each fusion its full I/O — XLA may still
+    keep small operands in registers across fusions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "s32": 4, "u32": 4,
+    "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# Control-level ops whose operands/results move through HBM.  Bare
+# layout ops (reshape / transpose / broadcast / copy / pad / slice /
+# concatenate / iota) are EXCLUDED: on the TPU target XLA fuses them
+# into their consumers, so counting them (as the CPU-compiled module
+# materialises them) would overstate HBM traffic several-fold.  This is
+# the fusion-IO traffic model documented in EXPERIMENTS.md.
+_TRAFFIC_OPS = {
+    "fusion", "dot", "convolution", "sort", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "reduce", "reduce-window",
+    "select-and-scatter", "rng-bit-generator",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "reduce-scatter-start", "all-to-all-start", "collective-permute-start",
+    "custom-call", "cholesky", "triangular-solve",
+}
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of all array shapes mentioned in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> list[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _split_top(s: str) -> list[str]:
+    """Split on commas at paren/brace depth 0."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return out
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_shape: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    params: dict  # name -> shape string
+    ops: list
+    symbols: dict  # op name -> result shape string
+
+
+_OP_RE = re.compile(r"^\s+(?:ROOT )?%([\w\.\-]+) = (.*)$")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\((.*)\)\s*->\s*.*\{")
+
+
+def parse_hlo(text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _HDR_RE.match(line)
+        if hdr is not None:
+            params = {}
+            for entry in _split_top(hdr.group(3)):
+                if ":" in entry:
+                    pname, pshape = entry.split(":", 1)
+                    params[pname.strip()] = pshape.strip()
+            cur = Computation(hdr.group(2), bool(hdr.group(1)), params, [],
+                              dict(params))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m is None:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # result shape: up to the opcode token
+        om = re.match(r"((?:\((?:[^()]|\([^()]*\))*\))|(?:[\w\[\],]+(?:\{[^}]*\})*))\s+([\w\-]+)\((.*)$", rhs)
+        if om is None:
+            continue
+        rshape, opcode, rest = om.group(1), om.group(2), om.group(3)
+        # operands: match parens
+        depth, idx = 1, 0
+        for idx, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operands_str = rest[:idx]
+        attrs = rest[idx + 1:]
+        operands = [o for o in _split_top(operands_str)]
+        cur.ops.append(Op(name, rshape, opcode, operands, attrs, line))
+        cur.symbols[name] = rshape
+    return comps
+
+
+def _operand_shape(comp: Computation, operand: str) -> str:
+    """Resolve an operand reference to its shape string."""
+    # operands look like '%name' or 'f32[2,3] %name' (older dialect) or
+    # a literal constant.
+    tok = operand.strip()
+    if tok.startswith("%"):
+        return comp.symbols.get(tok[1:], "")
+    # maybe 'dtype[dims] %name'
+    m = re.match(r"(.+?)\s+%([\w\.\-]+)$", tok)
+    if m:
+        return m.group(1)
+    return ""
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    out_dims = _shape_dims(op.result_shape)
+    out_numel = 1
+    for d in out_dims:
+        out_numel *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    lhs_shape = _shape_dims(_operand_shape(comp, op.operands[0])) if op.operands else []
+    contracted = 1
+    if m and lhs_shape:
+        for d in m.group(1).split(","):
+            if d and int(d) < len(lhs_shape):
+                contracted *= lhs_shape[int(d)]
+    return 2.0 * out_numel * max(contracted, 1)
+
+
+def _conv_flops(comp: Computation, op: Op) -> float:
+    out_numel = 1
+    for d in _shape_dims(op.result_shape):
+        out_numel *= d
+    if len(op.operands) < 2:
+        return 0.0
+    k_shape = _shape_dims(_operand_shape(comp, op.operands[1]))
+    m = re.search(r"dim_labels=\S*_(\S+?)->", op.attrs)
+    kernel_in = 1
+    spatial = 1
+    if m and k_shape:
+        labels = m.group(1)
+        for dim, lab in enumerate(labels):
+            if dim >= len(k_shape):
+                continue
+            if lab == "i":
+                kernel_in = k_shape[dim]
+            elif lab not in ("o",):
+                spatial *= k_shape[dim]
+    else:
+        spatial = 1
+        kernel_in = 1
+    return 2.0 * out_numel * spatial * kernel_in
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    """Trip count of a scan-lowered while: the loop condition compares
+    the induction variable against a scalar constant.  We look for the
+    constant feeding the ROOT compare/fusion; falls back to the largest
+    scalar constant in the condition computation."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    root = next((op for op in reversed(cond.ops)
+                 if "ROOT" in op.line), None)
+    consts = {}
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", op.line)
+            if m:
+                consts[op.name] = int(m.group(1))
+    if root is not None:
+        for operand in root.operands:
+            nm = operand.lstrip("%")
+            if nm in consts:
+                return max(consts[nm], 1)
+    return max(consts.values(), default=1)
+
+
+def analyze(text: str, detail: bool = False) -> dict:
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # multiplicities: control comps execute ops; fused comps only
+    # contribute flops for dot/conv inside them.
+    control_mult: dict[str, float] = defaultdict(float)
+    fused_mult: dict[str, float] = defaultdict(float)
+    control_mult[entry.name] = 1.0
+
+    # breadth-first over the call graph
+    frontier = [entry.name]
+    visited_edges = set()
+    while frontier:
+        cname = frontier.pop()
+        comp = comps[cname]
+        mult = control_mult[cname]
+        for op in comp.ops:
+            if op.opcode == "while":
+                bm = re.search(r"body=%([\w\.\-]+)", op.attrs)
+                cm = re.search(r"condition=%([\w\.\-]+)", op.attrs)
+                if bm:
+                    trips = _trip_count(comps, cm.group(1)) if cm else 1
+                    key = (cname, bm.group(1))
+                    if key not in visited_edges:
+                        visited_edges.add(key)
+                        control_mult[bm.group(1)] += mult * trips
+                        frontier.append(bm.group(1))
+            elif op.opcode == "fusion":
+                fm = re.search(r"calls=%([\w\.\-]+)", op.attrs)
+                if fm:
+                    fused_mult[fm.group(1)] += mult
+            elif op.opcode in ("call", "async-start"):
+                tm = re.search(r"to_apply=%([\w\.\-]+)", op.attrs)
+                if tm:
+                    key = (cname, tm.group(1))
+                    if key not in visited_edges:
+                        visited_edges.add(key)
+                        control_mult[tm.group(1)] += mult
+                        frontier.append(tm.group(1))
+            elif op.opcode == "conditional":
+                for br in re.findall(r"%([\w\.\-]+)", op.attrs):
+                    if br in comps and (cname, br) not in visited_edges:
+                        visited_edges.add((cname, br))
+                        control_mult[br] += mult
+                        frontier.append(br)
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll = {k: {"bytes": 0.0, "count": 0.0} for k in COLLECTIVE_KINDS}
+    contributions: list[tuple[float, str]] = []
+    byte_contribs: list[tuple[float, str]] = []
+
+    for cname, comp in comps.items():
+        cm = control_mult.get(cname, 0.0)
+        fm = fused_mult.get(cname, 0.0)
+        for op in comp.ops:
+            # FLOPs: dot/conv anywhere, weighted by the enclosing
+            # computation's execution count.
+            w = cm + fm
+            if w > 0 and op.opcode == "dot":
+                f = w * _dot_flops(comp, op)
+                flops += f
+                if detail:
+                    contributions.append((f, f"x{w:.0f} {cname}: {op.line.strip()[:180]}"))
+            elif w > 0 and op.opcode == "convolution":
+                f = w * _conv_flops(comp, op)
+                flops += f
+                if detail:
+                    contributions.append((f, f"x{w:.0f} {cname}: {op.line.strip()[:180]}"))
+
+            if cm <= 0:
+                continue  # bytes/collectives only at control level
+            base = op.opcode.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVE_KINDS and not op.opcode.endswith("-done"):
+                b = sum(_shape_bytes(_operand_shape(comp, o))
+                        for o in op.operands)
+                coll[base]["bytes"] += cm * b
+                coll[base]["count"] += cm
+            if op.opcode in _TRAFFIC_OPS:
+                rb = _shape_bytes(op.result_shape)
+                ob = sum(_shape_bytes(_operand_shape(comp, o))
+                         for o in op.operands)
+                hbm_bytes += cm * (rb + ob)
+                if detail:
+                    byte_contribs.append(
+                        (cm * (rb + ob),
+                         f"x{cm:.0f} {cname}: {op.line.strip()[:170]}"))
+
+    total_coll = sum(v["bytes"] for v in coll.values())
+    out = {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collectives": {k: v for k, v in coll.items()},
+        "collective_bytes": total_coll,
+        "n_computations": len(comps),
+    }
+    if detail:
+        contributions.sort(reverse=True)
+        byte_contribs.sort(reverse=True)
+        out["top_flops"] = contributions[:25]
+        out["top_bytes"] = byte_contribs[:25]
+        out["multipliers"] = {k: v for k, v in sorted(
+            control_mult.items(), key=lambda kv: -kv[1])[:20]}
+    return out

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant)
+so importing this module touches no jax device state.  The dry-run
+launcher sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
+*before* any jax import; everything else (tests, benches) sees the
+real single CPU device.
+
+Axes:
+  * single pod:  (data=16, model=16)          — 256 chips (one v5e pod)
+  * multi-pod:   (pod=2, data=16, model=16)   — 512 chips across 2 pods
+
+The ``pod`` axis is the outermost (slowest) axis so inter-pod (DCN)
+collectives are confined to the pure-DP gradient reduction.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """1x1 mesh on the real local device (smoke tests, examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (per the assignment brief)
+CHIPS_PER_POD = 256

@@ -1,0 +1,329 @@
+"""CSP-style one-shot detector ladder (the paper's scaled-YOLOv4 proxy).
+
+The paper's Table II uses five scaled-YOLOv4 variants (Tiny-416,
+CSP-512, CSP-640, P5-896, P6-1280).  No pretrained weights exist in
+this offline container, so the ladder is reproduced *structurally*: a
+CSP backbone + FPN neck + anchor-free dense head, with width/depth
+multipliers and input sizes chosen to match the paper's resource
+ordering.  The reproduction benchmark uses the gav accuracy tables for
+detection quality (see DESIGN.md section 7); this model family proves
+the end-to-end substrate (init/train/infer) and feeds the roofline
+cells for the OmniSense serving pipeline.
+
+Head: anchor-free (YOLOv8-style): per cell predicts (dx, dy, dw, dh,
+objectness, class logits) at 3 scales (strides 8/16/32; P6 adds 64).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import BATCH, constrain
+from repro.models import layers as L
+
+Array = jax.Array
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectorConfig:
+    name: str
+    input_size: int  # square input resolution
+    width_mult: float = 1.0
+    depth_mult: float = 1.0
+    n_classes: int = 80
+    p6: bool = False  # extra stride-64 stage (YOLOv4-P6)
+    base_width: int = 64
+    base_depth: int = 3
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+
+    @property
+    def policy(self) -> L.DtypePolicy:
+        return L.DtypePolicy(self.param_dtype, self.compute_dtype)
+
+    def width(self, mult: int) -> int:
+        return max(16, int(self.base_width * self.width_mult * mult) // 16 * 16)
+
+    @property
+    def depth(self) -> int:
+        return max(1, round(self.base_depth * self.depth_mult))
+
+    @property
+    def strides(self) -> tuple[int, ...]:
+        return (8, 16, 32, 64) if self.p6 else (8, 16, 32)
+
+
+# paper Table II ladder ------------------------------------------------------
+
+PAPER_LADDER = (
+    DetectorConfig("yolo-tiny-416", 416, width_mult=0.25, depth_mult=0.34),
+    DetectorConfig("yolo-csp-512", 512, width_mult=0.50, depth_mult=0.50),
+    DetectorConfig("yolo-csp-640", 640, width_mult=0.50, depth_mult=0.50),
+    DetectorConfig("yolo-p5-896", 896, width_mult=1.00, depth_mult=0.67),
+    DetectorConfig("yolo-p6-1280", 1280, width_mult=1.00, depth_mult=1.00, p6=True),
+)
+
+
+def _conv_bn_init(rng, k, c_in, c_out, dt):
+    return {"conv": L.init_conv(rng, k, k, c_in, c_out, bias=False, dtype=dt),
+            "gn": L.init_groupnorm(c_out, dtype=dt)}
+
+
+def _conv_bn(p, x, pol, stride=1):
+    x = L.conv2d(p["conv"], x, stride=stride, policy=pol)
+    return constrain(L.mish(L.groupnorm(p["gn"], x)),
+                     BATCH, None, None, "model")
+
+
+def _csp_block_init(rng, c, n, dt):
+    r = jax.random.split(rng, 2 * n + 3)
+    half = c // 2
+    return {
+        "split1": _conv_bn_init(r[0], 1, c, half, dt),
+        "split2": _conv_bn_init(r[1], 1, c, half, dt),
+        "bottlenecks": [
+            {"c1": _conv_bn_init(r[2 + 2 * i], 1, half, half, dt),
+             "c2": _conv_bn_init(r[3 + 2 * i], 3, half, half, dt)}
+            for i in range(n)
+        ],
+        "fuse": _conv_bn_init(r[2 * n + 2], 1, c, c, dt),
+    }
+
+
+def _csp_block(p, x, pol):
+    a = _conv_bn(p["split1"], x, pol)
+    b = _conv_bn(p["split2"], x, pol)
+    for bp in p["bottlenecks"]:
+        b = b + _conv_bn(bp["c2"], _conv_bn(bp["c1"], b, pol), pol)
+    return _conv_bn(p["fuse"], jnp.concatenate([a, b], axis=-1), pol)
+
+
+def init_params(rng, cfg: DetectorConfig) -> Params:
+    dt = cfg.param_dtype
+    rngs = iter(jax.random.split(rng, 64))
+    nxt = lambda: next(rngs)
+    w = cfg.width
+    n_scales = len(cfg.strides)
+    chans = [w(2 ** (i + 1)) for i in range(n_scales)]  # e.g. 128/256/512(/1024)
+
+    p: Params = {
+        "stem": _conv_bn_init(nxt(), 3, 3, w(1), dt),
+        "stem2": _conv_bn_init(nxt(), 3, w(1), chans[0] // 2, dt),
+        "stages": [], "laterals": [], "fpn": [], "heads": [],
+    }
+    c_prev = chans[0] // 2
+    for c in chans:
+        p["stages"].append({
+            "down": _conv_bn_init(nxt(), 3, c_prev, c, dt),
+            "csp": _csp_block_init(nxt(), c, cfg.depth, dt),
+        })
+        c_prev = c
+    # FPN top-down: lateral 1x1 on upper, merge with lower
+    for i in range(n_scales - 1):
+        c_hi, c_lo = chans[i + 1], chans[i]
+        p["laterals"].append(_conv_bn_init(nxt(), 1, c_hi, c_lo, dt))
+        p["fpn"].append(_csp_block_init(nxt(), c_lo, max(1, cfg.depth // 2), dt))
+    # heads (one per scale)
+    out_d = 5 + cfg.n_classes
+    for c in chans:
+        p["heads"].append({
+            "conv": _conv_bn_init(nxt(), 3, c, c, dt),
+            "out": L.init_conv(nxt(), 1, 1, c, out_d, dtype=dt),
+        })
+    return p
+
+
+def apply(params: Params, images: Array, cfg: DetectorConfig) -> list[Array]:
+    """images: (B, S, S, 3) -> list of per-scale raw heads
+    (B, S/stride, S/stride, 5 + n_classes), finest first."""
+    pol = cfg.policy
+    x = _conv_bn(params["stem"], images, pol, stride=2)
+    x = _conv_bn(params["stem2"], x, pol, stride=2)
+    feats = []
+    for st in params["stages"]:
+        x = _conv_bn(st["down"], x, pol, stride=2)
+        x = _csp_block(st["csp"], x, pol)
+        feats.append(x)
+    # top-down FPN
+    for i in reversed(range(len(feats) - 1)):
+        up = L.upsample_nearest(
+            _conv_bn(params["laterals"][i], feats[i + 1], pol), 2)
+        feats[i] = _csp_block(params["fpn"][i],
+                              feats[i] + up, pol)
+    outs = []
+    for f, hp in zip(feats, params["heads"]):
+        h = _conv_bn(hp["conv"], f, pol)
+        outs.append(L.conv2d(hp["out"], h, policy=pol).astype(jnp.float32))
+    return outs
+
+
+# --------------------------------------------------------------------------
+# decode + loss
+# --------------------------------------------------------------------------
+
+
+def decode(outs: list[Array], cfg: DetectorConfig,
+           conf_threshold: float = 0.3, max_det: int = 128):
+    """Raw heads -> (boxes_xyxy (B, N, 4) in pixels, scores (B, N),
+    classes (B, N)); N = max_det, padded with score 0."""
+    all_boxes, all_scores, all_cls = [], [], []
+    for out, stride in zip(outs, cfg.strides):
+        b, gh, gw, _ = out.shape
+        xy = jax.nn.sigmoid(out[..., 0:2])  # offset within cell
+        wh = jnp.exp(jnp.clip(out[..., 2:4], -6, 6)) * stride
+        obj = jax.nn.sigmoid(out[..., 4])
+        cls_logit = out[..., 5:]
+        gy, gx = jnp.meshgrid(jnp.arange(gh), jnp.arange(gw), indexing="ij")
+        cx = (gx[None] + xy[..., 0]) * stride
+        cy = (gy[None] + xy[..., 1]) * stride
+        boxes = jnp.stack([cx - wh[..., 0] / 2, cy - wh[..., 1] / 2,
+                           cx + wh[..., 0] / 2, cy + wh[..., 1] / 2], axis=-1)
+        cls_prob = jax.nn.softmax(cls_logit, axis=-1)
+        score = obj * jnp.max(cls_prob, axis=-1)
+        cls_id = jnp.argmax(cls_logit, axis=-1)
+        all_boxes.append(boxes.reshape(b, -1, 4))
+        all_scores.append(score.reshape(b, -1))
+        all_cls.append(cls_id.reshape(b, -1))
+    boxes = jnp.concatenate(all_boxes, axis=1)
+    scores = jnp.concatenate(all_scores, axis=1)
+    cls = jnp.concatenate(all_cls, axis=1)
+    scores = jnp.where(scores >= conf_threshold, scores, 0.0)
+    top_scores, idx = jax.lax.top_k(scores, min(max_det, scores.shape[1]))
+    top_boxes = jnp.take_along_axis(boxes, idx[..., None], axis=1)
+    top_cls = jnp.take_along_axis(cls, idx, axis=1)
+    return top_boxes, top_scores, top_cls
+
+
+def detection_loss(params: Params, batch: dict, cfg: DetectorConfig) -> Array:
+    """Dense detection loss against per-scale target maps.
+
+    ``batch``: images (B,S,S,3) and, per scale s, targets
+    (B, S/stride, S/stride, 5 + n_classes) with [dx, dy, log w, log h,
+    obj, one-hot class] — produced by ``repro.data.synthetic.rasterize``.
+    """
+    outs = apply(params, batch["images"], cfg)
+    total = 0.0
+    for i, out in enumerate(outs):
+        tgt = batch[f"targets_{i}"]
+        obj_t = tgt[..., 4]
+        obj_logit = out[..., 4]
+        obj_loss = jnp.mean(
+            jnp.maximum(obj_logit, 0) - obj_logit * obj_t
+            + jnp.log1p(jnp.exp(-jnp.abs(obj_logit))))
+        pos = obj_t > 0.5
+        box_err = jnp.abs(out[..., 0:4] - tgt[..., 0:4]).sum(-1)
+        box_loss = jnp.sum(jnp.where(pos, box_err, 0.0)) / jnp.maximum(
+            jnp.sum(pos), 1.0)
+        cls_ll = jax.nn.log_softmax(out[..., 5:], axis=-1)
+        cls_loss = -jnp.sum(jnp.where(pos[..., None], tgt[..., 5:] * cls_ll, 0.0)) \
+            / jnp.maximum(jnp.sum(pos), 1.0)
+        total = total + obj_loss + 0.5 * box_loss + 0.5 * cls_loss
+    return total / len(outs)
+
+
+def flops_per_image(cfg: DetectorConfig) -> float:
+    """Analytic MAC estimate (x2 = FLOPs) used by the latency profiles."""
+    s = cfg.input_size
+    total = 0.0
+    # stem
+    total += (s / 2) ** 2 * 9 * 3 * cfg.width(1)
+    total += (s / 4) ** 2 * 9 * cfg.width(1) * cfg.width(2) // 2
+    res = s / 4
+    c_prev = cfg.width(2) // 2
+    for i in range(len(cfg.strides)):
+        c = cfg.width(2 ** (i + 1))
+        res /= 2
+        total += res ** 2 * 9 * c_prev * c  # downsample
+        half = c // 2
+        total += res ** 2 * (2 * c * half + c * c)  # csp split+fuse
+        total += cfg.depth * res ** 2 * (half * half + 9 * half * half)
+        c_prev = c
+    return float(total * 2)
+
+
+# --------------------------------------------------------------------------
+# detection heads on the assigned vision backbones (beyond-paper ladder)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BackboneDetectorConfig:
+    """Anchor-free detection head mounted on a classification backbone.
+
+    Widens the paper's Table II ladder with the assigned vision
+    architectures: the backbone's stride-8/16/32 pyramid levels feed
+    the same per-scale heads as the CSP detector, so the OmniSense
+    allocator sees extra (accuracy, latency) rungs without new
+    training infrastructure (DESIGN.md section 2).
+    """
+
+    name: str
+    backbone_cfg: Any  # vision.ResNetConfig | vision.ConvNeXtConfig
+    input_size: int
+    n_classes: int = 80
+    head_width: int = 128
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+
+    @property
+    def policy(self) -> L.DtypePolicy:
+        return L.DtypePolicy(self.param_dtype, self.compute_dtype)
+
+    @property
+    def strides(self) -> tuple[int, ...]:
+        return (8, 16, 32)
+
+
+def _backbone_feature_fn(cfg: BackboneDetectorConfig):
+    from repro.models import vision as V
+
+    if isinstance(cfg.backbone_cfg, V.ResNetConfig):
+        return V.resnet_init, V.resnet_features
+    if isinstance(cfg.backbone_cfg, V.ConvNeXtConfig):
+        return V.convnext_init, V.convnext_features
+    raise TypeError(type(cfg.backbone_cfg))
+
+
+def backbone_detector_init(rng, cfg: BackboneDetectorConfig) -> Params:
+    init_fn, _ = _backbone_feature_fn(cfg)
+    r = jax.random.split(rng, 8)
+    backbone = init_fn(r[0], cfg.backbone_cfg)
+    from repro.models import vision as V
+
+    if isinstance(cfg.backbone_cfg, V.ResNetConfig):
+        chans = [cfg.backbone_cfg.width * (2 ** i) * 4 for i in (1, 2, 3)]
+    else:
+        chans = list(cfg.backbone_cfg.dims[1:])
+    dt = cfg.param_dtype
+    heads = []
+    out_d = 5 + cfg.n_classes
+    for i, c in enumerate(chans):
+        heads.append({
+            "lateral": _conv_bn_init(r[1 + i], 1, c, cfg.head_width, dt),
+            "conv": _conv_bn_init(r[4 + i], 3, cfg.head_width,
+                                  cfg.head_width, dt),
+            "out": L.init_conv(r[7], 1, 1, cfg.head_width, out_d, dtype=dt),
+        })
+    return {"backbone": backbone, "heads": heads}
+
+
+def backbone_detector_apply(params: Params, images: Array,
+                            cfg: BackboneDetectorConfig) -> list[Array]:
+    """images (B, S, S, 3) -> per-scale raw heads at strides 8/16/32."""
+    _, feat_fn = _backbone_feature_fn(cfg)
+    pol = cfg.policy
+    feats, _ = feat_fn(params["backbone"], images, cfg.backbone_cfg,
+                       train=False)
+    outs = []
+    for f, hp in zip(feats[1:], params["heads"]):  # strides 8/16/32
+        h = _conv_bn(hp["lateral"], f, pol)
+        h = _conv_bn(hp["conv"], h, pol)
+        outs.append(L.conv2d(hp["out"], h, policy=pol).astype(jnp.float32))
+    return outs

@@ -1,0 +1,539 @@
+"""Diffusion backbones: MMDiT (flux-dev) and UNet (SDXL).
+
+Both operate on VAE latents (the VAE itself is out of scope for every
+assigned shape — latent_res is given directly).  Text conditioning is a
+stub per the assignment: ``input_specs()`` supplies precomputed context
+token embeddings and pooled vectors.
+
+flux-dev (MMDiT, rectified flow):
+  * 2x2 patchify of the (B, 128, 128, 16) latent -> 4096 image tokens,
+    d_model 3072, 24 heads;
+  * 19 *double* blocks: separate img/txt streams, AdaLN-Zero modulation
+    from (timestep, guidance, pooled) embedding, **joint** attention
+    over the concatenated token set, per-stream MLPs;
+  * 38 *single* blocks: fused stream, DiT-style parallel attn+MLP;
+  * axial 2D sin-cos positions on image tokens (simplification of
+    flux's 2D RoPE — same asymptotics, documented in DESIGN.md);
+  * v-prediction / rectified-flow loss and Euler sampling step.
+
+unet-sdxl (epsilon-prediction, DDIM sampling):
+  * channels 320 x (1, 2, 4), 2 res-blocks per level,
+    transformer_depth (1, 2, 10) with level 0 attention-free
+    (DownBlock2D semantics, as in the reference SDXL config),
+    cross-attention to 2048-d context, GroupNorm(32), SiLU;
+  * time + pooled "add" embeddings fused into the res-block shift/scale.
+
+Repeated homogeneous blocks (flux double/single stacks, the depth-10
+SDXL transformer) are scanned over stacked params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import BATCH, constrain
+from repro.models import layers as L
+
+Array = jax.Array
+Params = dict
+
+
+# ==========================================================================
+# shared helpers
+# ==========================================================================
+
+
+def _stack(plist):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *plist)
+
+
+def _mha(q, k, v, n_heads, policy):
+    """Full attention, (B, Sq, D) x (B, Skv, D)."""
+    b, sq, d = q.shape
+    dh = d // n_heads
+    qh = q.reshape(b, sq, n_heads, dh)
+    kh = k.reshape(b, k.shape[1], n_heads, dh)
+    vh = v.reshape(b, v.shape[1], n_heads, dh)
+    att = jnp.einsum("bqhd,bkhd->bhqk", qh.astype(jnp.float32),
+                     kh.astype(jnp.float32)) * (dh ** -0.5)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", att, vh.astype(jnp.float32))
+    return out.astype(policy.compute_dtype).reshape(b, sq, d)
+
+
+def axial_2d_sincos(h: int, w: int, d: int) -> Array:
+    """(h*w, d) fixed 2D sin-cos position embedding."""
+    def one_axis(n, dim):
+        pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+        freq = jnp.exp(-math.log(10000.0) * jnp.arange(dim // 2, dtype=jnp.float32)
+                       / (dim // 2))
+        ang = pos * freq[None]
+        return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)  # (n, dim)
+
+    dh = d // 2
+    em_h = one_axis(h, dh)  # (h, dh)
+    em_w = one_axis(w, d - dh)
+    grid = jnp.concatenate(
+        [jnp.repeat(em_h, w, axis=0), jnp.tile(em_w, (h, 1))], axis=-1)
+    return grid  # (h*w, d)
+
+
+# ==========================================================================
+# MMDiT / flux-dev
+# ==========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class MMDiTConfig:
+    name: str
+    latent_res: int
+    latent_ch: int = 16
+    patch: int = 2
+    d_model: int = 3072
+    n_heads: int = 24
+    n_double_blocks: int = 19
+    n_single_blocks: int = 38
+    d_ctx: int = 4096
+    n_ctx_tokens: int = 512
+    d_pooled: int = 768
+    mlp_ratio: int = 4
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    remat: bool = True
+
+    @property
+    def policy(self) -> L.DtypePolicy:
+        return L.DtypePolicy(self.param_dtype, self.compute_dtype)
+
+    @property
+    def n_params(self) -> int:
+        d = self.d_model
+        f = d * self.mlp_ratio
+        dbl = 2 * (4 * d * d + 2 * d * f + 6 * d * d)  # qkv+o, mlp, 6 mods / stream
+        sgl = 4 * d * d + 2 * d * f + 3 * d * d
+        patch_d = self.patch * self.patch * self.latent_ch
+        return (self.n_double_blocks * dbl + self.n_single_blocks * sgl
+                + patch_d * d * 2 + self.d_ctx * d + self.d_pooled * d + 256 * d)
+
+
+def _adaln_init(rng, d: int, n_mods: int, dt) -> Params:
+    return {"w": jnp.zeros((d, n_mods * d), dt), "b": jnp.zeros((n_mods * d,), dt)}
+
+
+def mmdit_init(rng, cfg: MMDiTConfig) -> Params:
+    dt = cfg.param_dtype
+    d = cfg.d_model
+    f = d * cfg.mlp_ratio
+    rngs = jax.random.split(rng, 16)
+    s = (1.0 / d) ** 0.5
+    patch_d = cfg.patch * cfg.patch * cfg.latent_ch
+
+    def su(key, shape, scale):
+        return jax.random.uniform(key, shape, jnp.float32, -scale, scale).astype(dt)
+
+    def dbl_block(key):
+        r = jax.random.split(key, 10)
+        def stream(off):
+            return {
+                "mod": _adaln_init(r[off], d, 6, dt),
+                "wqkv": su(r[off + 1], (d, 3 * d), s),
+                "wo": su(r[off + 2], (d, d), s),
+                "w1": su(r[off + 3], (d, f), s),
+                "w2": su(r[off + 4], (f, d), (1.0 / f) ** 0.5),
+            }
+        return {"img": stream(0), "txt": stream(5)}
+
+    def sgl_block(key):
+        r = jax.random.split(key, 5)
+        return {
+            "mod": _adaln_init(r[0], d, 3, dt),
+            "wqkv": su(r[1], (d, 3 * d), s),
+            "w1": su(r[2], (d, f), s),
+            "wo2": su(r[3], (d + f, d), (1.0 / (d + f)) ** 0.5),
+        }
+
+    dbl_keys = jax.random.split(rngs[0], cfg.n_double_blocks)
+    sgl_keys = jax.random.split(rngs[1], cfg.n_single_blocks)
+    return {
+        "img_in": L.init_dense(rngs[2], patch_d, d, dtype=dt),
+        "txt_in": L.init_dense(rngs[3], cfg.d_ctx, d, dtype=dt),
+        "time_mlp1": L.init_dense(rngs[4], 256, d, dtype=dt),
+        "time_mlp2": L.init_dense(rngs[5], d, d, dtype=dt),
+        "pooled_in": L.init_dense(rngs[6], cfg.d_pooled, d, dtype=dt),
+        "guidance_mlp": L.init_dense(rngs[7], 256, d, dtype=dt),
+        "double": _stack([dbl_block(k) for k in dbl_keys]),
+        "single": _stack([sgl_block(k) for k in sgl_keys]),
+        "final_mod": _adaln_init(rngs[8], d, 2, dt),
+        "img_out": L.init_dense(rngs[9], d, patch_d, dtype=dt),
+    }
+
+
+def _modulate(x, shift, scale):
+    return x * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+
+def mmdit_apply(params: Params, latents: Array, t: Array, ctx: Array,
+                pooled: Array, guidance: Array, cfg: MMDiTConfig) -> Array:
+    """Predict the rectified-flow velocity field.
+
+    latents: (B, R, R, C); t/guidance: (B,); ctx: (B, T, d_ctx);
+    pooled: (B, d_pooled).  Returns (B, R, R, C).
+    """
+    pol = cfg.policy
+    b, r, _, c = latents.shape
+    p = cfg.patch
+    hp = r // p
+    d = cfg.d_model
+
+    # patchify
+    x = latents.reshape(b, hp, p, hp, p, c).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(b, hp * hp, p * p * c)
+    img = L.dense(params["img_in"], x, pol)
+    img = constrain(img + axial_2d_sincos(hp, hp, d)[None].astype(pol.compute_dtype),
+                    BATCH, None, None)
+    txt = constrain(L.dense(params["txt_in"], ctx, pol), BATCH, None, None)
+
+    # modulation vector
+    temb = L.timestep_embedding(t * 1000.0, 256)
+    vec = L.dense(params["time_mlp2"],
+                  L.silu(L.dense(params["time_mlp1"], temb.astype(pol.compute_dtype), pol)), pol)
+    vec = vec + L.dense(params["pooled_in"], pooled.astype(pol.compute_dtype), pol)
+    gemb = L.timestep_embedding(guidance * 1000.0, 256)
+    vec = vec + L.dense(params["guidance_mlp"], gemb.astype(pol.compute_dtype), pol)
+    vec = L.silu(vec)
+
+    n_img, n_txt = img.shape[1], txt.shape[1]
+
+    def double_block(carry, lp):
+        img, txt = carry
+
+        def stream_qkv(sp, x):
+            mods = L.dense(sp["mod"], vec, pol).reshape(b, 6, d)
+            h = _modulate(L.rmsnorm({"scale": jnp.ones((d,), x.dtype)}, x),
+                          mods[:, 0], mods[:, 1])
+            qkv = L.dense({"w": sp["wqkv"]}, h, pol)
+            return qkv, mods
+
+        qkv_i, mod_i = stream_qkv(lp["img"], img)
+        qkv_t, mod_t = stream_qkv(lp["txt"], txt)
+        qkv = jnp.concatenate([qkv_t, qkv_i], axis=1)  # txt first (flux order)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        att = _mha(q, k, v, cfg.n_heads, pol)
+        att_t, att_i = att[:, :n_txt], att[:, n_txt:]
+
+        def stream_out(sp, x, att, mods):
+            x = x + mods[:, 2][:, None] * L.dense({"w": sp["wo"]}, att, pol)
+            h = _modulate(L.rmsnorm({"scale": jnp.ones((d,), x.dtype)}, x),
+                          mods[:, 3], mods[:, 4])
+            h = constrain(L.gelu(L.dense({"w": sp["w1"]}, h, pol)),
+                          BATCH, None, "model")
+            h = L.dense({"w": sp["w2"]}, h, pol)
+            return constrain(x + mods[:, 5][:, None] * h, BATCH, None, None)
+
+        img = stream_out(lp["img"], img, att_i, mod_i)
+        txt = stream_out(lp["txt"], txt, att_t, mod_t)
+        return (img, txt), None
+
+    def single_block(x, lp):
+        mods = L.dense(lp["mod"], vec, pol).reshape(b, 3, d)
+        h = _modulate(L.rmsnorm({"scale": jnp.ones((d,), x.dtype)}, x),
+                      mods[:, 0], mods[:, 1])
+        qkv = L.dense({"w": lp["wqkv"]}, h, pol)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        att = _mha(q, k, v, cfg.n_heads, pol)
+        mlp_h = constrain(L.gelu(L.dense({"w": lp["w1"]}, h, pol)),
+                          BATCH, None, "model")
+        fused = jnp.concatenate([att, mlp_h], axis=-1)
+        out = x + mods[:, 2][:, None] * L.dense({"w": lp["wo2"]}, fused, pol)
+        return constrain(out, BATCH, None, None), None
+
+    dbl = jax.checkpoint(double_block, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else double_block
+    sgl = jax.checkpoint(single_block, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else single_block
+
+    (img, txt), _ = jax.lax.scan(dbl, (img, txt), params["double"])
+    fused = jnp.concatenate([txt, img], axis=1)
+    fused, _ = jax.lax.scan(sgl, fused, params["single"])
+    img = fused[:, n_txt:]
+
+    mods = L.dense(params["final_mod"], vec, pol).reshape(b, 2, d)
+    img = _modulate(L.rmsnorm({"scale": jnp.ones((d,), img.dtype)}, img),
+                    mods[:, 0], mods[:, 1])
+    out = L.dense(params["img_out"], img, pol)
+    out = out.reshape(b, hp, hp, p, p, c).transpose(0, 1, 3, 2, 4, 5)
+    return out.reshape(b, r, r, c).astype(jnp.float32)
+
+
+def flux_rf_loss(params: Params, batch: dict, cfg: MMDiTConfig, rng) -> Array:
+    """Rectified-flow training loss: x_t = (1-t) x0 + t eps, v* = eps - x0."""
+    x0 = batch["latents"]
+    r1, r2 = jax.random.split(rng)
+    b = x0.shape[0]
+    t = jax.random.uniform(r1, (b,))
+    eps = jax.random.normal(r2, x0.shape, x0.dtype)
+    xt = (1.0 - t[:, None, None, None]) * x0 + t[:, None, None, None] * eps
+    v = mmdit_apply(params, xt, t, batch["ctx"], batch["pooled"],
+                    batch.get("guidance", jnp.zeros((b,))), cfg)
+    return jnp.mean((v - (eps - x0).astype(jnp.float32)) ** 2)
+
+
+def flux_euler_step(params: Params, xt: Array, t: Array, dt: Array, ctx: Array,
+                    pooled: Array, guidance: Array, cfg: MMDiTConfig) -> Array:
+    """One Euler step of the rectified-flow ODE (a ``steps``-step sampler
+    calls this ``steps`` times)."""
+    v = mmdit_apply(params, xt, t, ctx, pooled, guidance, cfg)
+    return xt - dt[:, None, None, None] * v.astype(xt.dtype)
+
+
+# ==========================================================================
+# UNet / SDXL
+# ==========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class UNetConfig:
+    name: str
+    latent_res: int
+    latent_ch: int = 4
+    ch: int = 320
+    ch_mult: Sequence[int] = (1, 2, 4)
+    n_res_blocks: int = 2
+    transformer_depth: Sequence[int] = (1, 2, 10)
+    ctx_dim: int = 2048
+    n_ctx_tokens: int = 77
+    d_add: int = 2816  # pooled text (1280) + 6 x 256 size conds
+    head_dim: int = 64
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    remat: bool = True
+
+    @property
+    def policy(self) -> L.DtypePolicy:
+        return L.DtypePolicy(self.param_dtype, self.compute_dtype)
+
+    @property
+    def time_dim(self) -> int:
+        return self.ch * 4
+
+    @property
+    def n_params(self) -> int:
+        # close-form count is messy; computed from the real tree at init.
+        return -1
+
+
+def _resblock_init(rng, c_in, c_out, time_dim, dt):
+    r = jax.random.split(rng, 4)
+    p = {
+        "gn1": L.init_groupnorm(c_in, dtype=dt),
+        "conv1": L.init_conv(r[0], 3, 3, c_in, c_out, dtype=dt),
+        "emb": L.init_dense(r[1], time_dim, 2 * c_out, dtype=dt),
+        "gn2": L.init_groupnorm(c_out, dtype=dt),
+        "conv2": L.init_conv(r[2], 3, 3, c_out, c_out, dtype=dt),
+    }
+    if c_in != c_out:
+        p["skip"] = L.init_conv(r[3], 1, 1, c_in, c_out, dtype=dt)
+    return p
+
+
+def _resblock_apply(p, x, emb, pol):
+    h = L.conv2d(p["conv1"], L.silu(L.groupnorm(p["gn1"], x)), policy=pol)
+    scale_shift = L.dense(p["emb"], L.silu(emb), pol)[:, None, None, :]
+    scale, shift = jnp.split(scale_shift, 2, axis=-1)
+    h = L.groupnorm(p["gn2"], h) * (1 + scale) + shift
+    h = L.conv2d(p["conv2"], L.silu(h), policy=pol)
+    skip = L.conv2d(p["skip"], x, policy=pol) if "skip" in p else x
+    return constrain(skip + h, BATCH, None, None, "model")
+
+
+def _xformer_block_init(rng, d, ctx_dim, dt):
+    r = jax.random.split(rng, 8)
+    s = (1.0 / d) ** 0.5
+    return {
+        "ln1": L.init_layernorm(d, dt),
+        "wq1": {"w": jax.random.uniform(r[0], (d, d), jnp.float32, -s, s).astype(dt)},
+        "wkv1": {"w": jax.random.uniform(r[1], (d, 2 * d), jnp.float32, -s, s).astype(dt)},
+        "wo1": {"w": jax.random.uniform(r[2], (d, d), jnp.float32, -s, s).astype(dt)},
+        "ln2": L.init_layernorm(d, dt),
+        "wq2": {"w": jax.random.uniform(r[3], (d, d), jnp.float32, -s, s).astype(dt)},
+        "wkv2": {"w": jax.random.uniform(r[4], (ctx_dim, 2 * d), jnp.float32,
+                                         -(1.0 / ctx_dim) ** 0.5,
+                                         (1.0 / ctx_dim) ** 0.5).astype(dt)},
+        "wo2": {"w": jax.random.uniform(r[5], (d, d), jnp.float32, -s, s).astype(dt)},
+        "ln3": L.init_layernorm(d, dt),
+        "ff1": L.init_dense(r[6], d, 8 * d, dtype=dt),  # GEGLU: 2 x 4d
+        "ff2": L.init_dense(r[7], 4 * d, d, dtype=dt),
+    }
+
+
+def _xformer_block_apply(p, x, ctx, n_heads, pol):
+    h = L.layernorm(p["ln1"], x)
+    q = L.dense(p["wq1"], h, pol)
+    k, v = jnp.split(L.dense(p["wkv1"], h, pol), 2, axis=-1)
+    x = x + L.dense(p["wo1"], _mha(q, k, v, n_heads, pol), pol)
+    h = L.layernorm(p["ln2"], x)
+    q = L.dense(p["wq2"], h, pol)
+    k, v = jnp.split(L.dense(p["wkv2"], ctx, pol), 2, axis=-1)
+    x = x + L.dense(p["wo2"], _mha(q, k, v, n_heads, pol), pol)
+    h = L.layernorm(p["ln3"], x)
+    a, g = jnp.split(L.dense(p["ff1"], h, pol), 2, axis=-1)
+    return x + L.dense(p["ff2"], a * L.gelu(g), pol)
+
+
+def _spatial_xformer_init(rng, c, ctx_dim, depth, dt):
+    r = jax.random.split(rng, depth + 2)
+    return {
+        "gn": L.init_groupnorm(c, dtype=dt),
+        "proj_in": L.init_dense(r[0], c, c, dtype=dt),
+        "blocks": _stack([_xformer_block_init(r[1 + i], c, ctx_dim, dt)
+                          for i in range(depth)]),
+        "proj_out": L.init_dense(r[depth + 1], c, c, dtype=dt),
+    }
+
+
+def _spatial_xformer_apply(p, x, ctx, cfg, pol):
+    b, h, w, c = x.shape
+    n_heads = c // cfg.head_dim
+    res = x
+    y = L.groupnorm(p["gn"], x).reshape(b, h * w, c)
+    y = L.dense(p["proj_in"], y, pol)
+
+    def body(y, bp):
+        return _xformer_block_apply(bp, y, ctx, n_heads, pol), None
+
+    body_ = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else body
+    y, _ = jax.lax.scan(body_, y, p["blocks"])
+    y = L.dense(p["proj_out"], y, pol)
+    return res + y.reshape(b, h, w, c)
+
+
+def unet_init(rng, cfg: UNetConfig) -> Params:
+    dt = cfg.param_dtype
+    td = cfg.time_dim
+    rngs = iter(jax.random.split(rng, 128))
+    nxt = lambda: next(rngs)
+
+    chans = [cfg.ch * m for m in cfg.ch_mult]
+    p: Params = {
+        "conv_in": L.init_conv(nxt(), 3, 3, cfg.latent_ch, cfg.ch, dtype=dt),
+        "time1": L.init_dense(nxt(), cfg.ch, td, dtype=dt),
+        "time2": L.init_dense(nxt(), td, td, dtype=dt),
+        "add1": L.init_dense(nxt(), cfg.d_add, td, dtype=dt),
+        "add2": L.init_dense(nxt(), td, td, dtype=dt),
+        "down": [], "up": [],
+    }
+    # --- down path ---
+    c_prev = cfg.ch
+    skips = [cfg.ch]
+    for li, c in enumerate(chans):
+        level = {"res": [], "attn": [], "down": None}
+        for _ in range(cfg.n_res_blocks):
+            level["res"].append(_resblock_init(nxt(), c_prev, c, td, dt))
+            level["attn"].append(
+                _spatial_xformer_init(nxt(), c, cfg.ctx_dim,
+                                      cfg.transformer_depth[li], dt)
+                if li > 0 else None)
+            c_prev = c
+            skips.append(c)
+        if li < len(chans) - 1:
+            level["down"] = L.init_conv(nxt(), 3, 3, c, c, dtype=dt)
+            skips.append(c)
+        p["down"].append(level)
+    # --- mid ---
+    p["mid"] = {
+        "res1": _resblock_init(nxt(), c_prev, c_prev, td, dt),
+        "attn": _spatial_xformer_init(nxt(), c_prev, cfg.ctx_dim,
+                                      cfg.transformer_depth[-1], dt),
+        "res2": _resblock_init(nxt(), c_prev, c_prev, td, dt),
+    }
+    # --- up path ---
+    for li in reversed(range(len(chans))):
+        c = chans[li]
+        level = {"res": [], "attn": [], "up": None}
+        for _ in range(cfg.n_res_blocks + 1):
+            c_skip = skips.pop()
+            level["res"].append(_resblock_init(nxt(), c_prev + c_skip, c, td, dt))
+            level["attn"].append(
+                _spatial_xformer_init(nxt(), c, cfg.ctx_dim,
+                                      cfg.transformer_depth[li], dt)
+                if li > 0 else None)
+            c_prev = c
+        if li > 0:
+            level["up"] = L.init_conv(nxt(), 3, 3, c, c, dtype=dt)
+        p["up"].append(level)
+    p["gn_out"] = L.init_groupnorm(cfg.ch, dtype=dt)
+    p["conv_out"] = L.init_conv(nxt(), 3, 3, cfg.ch, cfg.latent_ch, dtype=dt)
+    return p
+
+
+def unet_apply(params: Params, latents: Array, t: Array, ctx: Array,
+               add_emb: Array, cfg: UNetConfig) -> Array:
+    """Predict epsilon.  latents: (B, R, R, C); t: (B,) in [0, 1000);
+    ctx: (B, 77, 2048); add_emb: (B, d_add)."""
+    pol = cfg.policy
+    temb = L.timestep_embedding(t, cfg.ch).astype(pol.compute_dtype)
+    emb = L.dense(params["time2"], L.silu(L.dense(params["time1"], temb, pol)), pol)
+    emb = emb + L.dense(params["add2"],
+                        L.silu(L.dense(params["add1"],
+                                       add_emb.astype(pol.compute_dtype), pol)), pol)
+
+    x = L.conv2d(params["conv_in"], latents, policy=pol)
+    skips = [x]
+    for li, level in enumerate(params["down"]):
+        for rb, at in zip(level["res"], level["attn"]):
+            x = _resblock_apply(rb, x, emb, pol)
+            if at is not None:
+                x = _spatial_xformer_apply(at, x, ctx, cfg, pol)
+            skips.append(x)
+        if level["down"] is not None:
+            x = L.conv2d(level["down"], x, stride=2, policy=pol)
+            skips.append(x)
+
+    x = _resblock_apply(params["mid"]["res1"], x, emb, pol)
+    x = _spatial_xformer_apply(params["mid"]["attn"], x, ctx, cfg, pol)
+    x = _resblock_apply(params["mid"]["res2"], x, emb, pol)
+
+    for li, level in enumerate(params["up"]):
+        for rb, at in zip(level["res"], level["attn"]):
+            x = jnp.concatenate([x, skips.pop()], axis=-1)
+            x = _resblock_apply(rb, x, emb, pol)
+            if at is not None:
+                x = _spatial_xformer_apply(at, x, ctx, cfg, pol)
+        if level["up"] is not None:
+            x = L.upsample_nearest(x, 2)
+            x = L.conv2d(level["up"], x, policy=pol)
+
+    x = L.silu(L.groupnorm(params["gn_out"], x))
+    return L.conv2d(params["conv_out"], x, policy=pol).astype(jnp.float32)
+
+
+def unet_eps_loss(params: Params, batch: dict, cfg: UNetConfig, rng) -> Array:
+    """DDPM epsilon-prediction MSE with a cosine schedule."""
+    x0 = batch["latents"]
+    r1, r2 = jax.random.split(rng)
+    b = x0.shape[0]
+    t = jax.random.uniform(r1, (b,)) * 999.0
+    abar = jnp.cos((t / 1000.0 + 0.008) / 1.008 * (math.pi / 2)) ** 2
+    eps = jax.random.normal(r2, x0.shape, x0.dtype)
+    sq_a = jnp.sqrt(abar)[:, None, None, None]
+    sq_1a = jnp.sqrt(1.0 - abar)[:, None, None, None]
+    xt = sq_a * x0 + sq_1a * eps
+    pred = unet_apply(params, xt, t, batch["ctx"], batch["add_emb"], cfg)
+    return jnp.mean((pred - eps.astype(jnp.float32)) ** 2)
+
+
+def unet_ddim_step(params: Params, xt: Array, t: Array, t_prev: Array,
+                   ctx: Array, add_emb: Array, cfg: UNetConfig) -> Array:
+    """One DDIM step (eta = 0)."""
+    abar = lambda tt: jnp.cos((tt / 1000.0 + 0.008) / 1.008 * (math.pi / 2)) ** 2
+    a_t = abar(t)[:, None, None, None]
+    a_p = abar(t_prev)[:, None, None, None]
+    eps = unet_apply(params, xt, t, ctx, add_emb, cfg).astype(xt.dtype)
+    x0 = (xt - jnp.sqrt(1 - a_t) * eps) / jnp.sqrt(a_t)
+    return jnp.sqrt(a_p) * x0 + jnp.sqrt(1 - a_p) * eps

@@ -1,0 +1,268 @@
+"""Shared pure-JAX layers (param-pytree style, no framework deps).
+
+Every layer is a pair of functions: ``init_*(rng, ...) -> params`` and
+an apply function taking ``(params, x, ...)``.  Params are plain nested
+dicts of jnp arrays so they shard transparently through pjit; the
+sharding rules in ``repro.distributed.sharding`` match on dict paths.
+
+dtype policy: params are stored in ``param_dtype`` and matmuls run in
+``compute_dtype`` with f32 accumulation (``preferred_element_type``),
+which is the MXU-native configuration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypePolicy:
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+
+    def cast_in(self, x: Array) -> Array:
+        return x.astype(self.compute_dtype)
+
+
+F32 = DtypePolicy()
+BF16 = DtypePolicy(param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16)
+
+
+def _uniform_init(rng, shape, scale, dtype):
+    return jax.random.uniform(rng, shape, jnp.float32, -scale, scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Dense / embedding
+# --------------------------------------------------------------------------
+
+
+def init_dense(rng, d_in: int, d_out: int, *, bias: bool = True,
+               dtype=jnp.float32, scale: float | None = None) -> Params:
+    scale = scale if scale is not None else math.sqrt(1.0 / d_in)
+    p = {"w": _uniform_init(rng, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: Array, policy: DtypePolicy = F32) -> Array:
+    y = jax.lax.dot_general(
+        policy.cast_in(x),
+        p["w"].astype(policy.compute_dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(policy.compute_dtype)
+    if "b" in p:
+        y = y + p["b"].astype(policy.compute_dtype)
+    return y
+
+
+def init_embedding(rng, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"emb": jax.random.normal(rng, (vocab, d), jnp.float32).astype(dtype) * 0.02}
+
+
+def embedding(p: Params, ids: Array, policy: DtypePolicy = F32) -> Array:
+    return p["emb"].astype(policy.compute_dtype)[ids]
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def init_groupnorm(d: int, groups: int = 32, dtype=jnp.float32) -> Params:
+    del groups  # group count is a call-time choice (static under jit)
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def num_groups(c: int, preferred: int = 32) -> int:
+    """Largest divisor of ``c`` that is <= preferred."""
+    g = min(preferred, c)
+    while c % g:
+        g -= 1
+    return g
+
+
+def groupnorm(p: Params, x: Array, eps: float = 1e-5,
+              groups: int | None = None) -> Array:
+    """GroupNorm over the channel-last axis of (..., H, W, C)."""
+    dt = x.dtype
+    c = x.shape[-1]
+    g = groups if groups is not None else num_groups(c)
+    x32 = x.astype(jnp.float32)
+    xg = x32.reshape(x.shape[:-1] + (g, c // g))
+    axes = tuple(range(1, x.ndim - 1)) + (x.ndim,)  # spatial + intra-group
+    mu = jnp.mean(xg, axis=axes, keepdims=True)
+    var = jnp.var(xg, axis=axes, keepdims=True)
+    y = ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(x.shape)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def init_batchnorm(d: int, dtype=jnp.float32) -> Params:
+    return {
+        "scale": jnp.ones((d,), dtype),
+        "bias": jnp.zeros((d,), dtype),
+        "mean": jnp.zeros((d,), jnp.float32),
+        "var": jnp.ones((d,), jnp.float32),
+    }
+
+
+def batchnorm(p: Params, x: Array, *, train: bool, eps: float = 1e-5,
+              momentum: float = 0.9) -> tuple[Array, Params]:
+    """BatchNorm over (N, H, W, C); returns (y, updated running stats)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mu = jnp.mean(x32, axis=axes)
+        var = jnp.var(x32, axis=axes)
+        new_stats = {
+            **p,
+            "mean": momentum * p["mean"] + (1 - momentum) * mu,
+            "var": momentum * p["var"] + (1 - momentum) * var,
+        }
+    else:
+        mu, var = p["mean"], p["var"]
+        new_stats = p
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(dt), new_stats
+
+
+# --------------------------------------------------------------------------
+# Convolutions (NHWC)
+# --------------------------------------------------------------------------
+
+
+def init_conv(rng, kh: int, kw: int, c_in: int, c_out: int, *,
+              bias: bool = True, dtype=jnp.float32, groups: int = 1) -> Params:
+    fan_in = kh * kw * c_in // groups
+    scale = math.sqrt(1.0 / fan_in)
+    p = {"w": _uniform_init(rng, (kh, kw, c_in // groups, c_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((c_out,), dtype)
+    return p
+
+
+def conv2d(p: Params, x: Array, *, stride: int | tuple[int, int] = 1,
+           padding: str | Sequence[tuple[int, int]] = "SAME",
+           groups: int = 1, policy: DtypePolicy = F32) -> Array:
+    if isinstance(stride, int):
+        stride = (stride, stride)
+    # no preferred_element_type: the conv transpose (grad-wrt-kernel) rule
+    # requires matching dtypes; MXU convs accumulate in f32 regardless.
+    y = jax.lax.conv_general_dilated(
+        policy.cast_in(x),
+        p["w"].astype(policy.compute_dtype),
+        window_strides=stride,
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+    if "b" in p:
+        y = y + p["b"].astype(policy.compute_dtype)
+    return y
+
+
+def max_pool(x: Array, window: int, stride: int, padding: str = "SAME") -> Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max,
+        (1, window, window, 1), (1, stride, stride, 1), padding,
+    )
+
+
+def avg_pool_global(x: Array) -> Array:
+    return jnp.mean(x, axis=(1, 2))
+
+
+def upsample_nearest(x: Array, factor: int = 2) -> Array:
+    n, h, w, c = x.shape
+    x = jnp.broadcast_to(x[:, :, None, :, None, :], (n, h, factor, w, factor, c))
+    return x.reshape(n, h * factor, w * factor, c)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+
+def rope_frequencies(d_head: int, theta: float = 10000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (B, S, H, D) with D even; positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (D/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Activations / misc
+# --------------------------------------------------------------------------
+
+
+def gelu(x: Array) -> Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x: Array) -> Array:
+    return jax.nn.silu(x)
+
+
+def mish(x: Array) -> Array:
+    return x * jnp.tanh(jax.nn.softplus(x))
+
+
+def split_rngs(rng, n: int):
+    return list(jax.random.split(rng, n))
+
+
+def timestep_embedding(t: Array, dim: int, max_period: float = 10000.0) -> Array:
+    """Sinusoidal timestep embedding (diffusion)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)

@@ -1,0 +1,381 @@
+"""Vision backbones: ViT-B/16, ConvNeXt-B, ResNet-50/152.
+
+Assigned-architecture implementations (exact configs live in
+``repro.configs``).  Patch-embed / conv stems are part of the model
+(vision pool semantics).  Repeated homogeneous blocks are stacked and
+scanned so ResNet-152's 36-block stage lowers as one loop.
+
+API per family:
+    init_params(rng, cfg) -> params
+    apply(params, images, train=False) -> (logits, updated_params)
+``updated_params`` carries refreshed BatchNorm running stats (ResNet);
+for stat-free models it is ``params`` unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import BATCH, constrain
+from repro.models import layers as L
+
+Array = jax.Array
+Params = dict
+
+
+# ==========================================================================
+# ViT
+# ==========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    name: str
+    img_res: int
+    patch: int
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_classes: int = 1000
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    remat: bool = True
+
+    @property
+    def policy(self) -> L.DtypePolicy:
+        return L.DtypePolicy(self.param_dtype, self.compute_dtype)
+
+    @property
+    def n_params(self) -> int:
+        d, f = self.d_model, self.d_ff
+        per = 4 * d * d + 2 * d * f + 4 * d
+        stem = self.patch * self.patch * 3 * d
+        seq = (self.img_res // self.patch) ** 2 + 1
+        return self.n_layers * per + stem + seq * d + d * self.n_classes
+
+
+def vit_init(rng, cfg: ViTConfig) -> Params:
+    dt = cfg.param_dtype
+    rngs = jax.random.split(rng, 8)
+    d, lyr = cfg.d_model, cfg.n_layers
+    n_tokens = (cfg.img_res // cfg.patch) ** 2 + 1
+
+    def stacked(key, shape, scale):
+        return (jax.random.uniform(key, (lyr,) + shape, jnp.float32, -scale, scale)
+                .astype(dt))
+
+    s = (1.0 / d) ** 0.5
+    sf = (1.0 / cfg.d_ff) ** 0.5
+    return {
+        "patch": L.init_conv(rngs[0], cfg.patch, cfg.patch, 3, d, dtype=dt),
+        "cls": jnp.zeros((1, 1, d), dt),
+        "pos": jax.random.normal(rngs[1], (1, n_tokens, d), jnp.float32).astype(dt) * 0.02,
+        "layers": {
+            "ln1": {"scale": jnp.ones((lyr, d), dt), "bias": jnp.zeros((lyr, d), dt)},
+            "wqkv": stacked(rngs[2], (d, 3 * d), s),
+            "wo": stacked(rngs[3], (d, d), s),
+            "ln2": {"scale": jnp.ones((lyr, d), dt), "bias": jnp.zeros((lyr, d), dt)},
+            "w1": stacked(rngs[4], (d, cfg.d_ff), s),
+            "b1": jnp.zeros((lyr, cfg.d_ff), dt),
+            "w2": stacked(rngs[5], (cfg.d_ff, d), sf),
+            "b2": jnp.zeros((lyr, d), dt),
+        },
+        "ln_f": L.init_layernorm(d, dt),
+        "head": L.init_dense(rngs[6], d, cfg.n_classes, dtype=dt),
+    }
+
+
+def _mha_full(x: Array, wqkv: Array, wo: Array, n_heads: int,
+              policy: L.DtypePolicy) -> Array:
+    b, s, d = x.shape
+    dh = d // n_heads
+    qkv = L.dense({"w": wqkv}, x, policy).reshape(b, s, 3, n_heads, dh)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    att = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                     k.astype(jnp.float32)) * (dh ** -0.5)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", att, v.astype(jnp.float32))
+    out = out.astype(policy.compute_dtype).reshape(b, s, d)
+    return L.dense({"w": wo}, out, policy)
+
+
+def vit_apply(params: Params, images: Array, cfg: ViTConfig,
+              train: bool = False) -> tuple[Array, Params]:
+    del train  # no batch stats
+    pol = cfg.policy
+    x = L.conv2d(params["patch"], images, stride=cfg.patch, padding="VALID",
+                 policy=pol)
+    b, h, w, d = x.shape
+    x = x.reshape(b, h * w, d)
+    cls = jnp.broadcast_to(params["cls"].astype(pol.compute_dtype), (b, 1, d))
+    x = jnp.concatenate([cls, x], axis=1) + params["pos"].astype(pol.compute_dtype)
+    x = constrain(x, BATCH, None, None)
+
+    def body(x, lp):
+        h1 = L.layernorm({"scale": lp["ln1"]["scale"], "bias": lp["ln1"]["bias"]}, x)
+        x = x + _mha_full(h1, lp["wqkv"], lp["wo"], cfg.n_heads, pol)
+        h2 = L.layernorm({"scale": lp["ln2"]["scale"], "bias": lp["ln2"]["bias"]}, x)
+        y = constrain(L.gelu(L.dense({"w": lp["w1"], "b": lp["b1"]}, h2, pol)),
+                      BATCH, None, "model")
+        x = constrain(x + L.dense({"w": lp["w2"], "b": lp["b2"]}, y, pol),
+                      BATCH, None, None)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.layernorm(params["ln_f"], x)
+    logits = L.dense(params["head"], x[:, 0], pol).astype(jnp.float32)
+    return logits, params
+
+
+# ==========================================================================
+# ConvNeXt
+# ==========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvNeXtConfig:
+    name: str
+    img_res: int
+    depths: Sequence[int] = (3, 3, 27, 3)
+    dims: Sequence[int] = (128, 256, 512, 1024)
+    n_classes: int = 1000
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    remat: bool = True
+
+    @property
+    def policy(self) -> L.DtypePolicy:
+        return L.DtypePolicy(self.param_dtype, self.compute_dtype)
+
+    @property
+    def n_params(self) -> int:
+        total = 4 * 4 * 3 * self.dims[0]
+        prev = self.dims[0]
+        for depth, dim in zip(self.depths, self.dims):
+            if dim != prev:
+                total += 2 * 2 * prev * dim
+            total += depth * (7 * 7 * dim + dim * 4 * dim * 2 + 3 * dim)
+            prev = dim
+        return total + self.dims[-1] * self.n_classes
+
+
+def _convnext_block_init(rng, dim: int, dt) -> Params:
+    r = jax.random.split(rng, 3)
+    return {
+        "dw": L.init_conv(r[0], 7, 7, dim, dim, dtype=dt, groups=dim),
+        "ln": L.init_layernorm(dim, dt),
+        "pw1": L.init_dense(r[1], dim, 4 * dim, dtype=dt),
+        "pw2": L.init_dense(r[2], 4 * dim, dim, dtype=dt),
+        "gamma": jnp.full((dim,), 1e-6, dt),
+    }
+
+
+def _stack_params(plist: list[Params]) -> Params:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *plist)
+
+
+def convnext_init(rng, cfg: ConvNeXtConfig) -> Params:
+    dt = cfg.param_dtype
+    rngs = jax.random.split(rng, 4 + len(cfg.depths) * 2)
+    p: Params = {
+        "stem": L.init_conv(rngs[0], 4, 4, 3, cfg.dims[0], dtype=dt),
+        "stem_ln": L.init_layernorm(cfg.dims[0], dt),
+        "stages": [],
+        "downsample": [],
+        "ln_f": L.init_layernorm(cfg.dims[-1], dt),
+        "head": L.init_dense(rngs[1], cfg.dims[-1], cfg.n_classes, dtype=dt),
+    }
+    prev = cfg.dims[0]
+    for si, (depth, dim) in enumerate(zip(cfg.depths, cfg.dims)):
+        r = jax.random.split(rngs[2 + si], depth + 1)
+        if dim != prev:
+            p["downsample"].append({
+                "ln": L.init_layernorm(prev, dt),
+                "conv": L.init_conv(r[0], 2, 2, prev, dim, dtype=dt),
+            })
+        else:
+            p["downsample"].append(None)
+        p["stages"].append(_stack_params(
+            [_convnext_block_init(r[1 + i], dim, dt) for i in range(depth)]))
+        prev = dim
+    return p
+
+
+def convnext_features(params: Params, images: Array, cfg: ConvNeXtConfig,
+                      train: bool = False) -> tuple[list, Params]:
+    """Per-stage feature maps (strides 4/8/16/32) for detection heads."""
+    del train
+    pol = cfg.policy
+    x = L.conv2d(params["stem"], images, stride=4, padding="VALID", policy=pol)
+    x = L.layernorm(params["stem_ln"], x)
+
+    def block(x, bp):
+        h = L.conv2d(bp["dw"], x, groups=x.shape[-1], policy=pol)
+        h = L.layernorm(bp["ln"], h)
+        h = constrain(L.gelu(L.dense(bp["pw1"], h, pol)),
+                      BATCH, None, None, "model")
+        h = L.dense(bp["pw2"], h, pol)
+        out = x + h * bp["gamma"].astype(pol.compute_dtype)
+        return constrain(out, BATCH, None, None, None), None
+
+    body = jax.checkpoint(block, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else block
+    feats = []
+    for ds, stage in zip(params["downsample"], params["stages"]):
+        if ds is not None:
+            x = L.layernorm(ds["ln"], x)
+            x = L.conv2d(ds["conv"], x, stride=2, padding="VALID", policy=pol)
+        x, _ = jax.lax.scan(body, x, stage)
+        feats.append(x)
+    return feats, params
+
+
+def convnext_apply(params: Params, images: Array, cfg: ConvNeXtConfig,
+                   train: bool = False) -> tuple[Array, Params]:
+    pol = cfg.policy
+    feats, _ = convnext_features(params, images, cfg, train)
+    x = L.avg_pool_global(feats[-1])
+    x = L.layernorm(params["ln_f"], x)
+    logits = L.dense(params["head"], x, pol).astype(jnp.float32)
+    return logits, params
+
+
+# ==========================================================================
+# ResNet
+# ==========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str
+    img_res: int
+    depths: Sequence[int] = (3, 4, 6, 3)
+    width: int = 64
+    n_classes: int = 1000
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    remat: bool = True
+
+    @property
+    def policy(self) -> L.DtypePolicy:
+        return L.DtypePolicy(self.param_dtype, self.compute_dtype)
+
+    @property
+    def n_params(self) -> int:
+        total = 7 * 7 * 3 * self.width
+        c_in = self.width
+        for i, depth in enumerate(self.depths):
+            mid = self.width * (2 ** i)
+            out = mid * 4
+            total += c_in * mid + 3 * 3 * mid * mid + mid * out + c_in * out
+            total += (depth - 1) * (out * mid + 3 * 3 * mid * mid + mid * out)
+            c_in = out
+        return total + c_in * self.n_classes
+
+
+def _bottleneck_init(rng, c_in: int, mid: int, stride: int, project: bool, dt) -> Params:
+    r = jax.random.split(rng, 4)
+    out = mid * 4
+    p = {
+        "conv1": L.init_conv(r[0], 1, 1, c_in, mid, bias=False, dtype=dt),
+        "bn1": L.init_batchnorm(mid, dt),
+        "conv2": L.init_conv(r[1], 3, 3, mid, mid, bias=False, dtype=dt),
+        "bn2": L.init_batchnorm(mid, dt),
+        "conv3": L.init_conv(r[2], 1, 1, mid, out, bias=False, dtype=dt),
+        "bn3": L.init_batchnorm(out, dt),
+    }
+    if project:
+        p["proj"] = L.init_conv(r[3], 1, 1, c_in, out, bias=False, dtype=dt)
+        p["bn_proj"] = L.init_batchnorm(out, dt)
+    return p
+
+
+def resnet_init(rng, cfg: ResNetConfig) -> Params:
+    dt = cfg.param_dtype
+    rngs = jax.random.split(rng, 3 + len(cfg.depths))
+    p: Params = {
+        "stem": L.init_conv(rngs[0], 7, 7, 3, cfg.width, bias=False, dtype=dt),
+        "bn_stem": L.init_batchnorm(cfg.width, dt),
+        "stages": [],
+        "head": L.init_dense(rngs[1], cfg.width * 8 * 4, cfg.n_classes, dtype=dt),
+    }
+    c_in = cfg.width
+    for i, depth in enumerate(cfg.depths):
+        mid = cfg.width * (2 ** i)
+        r = jax.random.split(rngs[2 + i], depth)
+        first = _bottleneck_init(r[0], c_in, mid, 2 if i > 0 else 1, True, dt)
+        rest = [_bottleneck_init(r[j], mid * 4, mid, 1, False, dt)
+                for j in range(1, depth)]
+        p["stages"].append({
+            "first": first,
+            "rest": _stack_params(rest) if rest else None,
+        })
+        c_in = mid * 4
+    return p
+
+
+def _bottleneck_apply(bp: Params, x: Array, stride: int, train: bool,
+                      pol: L.DtypePolicy) -> tuple[Array, Params]:
+    new = dict(bp)
+    h = L.conv2d(bp["conv1"], x, policy=pol)
+    h, new["bn1"] = L.batchnorm(bp["bn1"], h, train=train)
+    h = jax.nn.relu(h)
+    h = L.conv2d(bp["conv2"], h, stride=stride, policy=pol)
+    h, new["bn2"] = L.batchnorm(bp["bn2"], h, train=train)
+    h = jax.nn.relu(h)
+    h = L.conv2d(bp["conv3"], h, policy=pol)
+    h, new["bn3"] = L.batchnorm(bp["bn3"], h, train=train)
+    if "proj" in bp:
+        sc = L.conv2d(bp["proj"], x, stride=stride, policy=pol)
+        sc, new["bn_proj"] = L.batchnorm(bp["bn_proj"], sc, train=train)
+    else:
+        sc = x
+    return constrain(jax.nn.relu(h + sc), BATCH, None, None, "model"), new
+
+
+def resnet_features(params: Params, images: Array, cfg: ResNetConfig,
+                    train: bool = False) -> tuple[list, Params]:
+    """Per-stage feature maps (strides 4/8/16/32) for detection heads."""
+    pol = cfg.policy
+    new_params = dict(params)
+    x = L.conv2d(params["stem"], images, stride=2, policy=pol)
+    x, new_params["bn_stem"] = L.batchnorm(params["bn_stem"], x, train=train)
+    x = jax.nn.relu(x)
+    x = L.max_pool(x, 3, 2)
+
+    feats = []
+    new_stages = []
+    for i, stage in enumerate(params["stages"]):
+        stride = 2 if i > 0 else 1
+        ns = dict(stage)
+        x, ns["first"] = _bottleneck_apply(stage["first"], x, stride, train, pol)
+
+        if stage["rest"] is not None:
+            def body(x, bp):
+                y, nbp = _bottleneck_apply(bp, x, 1, train, pol)
+                return y, nbp
+
+            if cfg.remat:
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable)
+            x, ns["rest"] = jax.lax.scan(body, x, stage["rest"])
+        new_stages.append(ns)
+        feats.append(x)
+    new_params["stages"] = new_stages
+    return feats, new_params
+
+
+def resnet_apply(params: Params, images: Array, cfg: ResNetConfig,
+                 train: bool = False) -> tuple[Array, Params]:
+    pol = cfg.policy
+    feats, new_params = resnet_features(params, images, cfg, train)
+    x = L.avg_pool_global(feats[-1])
+    logits = L.dense(params["head"], x, pol).astype(jnp.float32)
+    return logits, new_params

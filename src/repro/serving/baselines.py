@@ -1,0 +1,78 @@
+"""The paper's two resource-agnostic baselines (section V-B).
+
+* ``ERP``     — feed the whole (downsampled) ERP frame to one detector;
+  convert rectangular BBs to SphBBs.
+* ``CubeMap`` — project the frame onto the 6 cube faces (90x90 FoV
+  PIs), run the detector on each face, back-project and merge.
+
+Both run every frame with a FIXED model — no content/network
+adaptivity — which is exactly what OmniSense's allocator beats.
+E2E latencies follow the same stage-cost + network model as OmniSense
+(CubeMap pipelines face preprocessing with inference, like the paper's
+implementation does).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core import accuracy as acc_mod
+from repro.core import allocation, sroi as sroi_mod
+from repro.core.sphere import sph_nms_host
+from repro.serving.scheduler import OmniSenseLatencyModel
+
+CUBE_CENTERS = [
+    (0.0, 0.0), (math.pi / 2, 0.0), (math.pi, 0.0), (-math.pi / 2, 0.0),
+    (0.0, math.pi / 2), (0.0, -math.pi / 2),
+]
+
+
+def run_erp_baseline(video, backend, latency: OmniSenseLatencyModel,
+                     variant: acc_mod.ModelProfile, frames: range):
+    """Returns (predictions [(frame, det)], mean E2E seconds)."""
+    preds = []
+    e2e = []
+    for f in frames:
+        backend.set_frame(f)
+        dets = backend.infer_erp(None, variant)
+        for d in dets:
+            preds.append((f, d))
+        t = latency._pre(variant) + latency._inf(variant)
+        if variant.location != "device":
+            latency.observe_delivery(variant)
+        e2e.append(t)
+    return preds, float(np.mean(e2e))
+
+
+def run_cubemap_baseline(video, backend, latency: OmniSenseLatencyModel,
+                         variant: acc_mod.ModelProfile, frames: range,
+                         nms_threshold: float = 0.6):
+    """Six 90-degree faces, preprocessing pipelined with inference."""
+    fov = (math.pi / 2, math.pi / 2)
+    preds = []
+    e2e = []
+    d_pre = latency._pre(variant)
+    d_inf = latency._inf(variant)
+    pipelined = allocation.plan_latency(
+        tuple([1] * 6),
+        np.array([[0.0] * 6, [d_pre] * 6]),
+        np.array([[0.0] * 6, [d_inf] * 6]))
+    for f in frames:
+        backend.set_frame(f)
+        dets = []
+        for ct, cp in CUBE_CENTERS:
+            region = sroi_mod.SRoI(center=(ct, cp), fov=fov)
+            dets.extend(backend.infer_sroi(None, region, variant))
+        if dets:
+            boxes = np.stack([d.box for d in dets])
+            scores = np.array([d.score for d in dets])
+            keep = sph_nms_host(boxes, scores, nms_threshold)
+            dets = [d for d, k in zip(dets, keep) if k]
+        for d in dets:
+            preds.append((f, d))
+        if variant.location != "device":
+            latency.observe_delivery(variant)
+        e2e.append(pipelined)
+    return preds, float(np.mean(e2e))

@@ -1,0 +1,76 @@
+"""Spherical mAP (Sph-mAP) — the paper's accuracy metric (section V-B).
+
+Standard VOC-style mean Average Precision with the rectangular IoU
+replaced by SphIoU (AAAI'20 spherical criteria).  Matching threshold
+0.5; all-point interpolation; mAP averages over categories that appear
+in the ground truth.
+"""
+
+from __future__ import annotations
+
+import collections
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sphere import sph_iou_matrix
+from repro.core.sroi import Detection
+
+
+def sph_ap(preds: list[tuple[int, Detection]],
+           gts: list[tuple[int, Detection]],
+           iou_threshold: float = 0.5) -> float:
+    """AP for one category.  Items are (frame_idx, detection)."""
+    if not gts:
+        return float("nan")
+    gt_by_frame: dict[int, list[Detection]] = collections.defaultdict(list)
+    for f, d in gts:
+        gt_by_frame[f].append(d)
+    matched: dict[int, np.ndarray] = {
+        f: np.zeros(len(v), bool) for f, v in gt_by_frame.items()}
+
+    preds_sorted = sorted(preds, key=lambda fd: -fd[1].score)
+    tp = np.zeros(len(preds_sorted))
+    fp = np.zeros(len(preds_sorted))
+    for i, (f, det) in enumerate(preds_sorted):
+        cands = gt_by_frame.get(f, [])
+        if not cands:
+            fp[i] = 1
+            continue
+        ious = np.asarray(sph_iou_matrix(
+            jnp.asarray(det.box[None]),
+            jnp.asarray(np.stack([c.box for c in cands]))))[0]
+        best = int(np.argmax(ious))
+        if ious[best] >= iou_threshold and not matched[f][best]:
+            matched[f][best] = True
+            tp[i] = 1
+        else:
+            fp[i] = 1
+
+    n_gt = len(gts)
+    tp_cum = np.cumsum(tp)
+    fp_cum = np.cumsum(fp)
+    recall = tp_cum / n_gt
+    precision = tp_cum / np.maximum(tp_cum + fp_cum, 1e-9)
+    # all-point interpolation
+    mrec = np.concatenate([[0.0], recall, [1.0]])
+    mpre = np.concatenate([[0.0], precision, [0.0]])
+    for i in range(len(mpre) - 2, -1, -1):
+        mpre[i] = max(mpre[i], mpre[i + 1])
+    idx = np.nonzero(mrec[1:] != mrec[:-1])[0]
+    return float(np.sum((mrec[idx + 1] - mrec[idx]) * mpre[idx + 1]))
+
+
+def sph_map(predictions: list[tuple[int, Detection]],
+            ground_truth: list[tuple[int, Detection]],
+            iou_threshold: float = 0.5) -> float:
+    """Sph-mAP over all categories present in the ground truth."""
+    cats = sorted({d.category for _, d in ground_truth})
+    aps = []
+    for c in cats:
+        ap = sph_ap([(f, d) for f, d in predictions if d.category == c],
+                    [(f, d) for f, d in ground_truth if d.category == c],
+                    iou_threshold)
+        if not np.isnan(ap):
+            aps.append(ap)
+    return float(np.mean(aps)) if aps else 0.0

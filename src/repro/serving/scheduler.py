@@ -1,0 +1,280 @@
+"""Latency model + inference backends + the OmniSense scheduler glue.
+
+``OmniSenseLatencyModel`` computes the allocator's (d_pre, d_inf)
+matrices exactly as section IV-C specifies:
+
+    d_pre[i][j] = projection(PI at model i's input size)
+                  + encode(same) if model i runs remotely
+    d_inf[i][j] = delivery(PI bytes) if remote else 0
+                  + model i's profiled inference time
+
+Row 0 is the zero-cost "skip" pseudo-model.  Delivery delays come from
+the passive profiler (omega-window) scaled by payload size, and the
+projection/encode terms from the offline stage-cost profile — the PI
+resolution always equals the allocated model's input size ("to avoid
+resizing the image").
+
+Backends:
+  * ``OracleBackend`` — samples detections from the scene ground truth
+    using each variant's gav as hit probability (+ box jitter, rare
+    false positives).  Drives the reproduction benchmark (DESIGN.md
+    section 7: no pretrained weights exist, the systems claim is about
+    allocation given a ladder).
+  * ``JaxDetectorBackend`` — really projects the SRoI (Pallas gnomonic
+    kernel) and runs the JAX detector ladder; used by examples/tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import accuracy as acc_mod
+from repro.core import sroi as sroi_mod
+from repro.core.sphere import pi_box_to_sphbb
+from repro.data.synthetic import SyntheticVideo
+from repro.serving.network import NetworkModel, PassiveProfiler
+from repro.serving.profiles import StageCosts
+
+
+class OmniSenseLatencyModel:
+    def __init__(self, costs: StageCosts, network: NetworkModel,
+                 profiler: PassiveProfiler | None = None):
+        self.costs = costs
+        self.network = network
+        self.profiler = profiler or PassiveProfiler()
+
+    def _pre(self, variant: acc_mod.ModelProfile) -> float:
+        mpix = variant.input_size ** 2 / 1e6
+        t = self.costs.project_s_per_mpix * mpix
+        if variant.location != "device":
+            t += self.costs.encode_s_per_mpix * mpix
+        return t
+
+    def _inf(self, variant: acc_mod.ModelProfile) -> float:
+        t = variant.infer_s
+        if variant.location != "device":
+            n_bytes = variant.input_size ** 2 * self.costs.bytes_per_pixel
+            est = self.profiler.estimate(variant.name)
+            if est == self.profiler.initial_s:
+                t += self.network.delivery_delay(n_bytes)
+            else:
+                t += est
+        return t
+
+    def delays(self, srois: Sequence[sroi_mod.SRoI],
+               variants: Sequence[acc_mod.ModelProfile]):
+        r = len(srois)
+        m = len(variants)
+        d_pre = np.zeros((1 + m, r))
+        d_inf = np.zeros((1 + m, r))
+        for i, var in enumerate(variants):
+            d_pre[1 + i, :] = self._pre(var)
+            d_inf[1 + i, :] = self._inf(var)
+        return d_pre, d_inf
+
+    def observe_delivery(self, variant: acc_mod.ModelProfile) -> float:
+        """Simulate one remote delivery, feed the passive profiler."""
+        n_bytes = variant.input_size ** 2 * self.costs.bytes_per_pixel
+        d = self.network.delivery_delay(n_bytes)
+        self.profiler.observe(variant.name, d)
+        return d
+
+
+# --------------------------------------------------------------------------
+# backends
+# --------------------------------------------------------------------------
+
+
+def _in_sroi(det: sroi_mod.Detection, region: sroi_mod.SRoI) -> bool:
+    ct, cp = region.center
+    fh, fv = region.fov
+    dlon = abs((det.box[0] - ct + math.pi) % (2 * math.pi) - math.pi)
+    return dlon <= fh / 2 and abs(det.box[1] - cp) <= fv / 2
+
+
+def _fully_enclosed(det: sroi_mod.Detection, region: sroi_mod.SRoI) -> bool:
+    ct, cp = region.center
+    fh, fv = region.fov
+    dlon = abs((det.box[0] - ct + math.pi) % (2 * math.pi) - math.pi)
+    return (dlon + det.box[2] / 2 <= fh / 2
+            and abs(det.box[1] - cp) + det.box[3] / 2 <= fv / 2)
+
+
+def _angular_distance(det: sroi_mod.Detection, region: sroi_mod.SRoI) -> float:
+    ct, cp = region.center
+    dlon = abs((det.box[0] - ct + math.pi) % (2 * math.pi) - math.pi)
+    # great-circle distance (spherical law of cosines)
+    cosd = (math.sin(cp) * math.sin(det.box[1])
+            + math.cos(cp) * math.cos(det.box[1]) * math.cos(dlon))
+    return math.acos(max(-1.0, min(1.0, cosd)))
+
+
+@dataclasses.dataclass
+class OracleBackend:
+    """Ground-truth-driven detection sampling (see module docstring)."""
+
+    video: SyntheticVideo
+    frame: int = 0
+    seed: int = 0
+    fp_rate: float = 0.02
+
+    def set_frame(self, frame: int) -> None:
+        self.frame = frame
+
+    def _detect(self, candidates, variant, region_tag: int,
+                ref_sr: float = 4 * math.pi,
+                region: sroi_mod.SRoI | None = None):
+        out = []
+        n_cat = self.video.n_categories
+        fp_rng = np.random.default_rng(
+            (self.seed * 1_000_003 + self.frame) * 131 + variant.index * 7
+            + region_tag)
+        for det in candidates:
+            # temporally-coherent sampling: the hit decision for an
+            # object re-randomises every few frames, not every frame —
+            # real detectors find the same object in consecutive frames,
+            # which is exactly what Algorithm 1's history exploits.
+            okey = hash((round(float(det.box[2]), 6),
+                         round(float(det.box[3]), 6), det.category))
+            rng = np.random.default_rng(
+                (self.seed * 7_368_787 + okey) % (2 ** 31)
+                + variant.index * 97 + (self.frame // 4) * 31)
+            # effective-resolution model: the object's share of THE
+            # IMAGE IT IS ANALYSED IN decides its gav size level
+            level = sroi_mod.size_level_in(det, ref_sr, acc_mod.SMALL_NOA,
+                                           acc_mod.MEDIUM_NOA)
+            acc = float(variant.gav[level * n_cat + det.category % n_cat])
+            if region is not None:
+                # geometric penalties of analysing a PI (paper Fig. 1):
+                # (a) objects cut by the PI border are detected poorly —
+                #     CubeMap's fixed 90-degree grid splits constantly,
+                #     SRoIs are centred on objects by construction;
+                # (b) gnomonic stretch away from the tangent point
+                #     degrades off-axis objects (1 at centre, ~cos^2 d).
+                if not _fully_enclosed(det, region):
+                    acc *= 0.3
+                d = _angular_distance(det, region)
+                acc *= max(math.cos(min(d, math.pi / 2)), 0.15) ** 2
+            if rng.uniform() < acc:
+                jitter = (1.0 - acc) * 0.1
+                box = det.box.copy()
+                box[0] += rng.normal(0, jitter * box[2])
+                box[1] += rng.normal(0, jitter * box[3])
+                box[2] *= float(np.exp(rng.normal(0, jitter)))
+                box[3] *= float(np.exp(rng.normal(0, jitter)))
+                out.append(sroi_mod.Detection(
+                    box=box, category=det.category,
+                    score=float(np.clip(acc + rng.normal(0, 0.05), 0.05, 1.0))))
+        if fp_rng.uniform() < self.fp_rate and candidates:
+            ref = candidates[0]
+            out.append(sroi_mod.Detection(
+                box=ref.box * np.array([1.0, 1.0, 0.7, 0.7]),
+                category=int(fp_rng.integers(0, n_cat)), score=0.3))
+        return out
+
+    def infer_sroi(self, frame_img, region: sroi_mod.SRoI,
+                   variant: acc_mod.ModelProfile):
+        del frame_img
+        gt = self.video.visible_objects(self.frame)
+        cands = [d for d in gt if _in_sroi(d, region)]
+        tag = hash((round(region.center[0], 3), round(region.center[1], 3))) % 9973
+        return self._detect(cands, variant, tag,
+                            ref_sr=sroi_mod.region_solid_angle(*region.fov),
+                            region=region)
+
+    def infer_erp(self, frame_img, variant: acc_mod.ModelProfile):
+        """Full-ERP inference: distortion + downsampling degrade small
+        objects — modelled as a size-level demotion of the gav."""
+        del frame_img
+        gt = self.video.visible_objects(self.frame)
+        demoted = dataclasses.replace(
+            variant, gav=np.concatenate([
+                variant.gav[:len(variant.gav) // 3] * 0.3,   # small: mostly lost
+                variant.gav[len(variant.gav) // 3: 2 * len(variant.gav) // 3] * 0.6,
+                variant.gav[2 * len(variant.gav) // 3:] * 0.9,
+            ]))
+        return self._detect(gt, demoted, region_tag=0, ref_sr=4 * math.pi)
+
+
+class JaxDetectorBackend:
+    """Real path: Pallas gnomonic projection + JAX detector inference."""
+
+    def __init__(self, variants_cfg, params_per_variant, conf: float = 0.25,
+                 use_kernel: bool = True, max_det: int = 16):
+        self.cfgs = list(variants_cfg)
+        self.params = list(params_per_variant)
+        self.conf = conf
+        self.use_kernel = use_kernel
+        self.max_det = max_det
+
+    def infer_sroi(self, frame_img, region: sroi_mod.SRoI,
+                   variant: acc_mod.ModelProfile):
+        import jax.numpy as jnp
+
+        from repro.kernels.gnomonic import ops as gno_ops
+        from repro.models import detector as det_mod
+
+        idx = variant.index - 1
+        cfg = self.cfgs[idx]
+        size = cfg.input_size
+        pi = gno_ops.project_sroi_kernel(
+            jnp.asarray(frame_img), region.center[0], region.center[1],
+            region.fov, (size, size)) if self.use_kernel else None
+        if pi is None:
+            from repro.core.projection import project_sroi
+
+            pi = project_sroi(jnp.asarray(frame_img),
+                              jnp.asarray(region.center[0]),
+                              jnp.asarray(region.center[1]),
+                              region.fov, (size, size))
+        outs = det_mod.apply(self.params[idx], pi[None], cfg)
+        boxes, scores, classes = det_mod.decode(outs, cfg, self.conf,
+                                                max_det=self.max_det)
+        boxes, scores, classes = (np.asarray(boxes[0]), np.asarray(scores[0]),
+                                  np.asarray(classes[0]))
+        dets = []
+        for b, s, c in zip(boxes, scores, classes):
+            if s <= 0:
+                continue
+            sphbb = np.asarray(pi_box_to_sphbb(
+                jnp.asarray(b), jnp.asarray(region.center[0]),
+                jnp.asarray(region.center[1]), region.fov, (size, size)))
+            dets.append(sroi_mod.Detection(box=sphbb, category=int(c),
+                                           score=float(s)))
+        return dets
+
+    def infer_erp(self, frame_img, variant: acc_mod.ModelProfile):
+        # ERP-wide pass with the largest model on the resized frame
+        import jax.numpy as jnp
+
+        from repro.core.projection import erp_resize_coords, sample_erp_bilinear
+        from repro.models import detector as det_mod
+
+        idx = variant.index - 1
+        cfg = self.cfgs[idx]
+        size = cfg.input_size
+        u, v = erp_resize_coords((size, size), frame_img.shape[:2])
+        resized = sample_erp_bilinear(jnp.asarray(frame_img), u, v)
+        outs = det_mod.apply(self.params[idx], resized[None], cfg)
+        boxes, scores, classes = det_mod.decode(outs, cfg, self.conf,
+                                                max_det=self.max_det)
+        h, w = frame_img.shape[:2]
+        dets = []
+        for b, s, c in zip(np.asarray(boxes[0]), np.asarray(scores[0]),
+                           np.asarray(classes[0])):
+            if s <= 0:
+                continue
+            # rectangular BB on the ERP -> SphBB via ERP coords
+            x0, y0, x1, y1 = b * np.array([w / size, h / size] * 2)
+            theta = ((x0 + x1) / 2 / w - 0.5) * 2 * math.pi
+            phi = (0.5 - (y0 + y1) / 2 / h) * math.pi
+            dth = (x1 - x0) / w * 2 * math.pi
+            dph = (y1 - y0) / h * math.pi
+            dets.append(sroi_mod.Detection(
+                box=np.array([theta, phi, abs(dth), abs(dph)]),
+                category=int(c), score=float(s)))
+        return dets

@@ -1,0 +1,129 @@
+"""Gradient compression for the inter-pod (DCN) hop.
+
+On a multi-pod mesh the intra-pod gradient reduction rides the ICI
+(fast); the pod axis crosses data-centre network.  Two standard tricks
+are provided as composable pytree transforms:
+
+  * ``bf16_compress / bf16_decompress`` — cast the all-reduce payload
+    to bf16 (2x) and accumulate the rounding error locally (error
+    feedback) so compression noise does not bias the optimiser;
+  * ``topk_compress / topk_decompress`` — per-leaf magnitude top-k
+    sparsification (k = ratio * size) with error feedback; the
+    ``CompressionState`` carries the residual between steps.
+
+``compressed_psum`` shows the intended wiring inside a shard_map
+data-parallel step; the unit tests verify the error-feedback invariant
+(sum over steps of decompressed == sum of true gradients in the limit)
+and end-to-end convergence on a quadratic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CompressionState:
+    residual: Any  # pytree matching grads
+
+    @staticmethod
+    def zeros_like(grads) -> "CompressionState":
+        return CompressionState(jax.tree.map(
+            lambda g: jnp.zeros_like(g, dtype=jnp.float32), grads))
+
+
+# -- bf16 with error feedback -------------------------------------------------
+
+
+def bf16_compress(grads, state: CompressionState):
+    def comp(g, r):
+        total = g.astype(jnp.float32) + r
+        q = total.astype(jnp.bfloat16)
+        return q, total - q.astype(jnp.float32)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(state.residual)
+    pairs = [comp(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([p[0] for p in pairs]),
+            CompressionState(treedef.unflatten([p[1] for p in pairs])))
+
+
+def bf16_decompress(payload):
+    return jax.tree.map(lambda q: q.astype(jnp.float32), payload)
+
+
+# -- top-k with error feedback ------------------------------------------------
+
+
+def topk_compress(grads, state: CompressionState, ratio: float = 0.1):
+    """Returns ((values, indices) pytree, new state)."""
+
+    def comp(g, r):
+        total = g.astype(jnp.float32) + r
+        flat = total.reshape(-1)
+        k = max(1, int(flat.size * ratio))
+        vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+        del vals
+        picked = flat[idx]
+        kept = jnp.zeros_like(flat).at[idx].set(picked)
+        return (picked, idx), total - kept.reshape(total.shape)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(state.residual)
+    pairs = [comp(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([p[0] for p in pairs]),
+            CompressionState(treedef.unflatten([p[1] for p in pairs])))
+
+
+def topk_decompress(payload, like):
+    """(values, indices) pytree -> dense pytree shaped like ``like``."""
+    flat_p, treedef = jax.tree.flatten(
+        payload, is_leaf=lambda x: isinstance(x, tuple))
+    flat_l = treedef.flatten_up_to(like)
+    out = []
+    for (vals, idx), tpl in zip(flat_p, flat_l):
+        dense = jnp.zeros(tpl.size, jnp.float32).at[idx].set(vals)
+        out.append(dense.reshape(tpl.shape))
+    return treedef.unflatten(out)
+
+
+def compression_ratio(payload, like) -> float:
+    """Wire bytes of payload / wire bytes of dense f32 grads."""
+    def nbytes(x):
+        return x.size * x.dtype.itemsize
+
+    dense = sum(nbytes(l) for l in jax.tree.leaves(like))
+    wire = sum(nbytes(l) for l in jax.tree.leaves(payload))
+    return wire / dense
+
+
+# -- shard_map wiring ---------------------------------------------------------
+
+
+def compressed_psum_step(grads, state: CompressionState, axis: str,
+                         mode: str = "bf16"):
+    """All-reduce grads over ``axis`` with compression + error feedback.
+
+    Call INSIDE shard_map: each rank compresses its local grads, the
+    payload is psum'd (bf16) or psum-of-dense-from-topk, and the dense
+    f32 mean comes back.  (top-k indices differ per rank, so the
+    exchanged object is the scattered dense tensor — on real fabric
+    this becomes a gather of (idx, val) pairs; the wire-cost accounting
+    in benchmarks uses ``compression_ratio``.)
+    """
+    n = jax.lax.psum(1, axis)
+    if mode == "bf16":
+        payload, new_state = bf16_compress(grads, state)
+        summed = jax.tree.map(
+            lambda q: jax.lax.psum(q.astype(jnp.float32), axis), payload)
+    else:
+        payload, new_state = topk_compress(grads, state)
+        dense = topk_decompress(payload, grads)
+        summed = jax.tree.map(lambda d: jax.lax.psum(d, axis), dense)
+    mean = jax.tree.map(lambda s: s / n, summed)
+    return mean, new_state

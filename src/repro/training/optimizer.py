@@ -1,0 +1,108 @@
+"""Optimizers on raw param pytrees (AdamW, SGD-momentum, Adafactor-lite).
+
+No optax in this container; these are small, fully-sharded-friendly
+implementations: every optimizer state leaf has the same shape as its
+param leaf, so FSDP-style sharding rules apply transparently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+OptState = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], OptState]
+    update: Callable[[Params, Params, OptState], tuple[Params, OptState]]
+    # update(grads, params, state) -> (new_params, new_state)
+
+
+def _tree_zeros(params, dtype=None):
+    return jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+def adamw(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          warmup_steps: int = 0, state_dtype=jnp.float32) -> Optimizer:
+    """AdamW with optional linear warmup; moments in f32 by default."""
+
+    def init(params):
+        return {
+            "mu": _tree_zeros(params, state_dtype),
+            "nu": _tree_zeros(params, state_dtype),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, params, state):
+        step = state["step"] + 1
+        sched = jnp.where(
+            warmup_steps > 0,
+            jnp.minimum(1.0, step.astype(jnp.float32) / max(warmup_steps, 1)),
+            1.0)
+        lr_t = lr * sched
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, p, mu, nu):
+            g32 = g.astype(state_dtype)
+            mu_n = b1 * mu + (1 - b1) * g32
+            nu_n = b2 * nu + (1 - b2) * (g32 * g32)
+            mhat = mu_n / bc1
+            vhat = nu_n / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(state_dtype)
+            return (p.astype(state_dtype) - lr_t * delta).astype(p.dtype), mu_n, nu_n
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_p = treedef.flatten_up_to(params)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        flat_nu = treedef.flatten_up_to(state["nu"])
+        out = [upd(g, p, m, n) for g, p, m, n in zip(flat_g, flat_p, flat_mu, flat_nu)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_mu = treedef.unflatten([o[1] for o in out])
+        new_nu = treedef.unflatten([o[2] for o in out])
+        return new_p, {"mu": new_mu, "nu": new_nu, "step": step}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float = 0.1, momentum: float = 0.9,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"vel": _tree_zeros(params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, params, state):
+        def upd(g, p, v):
+            g = g + weight_decay * p if weight_decay else g
+            v_n = momentum * v + g
+            return (p - lr * v_n).astype(p.dtype), v_n
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_p = treedef.flatten_up_to(params)
+        flat_v = treedef.flatten_up_to(state["vel"])
+        out = [upd(g, p, v) for g, p, v in zip(flat_g, flat_p, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_v = treedef.unflatten([o[1] for o in out])
+        return new_p, {"vel": new_v, "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm

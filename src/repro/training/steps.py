@@ -1,0 +1,189 @@
+"""Per-family train/serve step builders.
+
+Every step is a pure function ``(state, batch[, rng]) -> (state, metrics)``
+or ``(params, inputs) -> outputs`` suitable for ``jax.jit`` +
+``.lower().compile()`` on any mesh — the dry-run lowers exactly these.
+
+State layout: ``{"params": ..., "opt": ..., "step": int32}`` (plain
+dicts so sharding rules apply by path).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import detector as det_mod
+from repro.models import diffusion as diff_mod
+from repro.models import transformer as lm_mod
+from repro.models import vision as vis_mod
+from repro.training import optimizer as opt_mod
+
+
+def make_state(params, optimizer: opt_mod.Optimizer):
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _finish(state, optimizer, grads, loss, extra=None):
+    grads, gnorm = opt_mod.clip_by_global_norm(grads, 1.0)
+    new_params, new_opt = optimizer.update(grads, state["params"], state["opt"])
+    metrics = {"loss": loss, "grad_norm": gnorm, "step": state["step"] + 1}
+    if extra:
+        metrics.update(extra)
+    return ({"params": new_params, "opt": new_opt, "step": state["step"] + 1},
+            metrics)
+
+
+# -- LM ---------------------------------------------------------------------
+
+
+def lm_train_step(cfg: lm_mod.TransformerConfig,
+                  optimizer: opt_mod.Optimizer) -> Callable:
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_mod.lm_loss(p, batch, cfg))(state["params"])
+        return _finish(state, optimizer, grads, loss)
+
+    return step
+
+
+def lm_prefill_step(cfg: lm_mod.TransformerConfig, max_len: int) -> Callable:
+    def step(params, batch):
+        logits, cache = lm_mod.prefill(params, batch["tokens"], cfg, max_len)
+        return {"logits": logits, "k": cache.k, "v": cache.v,
+                "length": cache.length}
+
+    return step
+
+
+def lm_decode_step(cfg: lm_mod.TransformerConfig) -> Callable:
+    def step(params, batch):
+        cache = lm_mod.KVCache(batch["cache_k"], batch["cache_v"],
+                               batch["cache_len"])
+        logits, new_cache = lm_mod.decode_step(params, batch["token"], cache, cfg)
+        return {"logits": logits, "k": new_cache.k, "v": new_cache.v,
+                "length": new_cache.length}
+
+    return step
+
+
+# -- vision -------------------------------------------------------------------
+
+_VIS_APPLY = {
+    vis_mod.ViTConfig: vis_mod.vit_apply,
+    vis_mod.ConvNeXtConfig: vis_mod.convnext_apply,
+    vis_mod.ResNetConfig: vis_mod.resnet_apply,
+}
+
+
+def vision_apply(params, images, cfg, train=False):
+    return _VIS_APPLY[type(cfg)](params, images, cfg, train)
+
+
+def vision_train_step(cfg, optimizer: opt_mod.Optimizer) -> Callable:
+    def step(state, batch):
+        def loss_fn(p):
+            logits, new_p = vision_apply(p, batch["images"], cfg, train=True)
+            ll = jax.nn.log_softmax(logits, axis=-1)
+            loss = -jnp.mean(
+                jnp.take_along_axis(ll, batch["labels"][:, None], axis=-1))
+            acc = jnp.mean(
+                (jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+            return loss, (acc, new_p)
+
+        (loss, (acc, new_p)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        new_state, metrics = _finish(state, optimizer, grads, loss,
+                                     {"accuracy": acc})
+        # carry refreshed BatchNorm running stats (ResNet); grads step wins
+        # for trainables, stats only exist in BN leaves marked by key name.
+        if isinstance(cfg, vis_mod.ResNetConfig):
+            def merge(new_stats, trained):
+                return trained  # trainables already updated; stats via map below
+            del merge
+            new_state["params"] = _merge_bn_stats(new_state["params"], new_p)
+        return new_state, metrics
+
+    return step
+
+
+def _merge_bn_stats(trained, updated):
+    """Take 'mean'/'var' leaves from ``updated``, everything else trained."""
+
+    def walk(t, u):
+        if isinstance(t, dict):
+            return {k: (u[k] if k in ("mean", "var") else walk(t[k], u[k]))
+                    for k in t}
+        if isinstance(t, list):
+            return [walk(a, b) for a, b in zip(t, u)]
+        return t
+
+    return walk(trained, updated)
+
+
+def vision_serve_step(cfg) -> Callable:
+    def step(params, batch):
+        logits, _ = vision_apply(params, batch["images"], cfg, train=False)
+        return {"logits": logits}
+
+    return step
+
+
+# -- diffusion ----------------------------------------------------------------
+
+
+def diffusion_train_step(cfg, optimizer: opt_mod.Optimizer) -> Callable:
+    is_flux = isinstance(cfg, diff_mod.MMDiTConfig)
+
+    def step(state, batch):
+        rng = jax.random.PRNGKey(batch["seed"])
+        rng = jax.random.fold_in(rng, state["step"])
+        loss_fn = (lambda p: diff_mod.flux_rf_loss(p, batch, cfg, rng)) if is_flux \
+            else (lambda p: diff_mod.unet_eps_loss(p, batch, cfg, rng))
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        return _finish(state, optimizer, grads, loss)
+
+    return step
+
+
+def diffusion_denoise_step(cfg) -> Callable:
+    """One sampler step (a ``steps``-step generation calls this in a loop)."""
+    is_flux = isinstance(cfg, diff_mod.MMDiTConfig)
+
+    def step(params, batch):
+        if is_flux:
+            x = diff_mod.flux_euler_step(
+                params, batch["latents"], batch["t"], batch["dt"],
+                batch["ctx"], batch["pooled"], batch["guidance"], cfg)
+        else:
+            x = diff_mod.unet_ddim_step(
+                params, batch["latents"], batch["t"], batch["t_prev"],
+                batch["ctx"], batch["add_emb"], cfg)
+        return {"latents": x}
+
+    return step
+
+
+# -- detector -----------------------------------------------------------------
+
+
+def detector_train_step(cfg: det_mod.DetectorConfig,
+                        optimizer: opt_mod.Optimizer) -> Callable:
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: det_mod.detection_loss(p, batch, cfg))(state["params"])
+        return _finish(state, optimizer, grads, loss)
+
+    return step
+
+
+def detector_serve_step(cfg: det_mod.DetectorConfig) -> Callable:
+    def step(params, batch):
+        outs = det_mod.apply(params, batch["images"], cfg)
+        boxes, scores, cls = det_mod.decode(outs, cfg)
+        return {"boxes": boxes, "scores": scores, "classes": cls}
+
+    return step

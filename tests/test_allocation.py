@@ -1,0 +1,83 @@
+"""Algorithm 2 (latency-constrained allocation): exactness + properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import allocation
+
+
+def rand_instance(rng, m, r):
+    acc = rng.uniform(0, 1, (m, r))
+    acc[0] = 0.0
+    d_pre = rng.uniform(0.01, 0.2, (m, r))
+    d_pre[0] = 0.0
+    d_inf = rng.uniform(0.02, 0.6, (m, r))
+    d_inf[0] = 0.0
+    return acc, d_pre, d_inf
+
+
+class TestExactness:
+    @given(st.integers(0, 10_000), st.integers(2, 4), st.integers(1, 5),
+           st.floats(0.1, 3.0))
+    @settings(max_examples=60, deadline=None)
+    def test_matches_bruteforce(self, seed, m, r, budget):
+        rng = np.random.default_rng(seed)
+        acc, d_pre, d_inf = rand_instance(rng, m, r)
+        got = allocation.allocate(acc, d_pre, d_inf, budget)
+        want = allocation.allocate_bruteforce(acc, d_pre, d_inf, budget)
+        assert (got is None) == (want is None)
+        if got is not None:
+            assert np.isclose(got.value, want.value, atol=1e-9)
+
+    def test_skip_always_feasible(self):
+        rng = np.random.default_rng(0)
+        acc, d_pre, d_inf = rand_instance(rng, 4, 6)
+        plan = allocation.allocate(acc, d_pre, d_inf, budget=1e-9)
+        assert plan is not None
+        assert all(m == 0 for m in plan.models)
+        assert plan.value == 0.0
+
+
+class TestProperties:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_budget_respected(self, seed):
+        rng = np.random.default_rng(seed)
+        acc, d_pre, d_inf = rand_instance(rng, 5, 6)
+        budget = float(rng.uniform(0.2, 2.0))
+        plan = allocation.allocate(acc, d_pre, d_inf, budget)
+        assert plan is not None
+        lat = allocation.plan_latency(plan.models, d_pre, d_inf)
+        assert lat <= budget + 1e-9
+        assert np.isclose(lat, plan.t_done, atol=1e-9)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_monotone_in_budget(self, seed):
+        rng = np.random.default_rng(seed)
+        acc, d_pre, d_inf = rand_instance(rng, 4, 5)
+        v_prev = -1.0
+        for budget in (0.2, 0.5, 1.0, 2.0, 5.0):
+            plan = allocation.allocate(acc, d_pre, d_inf, budget)
+            assert plan.value >= v_prev - 1e-12
+            v_prev = plan.value
+
+    def test_pipelining_beats_serial(self):
+        # pipelined latency never exceeds the serial sum
+        rng = np.random.default_rng(7)
+        acc, d_pre, d_inf = rand_instance(rng, 4, 6)
+        models = (1, 2, 3, 1, 2, 3)
+        pipelined = allocation.plan_latency(models, d_pre, d_inf)
+        serial = sum(d_pre[m, j] + d_inf[m, j] for j, m in enumerate(models))
+        assert pipelined <= serial + 1e-12
+
+    def test_dominance_pruning_keeps_frontier(self):
+        plans = [
+            allocation.Plan(1.0, 1.0, 2.0, (1,)),
+            allocation.Plan(1.0, 2.0, 3.0, (2,)),  # dominated
+            allocation.Plan(0.5, 0.5, 1.0, (3,)),  # cheaper, kept
+        ]
+        kept = allocation._prune_dominated(plans)
+        assert len(kept) == 2
+        assert {p.models for p in kept} == {(1,), (3,)}

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step
+on CPU, asserting output shapes and no NaNs (deliverable f)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cfgbase
+from repro.models import diffusion as diff_mod
+from repro.models import transformer as lm_mod
+from repro.models import vision as vis_mod
+from repro.training import optimizer as opt_mod
+from repro.training import steps as steps_mod
+
+RNG = jax.random.PRNGKey(0)
+OPT = opt_mod.adamw(lr=1e-3)
+
+
+def _finite(tree):
+    return all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(tree)
+               if jnp.issubdtype(l.dtype, jnp.floating))
+
+
+@pytest.mark.parametrize("arch_id", cfgbase.list_archs())
+def test_smoke_train_step(arch_id):
+    arch = cfgbase.get_arch(arch_id)
+    cfg = arch.smoke
+    if arch.family == "lm":
+        params = lm_mod.init_params(RNG, cfg)
+        step = steps_mod.lm_train_step(cfg, OPT)
+        batch = {
+            "tokens": jax.random.randint(RNG, (2, 16), 0, cfg.vocab_size),
+            "targets": jax.random.randint(RNG, (2, 16), 0, cfg.vocab_size),
+        }
+        state = steps_mod.make_state(params, OPT)
+        state, metrics = jax.jit(step)(state, batch)
+        assert np.isfinite(float(metrics["loss"]))
+        assert _finite(state["params"])
+    elif arch.family == "vision":
+        init = {vis_mod.ViTConfig: vis_mod.vit_init,
+                vis_mod.ConvNeXtConfig: vis_mod.convnext_init,
+                vis_mod.ResNetConfig: vis_mod.resnet_init}[type(cfg)]
+        params = init(RNG, cfg)
+        step = steps_mod.vision_train_step(cfg, OPT)
+        batch = {
+            "images": jax.random.normal(RNG, (2, cfg.img_res, cfg.img_res, 3)),
+            "labels": jax.random.randint(RNG, (2,), 0, cfg.n_classes),
+        }
+        state = steps_mod.make_state(params, OPT)
+        state, metrics = jax.jit(step)(state, batch)
+        assert np.isfinite(float(metrics["loss"]))
+        assert 0.0 <= float(metrics["accuracy"]) <= 1.0
+    else:  # diffusion
+        is_flux = isinstance(cfg, diff_mod.MMDiTConfig)
+        init = diff_mod.mmdit_init if is_flux else diff_mod.unet_init
+        params = init(RNG, cfg)
+        step = steps_mod.diffusion_train_step(cfg, OPT)
+        r = cfg.latent_res
+        batch = {"latents": jax.random.normal(RNG, (2, r, r, cfg.latent_ch)),
+                 "seed": jnp.asarray(0, jnp.int32)}
+        if is_flux:
+            batch["ctx"] = jax.random.normal(RNG, (2, cfg.n_ctx_tokens, cfg.d_ctx))
+            batch["pooled"] = jax.random.normal(RNG, (2, cfg.d_pooled))
+        else:
+            batch["ctx"] = jax.random.normal(RNG, (2, cfg.n_ctx_tokens, cfg.ctx_dim))
+            batch["add_emb"] = jax.random.normal(RNG, (2, cfg.d_add))
+        state = steps_mod.make_state(params, OPT)
+        state, metrics = jax.jit(step)(state, batch)
+        assert np.isfinite(float(metrics["loss"]))
+        assert _finite(state["params"])
+
+
+@pytest.mark.parametrize("arch_id", ["granite_34b", "smollm_135m",
+                                     "mixtral_8x22b", "qwen3_moe_235b_a22b"])
+def test_smoke_serve_path(arch_id):
+    """Prefill + one decode step on the reduced LM config."""
+    arch = cfgbase.get_arch(arch_id)
+    cfg = arch.smoke
+    params = lm_mod.init_params(RNG, cfg)
+    toks = jax.random.randint(RNG, (2, 12), 0, cfg.vocab_size)
+    logits, cache = lm_mod.prefill(params, toks, cfg, max_len=24)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache2 = lm_mod.decode_step(params, nxt, cache, cfg)
+    assert logits2.shape == (2, cfg.vocab_size)
+    assert int(cache2.length) == 13
+
+
+def test_registry_covers_all_cells():
+    cells = list(__import__("repro.launch.cells", fromlist=["iter_cells"])
+                 .iter_cells())
+    assert len(cells) == 40  # 10 archs x 4 shapes
+    skipped = [c for c in cells if c[2] is not None]
+    # exactly the three pure-full-attention LMs skip long_500k
+    assert sorted(c[0] for c in skipped) == [
+        "granite_34b", "qwen3_moe_235b_a22b", "smollm_135m"]
+    assert all(c[1] == "long_500k" for c in skipped)
+
+
+def test_full_configs_match_assignment():
+    """Exact assigned hyperparameters (spot checks per arch)."""
+    a = cfgbase.get_arch("granite_34b").config
+    assert (a.n_layers, a.d_model, a.n_heads, a.n_kv_heads, a.d_ff,
+            a.vocab_size) == (88, 6144, 48, 1, 24576, 49152)
+    m = cfgbase.get_arch("mixtral_8x22b").config
+    assert (m.n_layers, m.d_model, m.n_heads, m.n_kv_heads, m.n_experts,
+            m.moe_top_k, m.d_ff_expert, m.vocab_size) == (
+        56, 6144, 48, 8, 8, 2, 16384, 32768)
+    assert m.window is not None  # SWA per assignment
+    q = cfgbase.get_arch("qwen3_moe_235b_a22b").config
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads, q.n_experts,
+            q.moe_top_k, q.d_ff_expert, q.vocab_size) == (
+        94, 4096, 64, 4, 128, 8, 1536, 151936)
+    s = cfgbase.get_arch("smollm_135m").config
+    assert (s.n_layers, s.d_model, s.n_heads, s.n_kv_heads, s.d_ff) == (
+        30, 576, 9, 3, 1536)
+    f = cfgbase.get_arch("flux_dev").config
+    assert (f.latent_res, f.n_double_blocks, f.n_single_blocks, f.d_model,
+            f.n_heads) == (128, 19, 38, 3072, 24)
+    u = cfgbase.get_arch("unet_sdxl").config
+    assert (u.ch, tuple(u.ch_mult), u.n_res_blocks,
+            tuple(u.transformer_depth), u.ctx_dim) == (
+        320, (1, 2, 4), 2, (1, 2, 10), 2048)
+    c = cfgbase.get_arch("convnext_b").config
+    assert (tuple(c.depths), tuple(c.dims)) == ((3, 3, 27, 3),
+                                                (128, 256, 512, 1024))
+    r152 = cfgbase.get_arch("resnet_152").config
+    assert tuple(r152.depths) == (3, 8, 36, 3)
+    r50 = cfgbase.get_arch("resnet_50").config
+    assert tuple(r50.depths) == (3, 4, 6, 3)
+    v = cfgbase.get_arch("vit_b16").config
+    assert (v.patch, v.n_layers, v.d_model, v.n_heads, v.d_ff) == (
+        16, 12, 768, 12, 3072)

@@ -1,0 +1,227 @@
+"""Model-zoo consistency: attention impls, prefill/decode, MoE, families."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import detector as det_mod
+from repro.models import diffusion as diff_mod
+from repro.models import transformer as T
+from repro.models import vision as V
+
+RNG = jax.random.PRNGKey(0)
+
+
+def tiny_lm(**kw):
+    base = dict(name="tiny", n_layers=3, d_model=64, n_heads=4, n_kv_heads=2,
+                d_head=16, d_ff=128, vocab_size=97, attention_impl="chunked",
+                attn_chunk=16, ce_chunk=8, remat=False)
+    base.update(kw)
+    return T.TransformerConfig(**base)
+
+
+class TestTransformer:
+    def test_loss_near_uniform_at_init(self):
+        cfg = tiny_lm()
+        p = T.init_params(RNG, cfg)
+        toks = jax.random.randint(RNG, (2, 24), 0, cfg.vocab_size)
+        loss = T.lm_loss(p, {"tokens": toks, "targets": toks}, cfg)
+        assert abs(float(loss) - np.log(cfg.vocab_size)) < 0.5
+
+    def test_attention_impls_agree(self):
+        cfg_c = tiny_lm(attention_impl="chunked")
+        cfg_n = tiny_lm(attention_impl="naive")
+        cfg_p = tiny_lm(attention_impl="pallas", d_head=32,
+                        n_heads=2, n_kv_heads=2)
+        p = T.init_params(RNG, cfg_c)
+        toks = jax.random.randint(RNG, (2, 32), 0, 97)
+        h_c, _ = T.forward(p, toks, cfg_c)
+        h_n, _ = T.forward(p, toks, cfg_n)
+        np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_n),
+                                   atol=5e-5)
+        p2 = T.init_params(RNG, cfg_p)
+        h_p, _ = T.forward(p2, toks, cfg_p)
+        cfg_p_ref = dataclasses.replace(cfg_p, attention_impl="naive")
+        h_pr, _ = T.forward(p2, toks, cfg_p_ref)
+        np.testing.assert_allclose(np.asarray(h_p), np.asarray(h_pr),
+                                   atol=5e-5)
+
+    @pytest.mark.parametrize("window", [None, 8])
+    def test_decode_matches_forward(self, window):
+        cfg = tiny_lm(attention_impl="naive", window=window)
+        p = T.init_params(RNG, cfg)
+        toks = jax.random.randint(RNG, (2, 20), 0, 97)
+        full = T.logits_fn(p, toks, cfg)
+        lg, cache = T.prefill(p, toks[:, :-1], cfg, max_len=32)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, -2]),
+                                   atol=5e-5)
+        lg2, cache2 = T.decode_step(p, toks[:, -1], cache, cfg)
+        np.testing.assert_allclose(np.asarray(lg2), np.asarray(full[:, -1]),
+                                   atol=5e-5)
+        assert int(cache2.length) == 20
+
+    def test_moe_decode_matches_forward_without_drops(self):
+        cfg = tiny_lm(attention_impl="naive", moe=True, n_experts=8,
+                      moe_top_k=2, d_ff=0, d_ff_expert=48,
+                      capacity_factor=16.0)
+        p = T.init_params(RNG, cfg)
+        toks = jax.random.randint(RNG, (2, 16), 0, 97)
+        full = T.logits_fn(p, toks, cfg)
+        _, cache = T.prefill(p, toks[:, :-1], cfg, max_len=24)
+        lg, _ = T.decode_step(p, toks[:, -1], cache, cfg)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, -1]),
+                                   atol=5e-5)
+
+    def test_moe_capacity_drops_bounded(self):
+        cfg = tiny_lm(moe=True, n_experts=4, moe_top_k=2, d_ff=0,
+                      d_ff_expert=32, capacity_factor=1.0)
+        p = T.init_params(RNG, cfg)
+        toks = jax.random.randint(RNG, (2, 16), 0, 97)
+        loss = T.lm_loss(p, {"tokens": toks, "targets": toks}, cfg)
+        assert np.isfinite(float(loss))
+
+    def test_swa_ring_buffer_wraps(self):
+        cfg = tiny_lm(attention_impl="naive", window=8)
+        p = T.init_params(RNG, cfg)
+        toks = jax.random.randint(RNG, (1, 12), 0, 97)
+        full = T.logits_fn(p, toks, cfg)
+        _, cache = T.prefill(p, toks[:, :4], cfg, max_len=8)
+        logits = None
+        for i in range(4, 12):
+            logits, cache = T.decode_step(p, toks[:, i], cache, cfg)
+            if i < 11:  # compare next-token logits vs full forward
+                np.testing.assert_allclose(
+                    np.asarray(logits), np.asarray(full[:, i]), atol=5e-5)
+        assert cache.k.shape[2] == 8  # cache stayed window-bounded
+
+
+class TestVision:
+    @pytest.mark.parametrize("family", ["vit", "convnext", "resnet"])
+    def test_forward_shapes_and_finite(self, family):
+        img = jax.random.normal(RNG, (2, 64, 64, 3))
+        if family == "vit":
+            cfg = V.ViTConfig("t", 64, 16, 2, 32, 4, 64, 10, remat=False)
+            p = V.vit_init(RNG, cfg)
+            logits, _ = V.vit_apply(p, img, cfg)
+        elif family == "convnext":
+            cfg = V.ConvNeXtConfig("t", 64, (2, 2, 2, 2), (16, 32, 64, 128),
+                                   10, remat=False)
+            p = V.convnext_init(RNG, cfg)
+            logits, _ = V.convnext_apply(p, img, cfg)
+        else:
+            cfg = V.ResNetConfig("t", 64, (2, 2, 2, 2), 16, 10, remat=False)
+            p = V.resnet_init(RNG, cfg)
+            logits, _ = V.resnet_apply(p, img, cfg, train=False)
+        assert logits.shape == (2, 10)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_resnet_bn_stats_update_only_in_train(self):
+        cfg = V.ResNetConfig("t", 32, (2, 2, 2, 2), 16, 10, remat=False)
+        p = V.resnet_init(RNG, cfg)
+        img = jax.random.normal(RNG, (2, 32, 32, 3)) * 3 + 1
+        _, p_train = V.resnet_apply(p, img, cfg, train=True)
+        _, p_eval = V.resnet_apply(p, img, cfg, train=False)
+        assert not np.allclose(np.asarray(p_train["bn_stem"]["mean"]),
+                               np.asarray(p["bn_stem"]["mean"]))
+        assert np.allclose(np.asarray(p_eval["bn_stem"]["mean"]),
+                           np.asarray(p["bn_stem"]["mean"]))
+
+
+class TestDiffusion:
+    def test_mmdit_velocity_shape(self):
+        cfg = diff_mod.MMDiTConfig("t", 8, 4, 2, 64, 4, 2, 3, 32, 8, 16,
+                                   remat=False)
+        p = diff_mod.mmdit_init(RNG, cfg)
+        v = diff_mod.mmdit_apply(
+            p, jax.random.normal(RNG, (2, 8, 8, 4)), jnp.array([0.2, 0.9]),
+            jax.random.normal(RNG, (2, 8, 32)),
+            jax.random.normal(RNG, (2, 16)), jnp.zeros(2), cfg)
+        assert v.shape == (2, 8, 8, 4) and bool(jnp.all(jnp.isfinite(v)))
+
+    def test_unet_eps_and_ddim(self):
+        cfg = diff_mod.UNetConfig("t", 16, 4, 32, (1, 2, 4), 2, (1, 1, 2),
+                                  24, 7, 20, 16, remat=False)
+        p = diff_mod.unet_init(RNG, cfg)
+        lat = jax.random.normal(RNG, (2, 16, 16, 4))
+        ctx = jax.random.normal(RNG, (2, 7, 24))
+        add = jax.random.normal(RNG, (2, 20))
+        loss = diff_mod.unet_eps_loss(
+            p, {"latents": lat, "ctx": ctx, "add_emb": add}, cfg, RNG)
+        assert np.isfinite(float(loss))
+        x = diff_mod.unet_ddim_step(p, lat, jnp.array([500., 500.]),
+                                    jnp.array([480., 480.]), ctx, add, cfg)
+        assert x.shape == lat.shape
+
+    def test_rf_loss_decreases_with_perfect_model(self):
+        # sanity: the rf loss of the zero-velocity model equals E|eps-x0|^2
+        cfg = diff_mod.MMDiTConfig("t", 8, 4, 2, 32, 4, 1, 1, 16, 4, 8,
+                                   remat=False)
+        p = diff_mod.mmdit_init(RNG, cfg)
+        lat = jnp.zeros((4, 8, 8, 4))
+        loss = diff_mod.flux_rf_loss(
+            p, {"latents": lat, "ctx": jnp.zeros((4, 4, 16)),
+                "pooled": jnp.zeros((4, 8))}, cfg, RNG)
+        assert 0.5 < float(loss) < 2.0  # ~E|eps|^2 = 1 for x0 = 0
+
+
+class TestDetector:
+    def test_ladder_flops_monotone(self):
+        flops = [det_mod.flops_per_image(c) for c in det_mod.PAPER_LADDER]
+        assert flops == sorted(flops)
+
+    def test_heads_and_decode(self):
+        cfg = det_mod.DetectorConfig("s", 64, 0.25, 0.34, n_classes=8)
+        p = det_mod.init_params(RNG, cfg)
+        outs = det_mod.apply(p, jax.random.normal(RNG, (2, 64, 64, 3)), cfg)
+        assert [o.shape[1] for o in outs] == [8, 4, 2]
+        boxes, scores, cls = det_mod.decode(outs, cfg, conf_threshold=0.0,
+                                            max_det=16)
+        assert boxes.shape == (2, 16, 4)
+        assert bool(jnp.all(scores >= 0))
+
+    def test_loss_finite(self):
+        from repro.data.pipeline import rasterize_targets
+
+        cfg = det_mod.DetectorConfig("s", 64, 0.25, 0.34, n_classes=8)
+        p = det_mod.init_params(RNG, cfg)
+        batch = {"images": jax.random.normal(RNG, (2, 64, 64, 3))}
+        batch.update({k: jnp.asarray(v) for k, v in
+                      rasterize_targets(cfg, 2).items()})
+        loss = det_mod.detection_loss(p, batch, cfg)
+        assert np.isfinite(float(loss))
+
+
+class TestBackboneDetector:
+    """Detection heads mounted on assigned vision backbones (the
+    beyond-paper ladder extension of DESIGN.md section 2)."""
+
+    @pytest.mark.parametrize("backbone", ["resnet", "convnext"])
+    def test_heads_and_decode(self, backbone):
+        if backbone == "resnet":
+            bb = V.ResNetConfig("bb", 64, (2, 2, 2, 2), 16, 10, remat=False)
+        else:
+            bb = V.ConvNeXtConfig("bb", 64, (2, 2, 2, 2),
+                                  (16, 32, 64, 128), 10, remat=False)
+        cfg = det_mod.BackboneDetectorConfig(
+            f"{backbone}-det", bb, input_size=64, n_classes=8, head_width=32)
+        p = det_mod.backbone_detector_init(RNG, cfg)
+        outs = det_mod.backbone_detector_apply(
+            p, jax.random.normal(RNG, (2, 64, 64, 3)), cfg)
+        assert [o.shape[1] for o in outs] == [8, 4, 2]
+        boxes, scores, cls = det_mod.decode(outs, cfg, conf_threshold=0.0,
+                                            max_det=8)
+        assert boxes.shape == (2, 8, 4)
+        assert bool(jnp.all(jnp.isfinite(boxes)))
+
+    def test_classifier_path_unchanged(self):
+        # the feature-pyramid refactor must not change classifier logits
+        bb = V.ResNetConfig("bb", 32, (2, 2, 2, 2), 16, 10, remat=False)
+        p = V.resnet_init(RNG, bb)
+        img = jax.random.normal(RNG, (2, 32, 32, 3))
+        logits, _ = V.resnet_apply(p, img, bb, train=False)
+        feats, _ = V.resnet_features(p, img, bb, train=False)
+        assert feats[-1].shape[-1] == 16 * 8 * 4
+        assert logits.shape == (2, 10)

@@ -1,0 +1,122 @@
+"""Spherical geometry: unit + property tests (hypothesis)."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sphere
+
+ANG = st.floats(-math.pi, math.pi, allow_nan=False)
+LAT = st.floats(-1.45, 1.45, allow_nan=False)
+FOV = st.floats(0.05, 1.5, allow_nan=False)
+
+
+def box(t, p, dt, dp):
+    return jnp.array([t, p, dt, dp], jnp.float32)
+
+
+class TestArea:
+    def test_formula(self):
+        b = box(0.3, -0.2, 0.5, 0.8)
+        assert np.isclose(float(sphere.sph_area(b)),
+                          2 * 0.5 * math.sin(0.4), atol=1e-6)
+
+    @given(ANG, LAT, FOV, FOV)
+    @settings(max_examples=50, deadline=None)
+    def test_rotation_invariant_and_positive(self, t, p, dt, dp):
+        a1 = float(sphere.sph_area(box(t, p, dt, dp)))
+        a2 = float(sphere.sph_area(box(0.0, 0.0, dt, dp)))
+        assert a1 > 0
+        assert np.isclose(a1, a2, rtol=1e-5)
+
+    def test_full_sphere_limit(self):
+        # dtheta=2pi, dphi=pi covers the sphere: area = 4pi
+        a = float(sphere.sph_area(box(0, 0, 2 * math.pi, math.pi)))
+        assert np.isclose(a, 4 * math.pi, rtol=1e-6)
+
+
+class TestIoU:
+    @given(ANG, LAT, FOV, FOV)
+    @settings(max_examples=50, deadline=None)
+    def test_self_iou_is_one(self, t, p, dt, dp):
+        b = box(t, p, dt, dp)
+        assert np.isclose(float(sphere.sph_iou(b, b)), 1.0, atol=1e-4)
+
+    @given(ANG, LAT, FOV, FOV, ANG, LAT, FOV, FOV)
+    @settings(max_examples=50, deadline=None)
+    def test_bounds_and_symmetry(self, t1, p1, dt1, dp1, t2, p2, dt2, dp2):
+        a, b = box(t1, p1, dt1, dp1), box(t2, p2, dt2, dp2)
+        i1 = float(sphere.sph_iou(a, b))
+        i2 = float(sphere.sph_iou(b, a))
+        assert -1e-6 <= i1 <= 1.0 + 1e-6
+        assert np.isclose(i1, i2, atol=2e-3)
+
+    def test_disjoint(self):
+        assert float(sphere.sph_iou(box(0, 0, 0.4, 0.4),
+                                    box(2.0, 0, 0.4, 0.4))) == 0.0
+
+    def test_seam_wrap(self):
+        # boxes straddling the +-pi seam must still overlap
+        a = box(math.pi - 0.05, 0.0, 0.3, 0.3)
+        b = box(-math.pi + 0.05, 0.0, 0.3, 0.3)
+        assert float(sphere.sph_iou(a, b)) > 0.3
+
+    def test_small_box_matches_planar(self):
+        # tiny equatorial boxes behave like planar IoU
+        a = box(0.0, 0.0, 0.02, 0.02)
+        b = box(0.01, 0.0, 0.02, 0.02)
+        planar = (0.01 * 0.02) / (2 * 0.02 * 0.02 - 0.01 * 0.02)
+        assert np.isclose(float(sphere.sph_iou(a, b)), planar, rtol=1e-2)
+
+
+class TestNMS:
+    def test_host_and_lax_agree(self):
+        rng = np.random.default_rng(0)
+        boxes = np.stack([
+            rng.uniform(-math.pi, math.pi, 40),
+            rng.uniform(-1.2, 1.2, 40),
+            rng.uniform(0.1, 0.8, 40),
+            rng.uniform(0.1, 0.8, 40)], axis=-1).astype(np.float32)
+        scores = rng.uniform(0, 1, 40).astype(np.float32)
+        k1 = sphere.sph_nms_host(boxes, scores)
+        k2 = np.asarray(sphere.sph_nms(jnp.asarray(boxes), jnp.asarray(scores)))
+        assert (k1 == k2).all()
+
+    def test_suppresses_duplicates(self):
+        b = np.array([[0, 0, 0.5, 0.5], [0.01, 0.0, 0.5, 0.5]], np.float32)
+        keep = sphere.sph_nms_host(b, np.array([0.9, 0.8]))
+        assert keep.tolist() == [True, False]
+
+    @given(st.integers(1, 30))
+    @settings(max_examples=20, deadline=None)
+    def test_survivors_mutually_nonoverlapping(self, n):
+        rng = np.random.default_rng(n)
+        boxes = np.stack([
+            rng.uniform(-math.pi, math.pi, n),
+            rng.uniform(-1.2, 1.2, n),
+            rng.uniform(0.1, 0.9, n),
+            rng.uniform(0.1, 0.9, n)], axis=-1).astype(np.float32)
+        scores = rng.uniform(0, 1, n).astype(np.float32)
+        keep = sphere.sph_nms_host(boxes, scores, 0.6)
+        surv = boxes[keep]
+        if len(surv) > 1:
+            iou = np.array(sphere.sph_iou_matrix(
+                jnp.asarray(surv), jnp.asarray(surv)))
+            np.fill_diagonal(iou, 0)
+            assert iou.max() <= 0.6 + 1e-5
+
+
+class TestBackProjection:
+    def test_pi_box_roundtrip(self):
+        # a PI-centred detection back-projects to a SphBB at the centre
+        rect = jnp.array([96.0, 96.0, 160.0, 160.0])  # centred in 256x256
+        bb = sphere.pi_box_to_sphbb(
+            rect, jnp.asarray(0.7), jnp.asarray(-0.3),
+            (math.radians(60), math.radians(60)), (256, 256))
+        bb = np.asarray(bb)
+        assert np.isclose(bb[0], 0.7, atol=1e-3)
+        assert np.isclose(bb[1], -0.3, atol=1e-3)
+        assert 0.05 < bb[2] < 0.5 and 0.05 < bb[3] < 0.5

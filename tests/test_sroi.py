@@ -1,0 +1,82 @@
+"""Algorithm 1 (SRoI prediction) behaviour + invariants."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sroi
+
+F = math.radians(60.0)
+
+
+def det(t, p, dt, dp, cat=0):
+    return sroi.Detection(np.array([t, p, dt, dp]), cat)
+
+
+class TestPrediction:
+    def test_empty_history(self):
+        assert sroi.predict_srois([]) == []
+
+    def test_nearby_objects_merge(self):
+        dets = [det(0.0, 0.0, 0.2, 0.2, 1), det(0.1, 0.05, 0.2, 0.2, 2)]
+        out = sroi.predict_srois(dets)
+        assert len(out) == 1
+        assert not out[0].special
+        assert np.isclose(out[0].fov[0], F)
+        assert np.isclose(out[0].alpha, 1.0)
+
+    def test_distant_objects_split(self):
+        dets = [det(0.0, 0.0, 0.2, 0.2), det(2.5, 0.0, 0.2, 0.2)]
+        out = sroi.predict_srois(dets)
+        assert len(out) == 2
+
+    def test_large_object_goes_special(self):
+        dets = [det(0.0, 0.0, 1.8, 1.5, 5)]
+        out = sroi.predict_srois(dets, gamma=1.1)
+        assert len(out) == 1
+        s = out[0]
+        assert s.special
+        # area scaled by gamma: fov scaled by sqrt(gamma) per axis
+        assert np.isclose(s.fov[0], 1.8 * math.sqrt(1.1), rtol=1e-6)
+        assert np.isclose(s.alpha, 1.0)
+
+    def test_seam_cluster_merges(self):
+        dets = [det(math.pi - 0.05, 0.0, 0.1, 0.1),
+                det(-math.pi + 0.05, 0.0, 0.1, 0.1)]
+        out = sroi.predict_srois(dets)
+        assert len(out) == 1  # cluster must not split on the ERP seam
+
+    @given(st.integers(0, 1000), st.integers(1, 20))
+    @settings(max_examples=40, deadline=None)
+    def test_invariants(self, seed, n):
+        rng = np.random.default_rng(seed)
+        dets = [det(rng.uniform(-math.pi, math.pi), rng.uniform(-1.2, 1.2),
+                    rng.uniform(0.05, 2.0), rng.uniform(0.05, 1.6),
+                    int(rng.integers(0, 80))) for _ in range(n)]
+        out = sroi.predict_srois(dets)
+        # every object lands in exactly one SRoI
+        assert sum(len(s.objects) for s in out) == n
+        # alphas sum to 1
+        assert np.isclose(sum(s.alpha for s in out), 1.0)
+        for s in out:
+            # ccv is a distribution over the SRoI's objects
+            assert np.isclose(s.ccv.sum(), 1.0)
+            if not s.special:
+                # regular SRoIs are f x f
+                assert np.isclose(s.fov[0], F) and np.isclose(s.fov[1], F)
+                # member objects' centres lie within the merged extent
+                for o in s.objects:
+                    dlon = abs((o.box[0] - s.center[0] + math.pi)
+                               % (2 * math.pi) - math.pi)
+                    assert dlon <= F / 2 + 1e-9
+
+
+class TestCCV:
+    def test_size_levels(self):
+        # tiny object -> small bucket; huge -> large bucket
+        tiny = det(0, 0, 0.02, 0.02, 3)
+        huge = det(0, 0, 1.5, 1.2, 3)
+        ccv = sroi.compute_ccv([tiny, huge], 80, 0.0044, 0.0354)
+        assert ccv[0 * 80 + 3] == 0.5  # small x cat 3
+        assert ccv[2 * 80 + 3] == 0.5  # large x cat 3

@@ -1,0 +1,181 @@
+"""Substrate tests: optimizer, compression, checkpoint, elastic, pipeline."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import CheckpointManager, mesh_signature
+from repro.data.pipeline import Prefetcher, lm_batches
+from repro.distributed import elastic
+from repro.training import compression as comp
+from repro.training import optimizer as opt_mod
+
+
+class TestOptimizer:
+    def test_adamw_converges_on_quadratic(self):
+        opt = opt_mod.adamw(lr=0.1)
+        params = {"w": jnp.array([3.0, -2.0])}
+        state = opt.init(params)
+        target = jnp.array([1.0, 1.0])
+        for _ in range(200):
+            grads = {"w": 2 * (params["w"] - target)}
+            params, state = opt.update(grads, params, state)
+        np.testing.assert_allclose(np.asarray(params["w"]), [1.0, 1.0],
+                                   atol=1e-2)
+
+    def test_sgd_momentum(self):
+        opt = opt_mod.sgd(lr=0.05, momentum=0.9)
+        params = {"w": jnp.array(4.0)}
+        state = opt.init(params)
+        for _ in range(300):
+            params, state = opt.update({"w": 2 * params["w"]}, params, state)
+        assert abs(float(params["w"])) < 1e-2
+
+    def test_clip_by_global_norm(self):
+        grads = {"a": jnp.full((4,), 100.0)}
+        clipped, norm = opt_mod.clip_by_global_norm(grads, 1.0)
+        assert float(norm) == 200.0
+        assert np.isclose(float(opt_mod.global_norm(clipped)), 1.0, rtol=1e-5)
+
+
+class TestCompression:
+    def test_bf16_error_feedback_unbiased(self):
+        grads = {"w": jnp.array([1e-4, 1.0, 3.14159])}
+        state = comp.CompressionState.zeros_like(grads)
+        acc = jnp.zeros(3)
+        for _ in range(50):
+            payload, state = comp.bf16_compress(grads, state)
+            acc = acc + comp.bf16_decompress(payload)["w"]
+        # mean of decompressed equals the true gradient (error feedback)
+        np.testing.assert_allclose(np.asarray(acc) / 50,
+                                   np.asarray(grads["w"]), rtol=1e-2)
+
+    def test_topk_roundtrip_and_ratio(self):
+        rng = np.random.default_rng(0)
+        grads = {"w": jnp.asarray(rng.standard_normal(1000).astype(np.float32))}
+        state = comp.CompressionState.zeros_like(grads)
+        payload, state = comp.topk_compress(grads, state, ratio=0.1)
+        dense = comp.topk_decompress(payload, grads)
+        # only k entries nonzero; they match the largest magnitudes
+        nz = np.count_nonzero(np.asarray(dense["w"]))
+        assert nz == 100
+        assert comp.compression_ratio(payload, grads) < 0.25
+
+    def test_topk_error_feedback_conservation(self):
+        # exact EF invariant: cumulative decompressed + residual ==
+        # cumulative true gradient (nothing is ever lost, only delayed)
+        grads = {"w": jnp.array([10.0, 0.1, -3.0, 0.02])}
+        state = comp.CompressionState.zeros_like(grads)
+        total = jnp.zeros(4)
+        n = 30
+        for _ in range(n):
+            payload, state = comp.topk_compress(grads, state, ratio=0.25)
+            total = total + comp.topk_decompress(payload, grads)["w"]
+        np.testing.assert_allclose(
+            np.asarray(total + state.residual["w"]),
+            np.asarray(grads["w"]) * n, rtol=1e-5)
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep_n=2)
+        state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+                 "step": jnp.asarray(7)}
+        mgr.save(7, state, {"shape": [1, 1], "axes": ["data", "model"]})
+        assert mgr.latest_step() == 7
+        restored = mgr.restore(7, state)
+        np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                      np.asarray(state["params"]["w"]))
+
+    def test_retention_gc(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep_n=2)
+        state = {"w": jnp.zeros(3)}
+        for s in (1, 2, 3, 4):
+            mgr.save(s, state)
+        assert mgr.steps() == [3, 4]
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        state = {"w": jnp.ones((32, 32))}
+        mgr.save_async(11, state)
+        mgr.wait()
+        assert mgr.latest_step() == 11
+
+    def test_crash_leaves_no_partial_commit(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        # simulate a crash: a stale .tmp dir must be ignored and reused
+        (tmp_path / "step_5.tmp").mkdir()
+        (tmp_path / "step_5.tmp" / "garbage").write_text("x")
+        assert mgr.latest_step() is None
+        mgr.save(5, {"w": jnp.zeros(2)})
+        assert mgr.latest_step() == 5
+
+    def test_structure_mismatch_rejected(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(1, {"w": jnp.zeros(3)})
+        with pytest.raises(ValueError):
+            mgr.restore(1, {"w": jnp.zeros(3), "extra": jnp.zeros(1)})
+
+
+class TestElastic:
+    def test_failure_detection(self):
+        tr = elastic.HealthTracker(4, beat_interval=1.0, max_missed=2)
+        for t in range(5):
+            for h in (0, 1, 2):
+                tr.heartbeat(h, float(t), 1.0)
+            tr.tick(float(t))
+        assert tr.healthy() == [0, 1, 2]
+        assert 3 not in tr.healthy()
+
+    def test_straggler_detection(self):
+        tr = elastic.HealthTracker(4)
+        for h, t in [(0, 1.0), (1, 1.1), (2, 0.9), (3, 5.0)]:
+            tr.heartbeat(h, 0.0, t)
+        assert tr.stragglers() == [3]
+
+    def test_remesh_preserves_model_axis(self):
+        plan = elastic.remesh_plan((2, 16, 16), ("pod", "data", "model"), 300)
+        assert plan["shape"][2] == 16
+        assert plan["devices_used"] <= 300
+        assert plan["checkpoint_compatible"]
+
+    def test_remesh_single_pod_shrink(self):
+        plan = elastic.remesh_plan((16, 16), ("data", "model"), 200)
+        assert plan["shape"] == (8, 16)
+        assert plan["batch_scale"] == 0.5
+
+    def test_remesh_infeasible(self):
+        with pytest.raises(ValueError):
+            elastic.remesh_plan((16, 16), ("data", "model"), 8)
+
+    def test_straggler_policy(self):
+        pol = elastic.StragglerPolicy(margin=1.3)
+        out = pol.step({0: 1.0, 1: 1.05, 2: 0.95, 3: 4.0})
+        assert out["drop"] == [3]
+        assert np.isclose(out["grad_scale"], 4 / 3)
+
+
+class TestPipeline:
+    def test_prefetcher_order_and_completion(self):
+        items = list(Prefetcher(iter(range(10)), depth=3))
+        assert items == list(range(10))
+
+    def test_prefetcher_propagates_errors(self):
+        def gen():
+            yield 1
+            raise RuntimeError("boom")
+        it = Prefetcher(gen())
+        assert next(it) == 1
+        with pytest.raises(RuntimeError):
+            list(it)
+
+    def test_lm_batches_learnable(self):
+        gen = lm_batches(vocab=17, batch=4, seq=8, n_batches=3)
+        batches = list(gen)
+        assert len(batches) == 3
+        assert batches[0]["tokens"].shape == (4, 8)
+        # targets are the shifted stream (teacher forcing layout)
+        assert batches[0]["tokens"].dtype == np.int32
