@@ -6,12 +6,20 @@ reference paths that actually execute on this host.
 
 from __future__ import annotations
 
+import json
 import math
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# NMS bench sweep: rows-per-tick x boxes-per-row (pod-scale shapes)
+NMS_GRID = [(b, n) for n in (64, 512, 4096) for b in (1, 32)]
+# cap per-config host-loop probe rows so N=4096 stays minutes, not hours
+_NMS_HOST_PROBE_ELEMS = 1 << 26
+NMS_JSON_PATH = os.environ.get("BENCH_NMS_JSON", "BENCH_NMS.json")
 
 
 def _time(fn, *args, repeats=5) -> float:
@@ -61,8 +69,74 @@ def run(csv=print) -> dict:
     return out
 
 
+def nms_bench(csv=print, grid=None, json_path=NMS_JSON_PATH) -> dict:
+    """Per-stream host greedy NMS vs the batched subsystem.
+
+    Emits one CSV line per (B, N) plus a JSON file so future
+    ``BENCH_*.json`` snapshots can track the trajectory.  The host
+    baseline is the pre-refactor serving pattern — one
+    ``sph_nms_host`` call per stream — while the batched column is one
+    ``sph_nms_batch`` dispatch for the whole tick.  For configs whose
+    IoU tensor exceeds the probe cap the host loop is measured on a row
+    subset and extrapolated (recorded in the ``derived`` column — no
+    silent truncation).
+    """
+    from repro.core.sphere import sph_nms_batch, sph_nms_host
+
+    # TPU: the batched Pallas kernel; CPU: the XLA-compiled jnp IoU
+    # (Pallas-interpret is a correctness harness, not a fast path)
+    batched_backend = "device" if jax.default_backend() == "tpu" else "jit"
+    rng = np.random.default_rng(0)
+    entries = []
+    for b, n in (grid or NMS_GRID):
+        boxes = np.stack([
+            rng.uniform(-math.pi, math.pi, (b, n)),
+            rng.uniform(-1.2, 1.2, (b, n)),
+            rng.uniform(0.05, 0.6, (b, n)),
+            rng.uniform(0.05, 0.6, (b, n))], axis=-1).astype(np.float32)
+        scores = rng.uniform(0, 1, (b, n)).astype(np.float32)
+        repeats = 3 if n <= 512 else 1
+
+        keep_batch = sph_nms_batch(boxes, scores,
+                                   backend=batched_backend)  # warm/compile
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            sph_nms_batch(boxes, scores, backend=batched_backend)
+        t_batch = (time.perf_counter() - t0) / repeats * 1e6
+
+        probe_rows = max(1, min(b, _NMS_HOST_PROBE_ELEMS // max(n * n, 1)))
+        sph_nms_host(boxes[0], scores[0])  # warm numpy/backend init
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            for r in range(probe_rows):
+                sph_nms_host(boxes[r], scores[r])
+        t_host = (time.perf_counter() - t0) / repeats * 1e6 * (b / probe_rows)
+        derived = ("" if probe_rows == b
+                   else f"extrapolated_from_{probe_rows}_rows")
+
+        entry = dict(b=b, n=n, host_us=round(t_host, 1),
+                     batch_us=round(t_batch, 1),
+                     speedup=round(t_host / max(t_batch, 1e-9), 2),
+                     host_probe_rows=probe_rows,
+                     survivors=int(keep_batch.sum()))
+        entries.append(entry)
+        csv(f"kernels,nms_b{b}_n{n},us_per_tick_host,{t_host:.0f},{derived}")
+        csv(f"kernels,nms_b{b}_n{n},us_per_tick_batched,{t_batch:.0f},"
+            f"speedup={entry['speedup']}x")
+
+    out = {"bench": "spherical_nms", "backend": jax.default_backend(),
+           "batched_backend": batched_backend, "grid": entries}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        csv(f"kernels,nms_json,path,0,{json_path}")
+    return out
+
+
 def main():
-    return run()
+    out = run()
+    out["nms"] = nms_bench()
+    return out
 
 
 if __name__ == "__main__":

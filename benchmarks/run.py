@@ -25,6 +25,7 @@ def main() -> None:
     fig9_sensitivity.run()
     ablations.run()
     kernels_bench.run()
+    kernels_bench.nms_bench()
 
 
 if __name__ == "__main__":

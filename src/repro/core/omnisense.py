@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core import accuracy as acc_mod
 from repro.core import allocation, discovery, sroi
-from repro.core.sphere import sph_nms_host
+from repro.core.sphere import sph_nms_batch
 
 
 class LatencyModel(Protocol):
@@ -123,7 +123,14 @@ class OmniSenseLoop:
 
     # -- main entry --------------------------------------------------------
 
-    def process_frame(self, frame: np.ndarray) -> FrameResult:
+    def process_frame(self, frame: np.ndarray, *,
+                      defer_nms: bool = False) -> FrameResult:
+        """Run one frame.  With ``defer_nms=True`` the returned result
+        holds the RAW (pre-NMS) detections and the history is NOT yet
+        updated; the caller owns suppression and must hand the keep-mask
+        back via :meth:`finalize_detections` before the next frame.
+        ``PodServer`` uses this to suppress all streams finishing in a
+        tick with one batched ``sph_nms_batch`` dispatch."""
         t0 = time.perf_counter()
         self._frame_idx += 1
         explore_frame = (self.explore_every > 0
@@ -178,28 +185,53 @@ class OmniSenseLoop:
             planned_latency = min(self.budget_s,
                                   planned_latency + explore_cost)
 
-        # ---- post-processing: spherical NMS ----
-        t1 = time.perf_counter()
-        if detections:
-            boxes = np.stack([d.box for d in detections])
-            scores = np.array([d.score for d in detections])
-            keep = sph_nms_host(boxes, scores, self.nms_threshold)
-            detections = [d for d, k in zip(detections, keep) if k]
-        overhead_post = time.perf_counter() - t1
-
-        # ---- feed back into history ----
-        self._history.append(detections)
-        if len(self._history) > self.delta:
-            self._history = self._history[-self.delta :]
-
-        return FrameResult(
+        result = FrameResult(
             detections=detections,
             srois=srois,
             plan=plan,
             planned_latency=planned_latency,
-            overhead_s=overhead_alloc + overhead_post,
+            overhead_s=overhead_alloc,
             discovered=discovered,
         )
+        if defer_nms:
+            return result
+
+        # ---- post-processing: spherical NMS (single-row fast path of
+        # the batched subsystem) ----
+        t1 = time.perf_counter()
+        self.finalize_detections(result, self.nms_keep(detections))
+        result.overhead_s += time.perf_counter() - t1
+        return result
+
+    def nms_keep(self, detections: list[sroi.Detection]) -> np.ndarray | None:
+        """Keep-mask for one frame's detections at this stream's
+        threshold — the single-row fast path of ``sph_nms_batch``
+        (also used by ``PodServer`` when streams disagree on the
+        threshold and cannot share one padded batch)."""
+        if not detections:
+            return None
+        boxes = np.stack([d.box for d in detections])
+        scores = np.array([d.score for d in detections])
+        return sph_nms_batch(
+            boxes[None], scores[None], iou_threshold=self.nms_threshold)[0]
+
+    def finalize_detections(self, result: FrameResult,
+                            keep: np.ndarray | None) -> FrameResult:
+        """Apply an externally computed NMS keep-mask and commit the
+        surviving detections to the SRoI-prediction history.
+
+        ``keep`` is a (n_detections,) bool mask (``None`` means "no
+        detections this frame").  Must be called exactly once per
+        ``process_frame(..., defer_nms=True)`` result, in frame order,
+        so the detection feedback the predictor sees is identical to
+        the inline path."""
+        if keep is not None:
+            result.detections = [
+                d for d, k in zip(result.detections, keep) if k]
+        self._history.append(result.detections)
+        if len(self._history) > self.delta:
+            self._history = self._history[-self.delta :]
+        return result
 
     def seed_history(self, detections: list[sroi.Detection]) -> None:
         """Bootstrap the history (e.g. from an initial full-ERP pass)."""

@@ -19,12 +19,41 @@ OmniSense paper:
   * ``sph_nms`` — greedy spherical non-maximum suppression (paper
     default threshold 0.6), in both a jit-compatible ``lax`` form and a
     fast host/NumPy form used by the online serving loop.
+  * ``sph_nms_batch`` — the batched NMS subsystem used by the pod
+    serving loop (design note below).
+
+Batched-NMS design note
+-----------------------
+At pod scale (``repro.serving.server.PodServer``) hundreds of streams
+finish a frame per scheduler tick, and running greedy NMS as one
+Python loop per stream makes post-processing scale with the Python
+interpreter instead of with the mesh.  ``sph_nms_batch`` therefore
+takes *padded* ``(B, N, 4)`` box stacks — one row per stream/frame,
+rows padded to a common N with a boolean validity ``mask`` — and:
+
+  1. computes the per-row ``(B, N, N)`` SphIoU matrices in ONE
+     dispatch, via the batched Pallas kernel
+     (``repro.kernels.sphiou.ops.sphiou_matrix_batch``) on device, or
+     the vectorised NumPy path on host;
+  2. runs greedy suppression for all rows simultaneously as a
+     ``lax.while_loop`` (device) / NumPy loop (host) whose iteration
+     count is the *maximum number of survivors over rows*, not N: each
+     step keeps every row's best remaining box and suppresses its
+     overlaps, which is exactly sequential greedy NMS because the best
+     remaining box can never be overlapped by an earlier kept one.
+
+Padded entries carry zero-area FoVs (IoU 0 against everything) and are
+masked out of the candidate set, so they are never kept.  The greedy
+order is descending score with lowest-index-first tie-breaking in every
+implementation, keeping the lax, host and batched paths bit-identical.
 
 All functions are vectorised over leading axes and safe to ``jax.jit``.
 Angles are radians everywhere; degrees only at config boundaries.
 """
 
 from __future__ import annotations
+
+import functools
 
 import numpy as np
 
@@ -211,11 +240,12 @@ def sph_nms(
 
 
 def _sph_intersection_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
-    """NumPy twin of :func:`sph_intersection` for (N,4)x(M,4) grids."""
-    ta, pa = a[:, None, 0], a[:, None, 1]
-    ha, va = a[:, None, 2] / 2, a[:, None, 3] / 2
-    tb, pb = b[None, :, 0], b[None, :, 1]
-    hb, vb = b[None, :, 2] / 2, b[None, :, 3] / 2
+    """NumPy twin of :func:`sph_intersection` for (..., N, 4) x (..., M, 4)
+    grids; leading axes are batch dims shared by ``a`` and ``b``."""
+    ta, pa = a[..., :, None, 0], a[..., :, None, 1]
+    ha, va = a[..., :, None, 2] / 2, a[..., :, None, 3] / 2
+    tb, pb = b[..., None, :, 0], b[..., None, :, 1]
+    hb, vb = b[..., None, :, 2] / 2, b[..., None, :, 3] / 2
     dt = tb - ta
     cpa, spa = np.cos(pa), np.sin(pa)
     cpb, spb = np.cos(pb), np.sin(pb)
@@ -233,12 +263,15 @@ def _sph_intersection_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
 
 
 def sph_iou_matrix_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
-    """Pure-NumPy (N, M) SphIoU — the host serving path (no jax dispatch
-    overhead per frame; identical math to :func:`sph_iou_matrix`)."""
-    inter = 0.5 * (_sph_intersection_np(a, b) + _sph_intersection_np(b, a).T)
-    area_a = 2.0 * a[:, 2] * np.sin(a[:, 3] / 2.0)
-    area_b = 2.0 * b[:, 2] * np.sin(b[:, 3] / 2.0)
-    union = area_a[:, None] + area_b[None, :] - inter
+    """Pure-NumPy (..., N, M) SphIoU — the host serving path (no jax
+    dispatch overhead per frame; identical math to
+    :func:`sph_iou_matrix`).  Leading axes of ``a``/``b`` are batch
+    dims, so a padded (B, N, 4) stack yields (B, N, N) in one call."""
+    inter_ba = np.swapaxes(_sph_intersection_np(b, a), -1, -2)
+    inter = 0.5 * (_sph_intersection_np(a, b) + inter_ba)
+    area_a = 2.0 * a[..., :, 2] * np.sin(a[..., :, 3] / 2.0)
+    area_b = 2.0 * b[..., :, 2] * np.sin(b[..., :, 3] / 2.0)
+    union = area_a[..., :, None] + area_b[..., None, :] - inter
     return inter / np.maximum(union, 1e-12)
 
 
@@ -255,19 +288,234 @@ def sph_nms_host(
     n = len(scores)
     if n == 0:
         return np.zeros((0,), dtype=bool)
-    order = np.argsort(-scores)
+    order = np.argsort(-np.asarray(scores), kind="stable")
     iou = sph_iou_matrix_np(np.asarray(boxes, np.float64),
                             np.asarray(boxes, np.float64))
+    iou_sorted = iou[np.ix_(order, order)]
+    # Vectorised greedy: each iteration keeps the best remaining box and
+    # suppresses all its overlaps at once, so the loop runs once per
+    # SURVIVOR (not once per box as the old per-index loop did).
+    keep_sorted = np.zeros((n,), dtype=bool)
+    active = np.ones((n,), dtype=bool)
+    while True:
+        idx = int(np.argmax(active))  # first still-active in score order
+        if not active[idx]:
+            break
+        keep_sorted[idx] = True
+        active &= iou_sorted[idx] <= iou_threshold
+        active[idx] = False
     keep = np.zeros((n,), dtype=bool)
-    suppressed = np.zeros((n,), dtype=bool)
-    for idx in order:
-        if suppressed[idx]:
-            continue
-        keep[idx] = True
-        overl = iou[idx] > iou_threshold
-        overl[idx] = False
-        suppressed |= overl
+    keep[order] = keep_sorted
     return keep
+
+
+# --------------------------------------------------------------------------
+# Batched spherical NMS (the pod-tick subsystem; see module docstring)
+# --------------------------------------------------------------------------
+
+# Row-chunk caps: bound the (chunk, N, N) IoU tensor so huge rows
+# (bench N=4096) stay within memory — ~32M float64 elements on host,
+# ~128M float32 on device.
+_HOST_CHUNK_ELEMS = 1 << 25
+_DEVICE_CHUNK_ELEMS = 1 << 27
+# "auto" picks the jitted device path (TPU) only at B*N >= this; below
+# it, per-shape retracing would dominate the handful of boxes involved.
+_AUTO_DEVICE_MIN_ELEMS = 512
+
+
+def _greedy_suppress_rows_np(
+    iou: np.ndarray,       # (B, N, N)
+    scores: np.ndarray,    # (B, N)
+    active: np.ndarray,    # (B, N) bool, consumed
+    iou_threshold: float,
+) -> np.ndarray:
+    """Batched greedy suppression; iterations = max survivors over rows."""
+    b, n = scores.shape
+    keep = np.zeros((b, n), dtype=bool)
+    cols = np.arange(n)[None, :]
+    while active.any():
+        masked = np.where(active, scores, -np.inf)
+        best = np.argmax(masked, axis=1)                     # (B,)
+        has = active.any(axis=1)                             # (B,)
+        sel = (cols == best[:, None]) & has[:, None]
+        keep |= sel
+        iou_best = np.take_along_axis(iou, best[:, None, None], axis=1)[:, 0, :]
+        active &= ~((iou_best > iou_threshold) & has[:, None]) & ~sel
+    return keep
+
+
+def _sph_nms_batch_host(
+    boxes: np.ndarray, scores: np.ndarray, mask: np.ndarray,
+    iou_threshold: float,
+) -> np.ndarray:
+    b, n, _ = boxes.shape
+    keep = np.zeros((b, n), dtype=bool)
+    chunk = max(1, _HOST_CHUNK_ELEMS // max(n * n, 1))
+    for lo in range(0, b, chunk):
+        hi = min(lo + chunk, b)
+        iou = sph_iou_matrix_np(boxes[lo:hi].astype(np.float64),
+                                boxes[lo:hi].astype(np.float64))
+        keep[lo:hi] = _greedy_suppress_rows_np(
+            iou, scores[lo:hi], mask[lo:hi].copy(), iou_threshold)
+    return keep
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def _sph_nms_batch_device(
+    boxes: Array, scores: Array, mask: Array, iou_threshold: Array,
+    *, interpret: bool = False, use_pallas: bool = True,
+) -> Array:
+    """(B, N) keep-mask: batched SphIoU + on-device greedy loop.
+
+    The whole pod tick is one dispatch: the ``lax.while_loop`` keeps
+    every row's best remaining candidate and suppresses its overlaps,
+    terminating after max-survivors-per-row iterations.  The IoU block
+    is the batched Pallas kernel (``use_pallas``, the TPU path) or the
+    vmapped jnp oracle (XLA-fused; the fast compiled path on CPU where
+    Pallas would run in interpret mode).
+    """
+    b, n, _ = boxes.shape
+    if use_pallas:
+        from repro.kernels.sphiou.ops import sphiou_matrix_batch
+
+        iou = sphiou_matrix_batch(boxes, boxes, interpret=interpret)
+    else:
+        iou = jax.vmap(sph_iou_matrix)(boxes, boxes)
+    cols = jnp.arange(n)[None, :]
+
+    def cond(state):
+        _, active = state
+        return jnp.any(active)
+
+    def body(state):
+        keep, active = state
+        masked = jnp.where(active, scores, -jnp.inf)
+        best = jnp.argmax(masked, axis=1)                    # (B,)
+        has = jnp.any(active, axis=1)                        # (B,)
+        sel = (cols == best[:, None]) & has[:, None]
+        keep = keep | sel
+        iou_best = jnp.take_along_axis(
+            iou, best[:, None, None], axis=1)[:, 0, :]       # (B, N)
+        active = active & ~((iou_best > iou_threshold) & has[:, None]) & ~sel
+        return keep, active
+
+    keep, _ = jax.lax.while_loop(
+        cond, body,
+        (jnp.zeros((b, n), dtype=bool), mask.astype(bool)),
+    )
+    return keep
+
+
+def _apply_max_out_np(
+    keep: np.ndarray, scores: np.ndarray, max_out: int
+) -> np.ndarray:
+    order = np.argsort(-scores, axis=1, kind="stable")
+    keep_sorted = np.take_along_axis(keep, order, axis=1)
+    rank = np.cumsum(keep_sorted.astype(np.int64), axis=1) - 1
+    keep_sorted &= rank < max_out
+    out = np.zeros_like(keep)
+    np.put_along_axis(out, order, keep_sorted, axis=1)
+    return out
+
+
+def sph_nms_batch(
+    boxes: np.ndarray | Array,        # (B, N, 4) padded SphBB stack
+    scores: np.ndarray | Array,       # (B, N)
+    mask: np.ndarray | Array | None = None,  # (B, N) bool; False = padding
+    iou_threshold: float = 0.6,
+    max_out: int | None = None,
+    *,
+    backend: str = "auto",
+) -> np.ndarray:
+    """Batched greedy spherical NMS over padded rows -> (B, N) bool.
+
+    One row per stream/frame; rows are suppressed independently but in a
+    single dispatch (see the module docstring's design note).  Padded
+    entries (``mask == False``) are never kept.
+
+    ``backend``:
+      * ``"auto"``   — ``"device"`` on TPU for pod-scale batches
+        (``B * N`` past a small floor), ``"host"`` otherwise: the
+        Pallas kernel runs in slow interpret mode off-TPU, and for the
+        small frame-level rows the serving loop sees, NumPy beats a
+        per-shape XLA recompile even on TPU hosts;
+      * ``"device"`` — batched Pallas SphIoU + ``lax.while_loop``
+        (interpret mode off-TPU, which is also the CI correctness
+        harness for the kernel);
+      * ``"jit"``    — same ``lax.while_loop`` with the XLA-fused jnp
+        IoU instead of Pallas: the fast COMPILED path on CPU for big
+        recurring shapes (benchmarks, bulk re-scoring);
+      * ``"host"``   — vectorised NumPy (float64 IoU, same greedy).
+
+    Rows are independent, so the device/jit paths process very large
+    batches in row chunks to bound the (chunk, N, N) IoU tensor.
+
+    Inputs keep their dtype on the host path (the float64 serving
+    boxes/scores are compared at full precision, exactly like
+    ``sph_nms_host``); only the device/jit dispatch casts to float32.
+    """
+    boxes = np.asarray(boxes)
+    scores = np.asarray(scores)
+    b, n = scores.shape
+    if mask is None:
+        mask = np.ones((b, n), dtype=bool)
+    else:
+        mask = np.asarray(mask, dtype=bool)
+    if n == 0:
+        return np.zeros((b, 0), dtype=bool)
+
+    if backend == "auto":
+        # Device only for genuinely batched work on TPU: the jitted
+        # path retraces per (B, N) shape, so the small single-row calls
+        # the per-frame serving loop makes stay on host everywhere
+        # (ROADMAP: shape bucketing before the TPU path is the default
+        # for per-frame rows).
+        pod_scale = b * n >= _AUTO_DEVICE_MIN_ELEMS
+        backend = ("device" if jax.default_backend() == "tpu" and pod_scale
+                   else "host")
+    if backend == "host":
+        keep = _sph_nms_batch_host(boxes, scores, mask, iou_threshold)
+    elif backend in ("device", "jit"):
+        chunk = max(1, _DEVICE_CHUNK_ELEMS // max(n * n, 1))
+        parts = []
+        for lo in range(0, b, chunk):
+            hi = min(lo + chunk, b)
+            parts.append(np.asarray(_sph_nms_batch_device(
+                jnp.asarray(boxes[lo:hi], jnp.float32),
+                jnp.asarray(scores[lo:hi], jnp.float32),
+                jnp.asarray(mask[lo:hi]),
+                jnp.asarray(iou_threshold, jnp.float32),
+                interpret=jax.default_backend() != "tpu",
+                use_pallas=backend == "device",
+            )))
+        keep = np.concatenate(parts, axis=0)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    if max_out is not None:
+        keep = _apply_max_out_np(keep, scores, max_out)
+    return keep
+
+
+def pad_detection_rows(rows) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad per-row detection lists into ``sph_nms_batch`` inputs.
+
+    ``rows`` is a sequence of detection lists (anything with a ``box``
+    (4,) array and a ``score``), one per stream/frame.  Returns
+    ``(boxes (B, N, 4), scores (B, N), mask (B, N))`` padded to the
+    longest row, float64 so the host path keeps full precision.
+    """
+    b = len(rows)
+    n_max = max((len(r) for r in rows), default=0)
+    boxes = np.zeros((b, n_max, 4), np.float64)
+    scores = np.zeros((b, n_max), np.float64)
+    mask = np.zeros((b, n_max), bool)
+    for r, dets in enumerate(rows):
+        k = len(dets)
+        if k:
+            boxes[r, :k] = np.stack([d.box for d in dets])
+            scores[r, :k] = [d.score for d in dets]
+            mask[r, :k] = True
+    return boxes, scores, mask
 
 
 # --------------------------------------------------------------------------

@@ -34,6 +34,19 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 Rules = Sequence[tuple[str, P]]
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across the rename: newer jax exposes it as
+    ``jax.shard_map(check_vma=...)``, older as
+    ``jax.experimental.shard_map.shard_map(check_rep=...)``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
 def _path_str(path) -> str:
     parts = []
     for k in path:

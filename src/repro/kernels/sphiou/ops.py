@@ -39,3 +39,35 @@ def sphiou_matrix(
         a.T, b.T, block_n=block_n, block_m=block_m, interpret=interpret
     )
     return out[:n, :m]
+
+
+def sphiou_matrix_batch(
+    boxes_a: jax.Array,  # (B, N, 4)
+    boxes_b: jax.Array,  # (B, M, 4)
+    *,
+    block_n: int = 256,
+    block_m: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(B, N, M) per-row SphIoU matrices via the batched Pallas kernel.
+
+    Rows are independent — row ``r`` of the output is
+    ``sphiou_matrix(boxes_a[r], boxes_b[r])``.  Padded boxes (zero FoV)
+    score IoU 0 against everything, so callers can pad rows to a common
+    N and mask afterwards.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    _, n, _ = boxes_a.shape
+    m = boxes_b.shape[1]
+    block_n = min(block_n, max(8, n))
+    block_m = min(block_m, max(8, m))
+    pad_n = (-n) % block_n
+    pad_m = (-m) % block_m
+    a = jnp.pad(boxes_a.astype(jnp.float32), ((0, 0), (0, pad_n), (0, 0)))
+    b = jnp.pad(boxes_b.astype(jnp.float32), ((0, 0), (0, pad_m), (0, 0)))
+    out = _s.sphiou_pallas_batch(
+        jnp.swapaxes(a, 1, 2), jnp.swapaxes(b, 1, 2),
+        block_n=block_n, block_m=block_m, interpret=interpret,
+    )
+    return out[:, :n, :m]

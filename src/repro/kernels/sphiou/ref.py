@@ -1,8 +1,13 @@
-"""Pure-jnp oracle for the SphIoU kernel: the framework reference
-``repro.core.sphere.sph_iou_matrix``."""
+"""Pure-jnp oracles for the SphIoU kernels: the framework reference
+``repro.core.sphere.sph_iou_matrix`` and its vmapped batched twin."""
 
 from __future__ import annotations
 
+import jax
+
 from repro.core.sphere import sph_iou_matrix as sphiou_ref
 
-__all__ = ["sphiou_ref"]
+# (B, N, 4) x (B, M, 4) -> (B, N, M); oracle for ``sphiou_pallas_batch``.
+sphiou_ref_batch = jax.vmap(sphiou_ref)
+
+__all__ = ["sphiou_ref", "sphiou_ref_batch"]

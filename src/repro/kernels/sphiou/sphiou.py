@@ -51,12 +51,12 @@ def _intersection(ta, pa, ha, va, tb, pb, hb, vb):
     return lon_w * jnp.maximum(lat_w, 0.0)
 
 
-def _kernel(a_ref, b_ref, out_ref):
-    # a_ref: (4, BN), b_ref: (4, BM) -> out_ref: (BN, BM)
-    ta, pa = a_ref[0, :], a_ref[1, :]
-    ha, va = a_ref[2, :] * 0.5, a_ref[3, :] * 0.5  # half FoVs
-    tb, pb = b_ref[0, :], b_ref[1, :]
-    hb, vb = b_ref[2, :] * 0.5, b_ref[3, :] * 0.5
+def _iou_tile(a, b):
+    """(4, BN) x (4, BM) -> (BN, BM) SphIoU tile (shared kernel body)."""
+    ta, pa = a[0, :], a[1, :]
+    ha, va = a[2, :] * 0.5, a[3, :] * 0.5  # half FoVs
+    tb, pb = b[0, :], b[1, :]
+    hb, vb = b[2, :] * 0.5, b[3, :] * 0.5
 
     ta, pa, ha, va = (x[:, None] for x in (ta, pa, ha, va))  # (BN, 1)
     tb, pb, hb, vb = (x[None, :] for x in (tb, pb, hb, vb))  # (1, BM)
@@ -67,7 +67,17 @@ def _kernel(a_ref, b_ref, out_ref):
 
     area_a = 4.0 * ha * jnp.sin(va)  # 2 * dtheta * sin(dphi/2)
     area_b = 4.0 * hb * jnp.sin(vb)
-    out_ref[...] = inter / jnp.maximum(area_a + area_b - inter, 1e-12)
+    return inter / jnp.maximum(area_a + area_b - inter, 1e-12)
+
+
+def _kernel(a_ref, b_ref, out_ref):
+    # a_ref: (4, BN), b_ref: (4, BM) -> out_ref: (BN, BM)
+    out_ref[...] = _iou_tile(a_ref[...], b_ref[...])
+
+
+def _kernel_batch(a_ref, b_ref, out_ref):
+    # a_ref: (1, 4, BN), b_ref: (1, 4, BM) -> out_ref: (1, BN, BM)
+    out_ref[0] = _iou_tile(a_ref[0], b_ref[0])
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
@@ -90,5 +100,37 @@ def sphiou_pallas(
         ],
         out_specs=pl.BlockSpec((block_n, block_m), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(boxes_a_t, boxes_b_t)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
+def sphiou_pallas_batch(
+    boxes_a_t: jax.Array,  # (B, 4, N) f32
+    boxes_b_t: jax.Array,  # (B, 4, M) f32
+    *,
+    block_n: int = 256,
+    block_m: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-row SphIoU matrices: (B, 4, N) x (B, 4, M) -> (B, N, M).
+
+    The batch axis is the leading (slowest-varying) grid dimension so
+    each row's tiles stream through VMEM contiguously; the tile body is
+    identical to the unbatched kernel.  One dispatch covers the whole
+    pod tick instead of one ``pallas_call`` per stream.
+    """
+    b, _, n = boxes_a_t.shape
+    m = boxes_b_t.shape[2]
+    grid = (b, pl.cdiv(n, block_n), pl.cdiv(m, block_m))
+    return pl.pallas_call(
+        _kernel_batch,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 4, block_n), lambda r, i, j: (r, 0, i)),
+            pl.BlockSpec((1, 4, block_m), lambda r, i, j: (r, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n, block_m), lambda r, i, j: (r, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n, m), jnp.float32),
         interpret=interpret,
     )(boxes_a_t, boxes_b_t)

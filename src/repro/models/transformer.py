@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import (BATCH, constrain, current_mesh,
-                                         mesh_axis_size)
+                                         mesh_axis_size, shard_map)
 from repro.models import layers as L
 
 Array = jax.Array
@@ -473,7 +473,7 @@ def moe_block_a2a(p: Params, x: Array, cfg: TransformerConfig
         aux = jax.lax.pmean(aux_loc, flat_axes)
         return out, aux
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         kernel,
         mesh=mesh,
         in_specs=(P(flat_axes, None),          # tokens: disjoint slices

@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.core import accuracy as acc_mod
 from repro.core import allocation, sroi as sroi_mod
-from repro.core.sphere import sph_nms_host
+from repro.core.sphere import pad_detection_rows, sph_nms_batch
 from repro.serving.scheduler import OmniSenseLatencyModel
 
 CUBE_CENTERS = [
@@ -49,9 +49,14 @@ def run_erp_baseline(video, backend, latency: OmniSenseLatencyModel,
 def run_cubemap_baseline(video, backend, latency: OmniSenseLatencyModel,
                          variant: acc_mod.ModelProfile, frames: range,
                          nms_threshold: float = 0.6):
-    """Six 90-degree faces, preprocessing pipelined with inference."""
+    """Six 90-degree faces, preprocessing pipelined with inference.
+
+    Frames are independent (no detection feedback), so the overlapping
+    face-edge detections of the WHOLE range are merged in one padded
+    ``sph_nms_batch`` call — one row per frame — instead of a host NMS
+    loop per frame.
+    """
     fov = (math.pi / 2, math.pi / 2)
-    preds = []
     e2e = []
     d_pre = latency._pre(variant)
     d_inf = latency._inf(variant)
@@ -59,20 +64,23 @@ def run_cubemap_baseline(video, backend, latency: OmniSenseLatencyModel,
         tuple([1] * 6),
         np.array([[0.0] * 6, [d_pre] * 6]),
         np.array([[0.0] * 6, [d_inf] * 6]))
+    per_frame: list[tuple[int, list]] = []
     for f in frames:
         backend.set_frame(f)
         dets = []
         for ct, cp in CUBE_CENTERS:
             region = sroi_mod.SRoI(center=(ct, cp), fov=fov)
             dets.extend(backend.infer_sroi(None, region, variant))
-        if dets:
-            boxes = np.stack([d.box for d in dets])
-            scores = np.array([d.score for d in dets])
-            keep = sph_nms_host(boxes, scores, nms_threshold)
-            dets = [d for d, k in zip(dets, keep) if k]
-        for d in dets:
-            preds.append((f, d))
+        per_frame.append((f, dets))
         if variant.location != "device":
             latency.observe_delivery(variant)
         e2e.append(pipelined)
+
+    preds = []
+    rows = [(f, dets) for f, dets in per_frame if dets]
+    if rows:
+        boxes, scores, mask = pad_detection_rows([dets for _, dets in rows])
+        keep = sph_nms_batch(boxes, scores, mask, iou_threshold=nms_threshold)
+        for r, (f, dets) in enumerate(rows):
+            preds.extend((f, d) for d, k in zip(dets, keep[r]) if k)
     return preds, float(np.mean(e2e))

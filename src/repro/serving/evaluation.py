@@ -10,17 +10,22 @@ from __future__ import annotations
 
 import collections
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sphere import sph_iou_matrix
+from repro.core.sphere import sph_iou_matrix_np
 from repro.core.sroi import Detection
 
 
 def sph_ap(preds: list[tuple[int, Detection]],
            gts: list[tuple[int, Detection]],
            iou_threshold: float = 0.5) -> float:
-    """AP for one category.  Items are (frame_idx, detection)."""
+    """AP for one category.  Items are (frame_idx, detection).
+
+    IoUs are precomputed as ONE vectorised (preds x gts) matrix per
+    frame on the host (the matching loop itself is sequential because
+    greedy matching consumes ground truths in score order, but it only
+    reads cached rows — no per-prediction jax dispatch).
+    """
     if not gts:
         return float("nan")
     gt_by_frame: dict[int, list[Detection]] = collections.defaultdict(list)
@@ -30,16 +35,30 @@ def sph_ap(preds: list[tuple[int, Detection]],
         f: np.zeros(len(v), bool) for f, v in gt_by_frame.items()}
 
     preds_sorted = sorted(preds, key=lambda fd: -fd[1].score)
+
+    # one IoU matrix per frame: rows = that frame's predictions in
+    # global (score-sorted) order, columns = its ground truths
+    pred_rows: dict[int, list[int]] = collections.defaultdict(list)
+    for i, (f, _) in enumerate(preds_sorted):
+        pred_rows[f].append(i)
+    iou_rows: dict[int, np.ndarray] = {}
+    for f, idxs in pred_rows.items():
+        cands = gt_by_frame.get(f)
+        if not cands:
+            continue
+        mat = sph_iou_matrix_np(
+            np.stack([preds_sorted[i][1].box for i in idxs]),
+            np.stack([c.box for c in cands]))
+        for row, i in enumerate(idxs):
+            iou_rows[i] = mat[row]
+
     tp = np.zeros(len(preds_sorted))
     fp = np.zeros(len(preds_sorted))
     for i, (f, det) in enumerate(preds_sorted):
-        cands = gt_by_frame.get(f, [])
-        if not cands:
+        ious = iou_rows.get(i)
+        if ious is None:
             fp[i] = 1
             continue
-        ious = np.asarray(sph_iou_matrix(
-            jnp.asarray(det.box[None]),
-            jnp.asarray(np.stack([c.box for c in cands]))))[0]
         best = int(np.argmax(ious))
         if ious[best] >= iou_threshold and not matched[f][best]:
             matched[f][best] = True

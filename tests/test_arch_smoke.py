@@ -15,6 +15,8 @@ from repro.models import vision as vis_mod
 from repro.training import optimizer as opt_mod
 from repro.training import steps as steps_mod
 
+pytestmark = pytest.mark.slow  # compiles a train step per architecture
+
 RNG = jax.random.PRNGKey(0)
 OPT = opt_mod.adamw(lr=1e-3)
 

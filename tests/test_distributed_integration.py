@@ -7,6 +7,9 @@ import sys
 import textwrap
 
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow  # subprocess jax restarts dominate runtime
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -16,7 +19,7 @@ SCRIPT = textwrap.dedent("""
     import jax.numpy as jnp
     import numpy as np
     from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-    shard_map = jax.shard_map
+    from repro.distributed.sharding import shard_map
 
     from repro.training import compression as comp
     from repro.training import optimizer as opt_mod

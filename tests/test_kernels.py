@@ -16,8 +16,8 @@ from repro.core import projection
 from repro.kernels.attention.ops import flash_attention, flash_attention_ref
 from repro.kernels.gnomonic import ops as gno_ops
 from repro.kernels.gnomonic.ref import gnomonic_sample_ref
-from repro.kernels.sphiou.ops import sphiou_matrix
-from repro.kernels.sphiou.ref import sphiou_ref
+from repro.kernels.sphiou.ops import sphiou_matrix, sphiou_matrix_batch
+from repro.kernels.sphiou.ref import sphiou_ref, sphiou_ref_batch
 
 RNG = np.random.default_rng(0)
 
@@ -94,6 +94,35 @@ def test_sphiou_matches_oracle(n, m):
     ref = np.asarray(sphiou_ref(jnp.asarray(a), jnp.asarray(b)))
     got = np.asarray(sphiou_matrix(jnp.asarray(a), jnp.asarray(b)))
     np.testing.assert_allclose(got, ref, atol=5e-6)
+
+
+@pytest.mark.parametrize("b,n,m", [(1, 8, 8), (3, 17, 9), (4, 64, 64)])
+def test_sphiou_batch_matches_vmapped_oracle(b, n, m):
+    rng = np.random.default_rng(b * 100 + n)
+    def boxes(rows, k):
+        return np.stack([
+            rng.uniform(-math.pi, math.pi, (rows, k)),
+            rng.uniform(-1.4, 1.4, (rows, k)),
+            rng.uniform(0.05, 1.2, (rows, k)),
+            rng.uniform(0.05, 1.2, (rows, k))],
+            axis=-1).astype(np.float32)
+    a, bb = boxes(b, n), boxes(b, m)
+    ref = np.asarray(sphiou_ref_batch(jnp.asarray(a), jnp.asarray(bb)))
+    got = np.asarray(sphiou_matrix_batch(jnp.asarray(a), jnp.asarray(bb)))
+    np.testing.assert_allclose(got, ref, atol=5e-6)
+
+
+def test_sphiou_batch_rows_independent():
+    # row r of the batched kernel == the unbatched kernel on row r
+    rng = np.random.default_rng(17)
+    a = np.stack([
+        rng.uniform(-math.pi, math.pi, (3, 12)), rng.uniform(-1.2, 1.2, (3, 12)),
+        rng.uniform(0.1, 1.0, (3, 12)), rng.uniform(0.1, 1.0, (3, 12))],
+        axis=-1).astype(np.float32)
+    got = np.asarray(sphiou_matrix_batch(jnp.asarray(a), jnp.asarray(a)))
+    for r in range(3):
+        single = np.asarray(sphiou_matrix(jnp.asarray(a[r]), jnp.asarray(a[r])))
+        np.testing.assert_allclose(got[r], single, atol=1e-6)
 
 
 def test_sphiou_diag_is_one():

@@ -12,6 +12,10 @@ from repro.models import diffusion as diff_mod
 from repro.models import transformer as T
 from repro.models import vision as V
 
+# every test jit-compiles a model; the module runs ~2 min on CPU, so it
+# lives in the slow tier (test_arch_smoke covers the archs there too)
+pytestmark = pytest.mark.slow
+
 RNG = jax.random.PRNGKey(0)
 
 

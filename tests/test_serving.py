@@ -7,6 +7,7 @@ import pytest
 
 from repro.core import sroi as sroi_mod
 from repro.core.omnisense import OmniSenseLoop
+from repro.core.sphere import sph_nms_host
 from repro.data.synthetic import make_video, noa_histogram
 from repro.serving import baselines, profiles
 from repro.serving.evaluation import sph_map
@@ -124,6 +125,73 @@ class TestBaselinesAndMetric:
         # CubeMap sees distortion-free faces -> beats raw ERP (paper)
         assert m_cm > m_erp
         assert erp_t > 0 and cm_t > erp_t  # 6 faces cost more than 1 frame
+
+
+class TestNMSSwapRegression:
+    """The batched-NMS refactor must not change end-to-end results."""
+
+    @staticmethod
+    def _fresh(seed):
+        video = make_video(n_frames=16, n_objects=30, seed=seed)
+        variants = profiles.make_ladder(seed=0)
+        lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+        backend = OracleBackend(video)
+        return OmniSenseLoop(variants, lat, backend, budget_s=2.0), backend
+
+    def test_process_frame_detection_feedback_unchanged(self):
+        """Inline path (single-row sph_nms_batch) vs the pre-refactor
+        per-frame ``sph_nms_host`` applied manually via defer_nms: the
+        kept detections — and therefore the SRoI-prediction feedback —
+        must be identical frame by frame on a seeded synthetic stream."""
+        loop_a, backend_a = self._fresh(7)
+        loop_b, backend_b = self._fresh(7)
+        saw_detections = False
+        for f in range(12):
+            backend_a.set_frame(f)
+            backend_b.set_frame(f)
+            ra = loop_a.process_frame(None)
+            rb = loop_b.process_frame(None, defer_nms=True)
+            keep = None
+            if rb.detections:
+                boxes = np.stack([d.box for d in rb.detections])
+                scores = np.array([d.score for d in rb.detections])
+                keep = sph_nms_host(boxes, scores, loop_b.nms_threshold)
+            loop_b.finalize_detections(rb, keep)
+            assert len(ra.detections) == len(rb.detections), f
+            for da, db in zip(ra.detections, rb.detections):
+                np.testing.assert_array_equal(da.box, db.box)
+                assert da.category == db.category
+                assert da.score == db.score
+            saw_detections = saw_detections or bool(ra.detections)
+        assert saw_detections  # the stream must actually exercise NMS
+
+    def test_pod_tick_batched_nms_matches_inline(self):
+        """A PodServer tick (one batched dispatch for all streams) keeps
+        exactly what per-stream inline processing would keep."""
+        n_streams, n_frames = 3, 8
+        inline, batched, backends_a, backends_b = [], [], [], []
+        variants = profiles.make_ladder(seed=0)
+        for s in range(n_streams):
+            for loops, backends in ((inline, backends_a),
+                                    (batched, backends_b)):
+                video = make_video(n_frames=16, n_objects=30, seed=40 + s)
+                lat = OmniSenseLatencyModel(profiles.paper_profile(),
+                                            NetworkModel())
+                b = OracleBackend(video)
+                backends.append(b)
+                loops.append(OmniSenseLoop(variants, lat, b, budget_s=2.0))
+        server = PodServer(batched, backends_b, max_batch=4)
+        for f in range(n_frames):
+            expect = []
+            for loop, b in zip(inline, backends_a):
+                b.set_frame(f)
+                expect.append(loop.process_frame(None).detections)
+            server.step(f)
+            for s, loop in enumerate(batched):
+                got = loop._history[-1]
+                assert len(got) == len(expect[s]), (f, s)
+                for da, db in zip(expect[s], got):
+                    np.testing.assert_array_equal(da.box, db.box)
 
 
 class TestPodServer:
