@@ -15,7 +15,7 @@ import sys
 
 def main() -> None:
     from benchmarks import ablations, fig2_noa, fig7_overall, \
-        fig8_overhead, fig9_sensitivity, kernels_bench
+        fig8_overhead, fig9_sensitivity, kernels_bench, serving_bench
 
     print("table,key,metric,value,derived")
     fig2_noa.run()
@@ -26,6 +26,7 @@ def main() -> None:
     ablations.run()
     kernels_bench.run()
     kernels_bench.nms_bench()
+    serving_bench.run()
 
 
 if __name__ == "__main__":

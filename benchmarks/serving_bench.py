@@ -1,0 +1,145 @@
+"""Variant-batched tick latency vs the per-request serving path.
+
+One pod tick's inference work — every stream's SRoI crops for the
+variants it chose — executed two ways on the REAL Jax detector ladder
+(CPU-reduced input sizes):
+
+  * ``per_request`` — the pre-PR-2 pattern: one eager
+    ``JaxDetectorBackend.infer_sroi`` forward per request;
+  * ``batched``     — the pod path: requests grouped per variant and
+    pushed through the shape-bucketed ``infer_srois_batched`` jitted
+    forward (one dispatch per variant chunk).
+
+Sweeps stream counts and emits one CSV line per config plus
+``BENCH_SERVE.json`` so future snapshots track the trajectory.  Warmup
+runs both paths first so jit compiles (bounded by the bucket ladder)
+are not billed to the measurement.
+
+    PYTHONPATH=src:. python -c "from benchmarks import serving_bench; serving_bench.run()"
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import time
+
+import numpy as np
+
+SERVE_GRID = (1, 2, 4, 8, 16)   # streams per tick
+SROIS_PER_STREAM = 2
+SERVE_JSON_PATH = os.environ.get("BENCH_SERVE_JSON", "BENCH_SERVE.json")
+
+
+def _make_backend(n_variants: int = 2):
+    import jax
+
+    from repro.models import detector as det_mod
+    from repro.serving.batching import ShapeBuckets
+    from repro.serving.scheduler import JaxDetectorBackend
+
+    cfgs = [dataclasses.replace(det_mod.PAPER_LADDER[i],
+                                input_size=64 if i == 0 else 96, n_classes=8)
+            for i in range(n_variants)]
+    params = [det_mod.init_params(jax.random.PRNGKey(i), c)
+              for i, c in enumerate(cfgs)]
+    sizes = tuple(sorted({c.input_size for c in cfgs}))
+    return JaxDetectorBackend(cfgs, params, conf=0.01, use_kernel=False,
+                              max_det=4,
+                              buckets=ShapeBuckets((1, 2, 4, 8),
+                                                   resolutions=sizes))
+
+
+def _tick_requests(rng, n_streams, variants):
+    """One tick's (variant, frame, region) work list: each stream
+    contributes SROIS_PER_STREAM crops, variants assigned round-robin
+    (the steady-state mix a pod sees)."""
+    from repro.core import sroi as sroi_mod
+
+    fov = (math.radians(60), math.radians(60))
+    out = []
+    for s in range(n_streams):
+        frame = rng.random((64, 128, 3)).astype(np.float32)
+        for k in range(SROIS_PER_STREAM):
+            region = sroi_mod.SRoI(
+                center=(float(rng.uniform(-2.5, 2.5)),
+                        float(rng.uniform(-0.9, 0.9))), fov=fov)
+            out.append((variants[(s + k) % len(variants)], frame, region))
+    return out
+
+
+def run(csv=print, grid=SERVE_GRID, json_path=SERVE_JSON_PATH) -> dict:
+    import jax
+
+    from repro.serving import profiles
+
+    backend = _make_backend()
+    variants = profiles.make_ladder(n_categories=8, seed=0)[:len(backend.cfgs)]
+    rng = np.random.default_rng(0)
+
+    # warmup: compile EVERY batch bucket per variant (the serving loop
+    # pays these once per lifetime; the tick measurement must not)
+    warm = _tick_requests(rng, max(grid), variants)
+    for v in variants:
+        items = [(f, r) for vv, f, r in warm if vv.name == v.name]
+        for b in backend.buckets.batch_sizes:
+            backend.infer_srois_batched(items[:b], v)
+        backend.infer_sroi(items[0][0], items[0][1], v)
+
+    entries = []
+    for n_streams in grid:
+        work = _tick_requests(rng, n_streams, variants)
+        repeats = 2 if n_streams <= 8 else 1
+
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            for v, frame, region in work:
+                backend.infer_sroi(frame, region, v)
+        t_per_request = (time.perf_counter() - t0) / repeats * 1e6
+
+        by_variant: dict[str, list] = {}
+        for v, frame, region in work:
+            by_variant.setdefault(v.name, []).append((v, frame, region))
+        # one call per variant: infer_srois_batched applies the bucket
+        # chunking itself, so the benchmark measures the real dispatch
+        # schedule rather than re-implementing it
+        dispatches = sum(len(backend.buckets.split(len(items)))
+                         for items in by_variant.values())
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            for name, items in sorted(by_variant.items()):
+                backend.infer_srois_batched(
+                    [(f, r) for _, f, r in items], items[0][0])
+        t_batched = (time.perf_counter() - t0) / repeats * 1e6
+
+        entry = dict(streams=n_streams,
+                     requests=len(work),
+                     variants=len(by_variant),
+                     dispatches=dispatches,
+                     per_request_us=round(t_per_request, 1),
+                     batched_us=round(t_batched, 1),
+                     speedup=round(t_per_request / max(t_batched, 1e-9), 2))
+        entries.append(entry)
+        csv(f"serving,tick_s{n_streams}_r{len(work)},us_per_tick_per_request,"
+            f"{t_per_request:.0f},")
+        csv(f"serving,tick_s{n_streams}_r{len(work)},us_per_tick_batched,"
+            f"{t_batched:.0f},speedup={entry['speedup']}x "
+            f"dispatches={dispatches}")
+
+    out = {"bench": "variant_batched_serving",
+           "backend": jax.default_backend(),
+           "srois_per_stream": SROIS_PER_STREAM,
+           "batch_buckets": list(backend.buckets.batch_sizes),
+           "resolutions": list(backend.buckets.resolutions),
+           "grid": entries}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        csv(f"serving,serve_json,path,0,{json_path}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -47,6 +47,10 @@ def main():
         hist = np.bincount(stats.batch_sizes)
         print(f"variant batch sizes: mean={stats.mean_batch:.2f} "
               f"hist={dict(enumerate(hist.tolist()))}")
+    print(f"batched dispatches: {stats.dispatches} "
+          f"(inference {stats.sum_batched_inf_s:.1f}s batched vs "
+          f"{stats.sum_per_request_inf_s:.1f}s per-request -> "
+          f"{stats.batching_gain:.2f}x)")
     print("\npod serving loop OK")
 
 

@@ -61,6 +61,44 @@ class FrameResult:
     discovered: bool
 
 
+@dataclasses.dataclass
+class InferenceRequest:
+    """One planned SRoI inference, emitted by :meth:`OmniSenseLoop.begin_frame`.
+
+    The pod server parks these in per-variant queues and drains each
+    tick into batched detector forwards; ``slot`` is the request's
+    position in the owning frame's request list so the decoded
+    detections scatter back in plan order.
+    """
+
+    region: sroi.SRoI
+    variant: acc_mod.ModelProfile
+    slot: int
+    special: bool
+    frame: np.ndarray | None = None
+
+
+@dataclasses.dataclass
+class PendingFrame:
+    """A planned-but-not-executed frame (emission half of the loop).
+
+    Produced by :meth:`OmniSenseLoop.begin_frame`; holds everything
+    :meth:`OmniSenseLoop.finish_frame` needs to ingest the batched
+    inference results and complete the frame exactly like the inline
+    path.
+    """
+
+    frame: np.ndarray | None
+    srois: list[sroi.SRoI]
+    plan: allocation.Plan | None
+    planned_latency: float
+    overhead_s: float
+    explore_frame: bool
+    explore_idx: int
+    explore_cost: float
+    requests: list[InferenceRequest]
+
+
 class OmniSenseLoop:
     """Stateful per-stream analytics session."""
 
@@ -123,14 +161,13 @@ class OmniSenseLoop:
 
     # -- main entry --------------------------------------------------------
 
-    def process_frame(self, frame: np.ndarray, *,
-                      defer_nms: bool = False) -> FrameResult:
-        """Run one frame.  With ``defer_nms=True`` the returned result
-        holds the RAW (pre-NMS) detections and the history is NOT yet
-        updated; the caller owns suppression and must hand the keep-mask
-        back via :meth:`finalize_detections` before the next frame.
-        ``PodServer`` uses this to suppress all streams finishing in a
-        tick with one batched ``sph_nms_batch`` dispatch."""
+    def begin_frame(self, frame: np.ndarray) -> PendingFrame:
+        """Emission half of the frame: predict SRoIs, allocate models
+        and emit one :class:`InferenceRequest` per non-skipped SRoI —
+        WITHOUT executing any inference.  The pod server parks the
+        requests in per-variant queues and drains them into batched
+        detector forwards; standalone use goes through
+        :meth:`process_frame`, which executes the requests inline."""
         t0 = time.perf_counter()
         self._frame_idx += 1
         explore_frame = (self.explore_every > 0
@@ -151,7 +188,6 @@ class OmniSenseLoop:
 
         plan = None
         planned_latency = 0.0
-        detections: list[sroi.Detection] = []
         if srois:
             acc = self._weighted_acc_matrix(srois)
             d_pre, d_inf = self.latency_model.delays(srois, self.variants)
@@ -160,37 +196,64 @@ class OmniSenseLoop:
                 planned_latency = plan.t_done
                 if self.on_plan is not None:
                     self.on_plan(plan, list(srois))
-        overhead_alloc = time.perf_counter() - t0
 
-        # ---- execute the plan (inference is NOT overhead) ----
+        requests: list[InferenceRequest] = []
         if plan is not None:
             for j, model_idx in enumerate(plan.models):
                 if model_idx == 0:
                     continue  # skipped SRoI
-                var = self.variants[model_idx - 1]
-                dets = self.backend.infer_sroi(frame, srois[j], var)
-                # special SRoIs keep only their largest detection
-                if srois[j].special and dets:
-                    dets = [max(dets, key=lambda d: d.noa())]
-                detections.extend(dets)
-
-        # ---- spherical object discovery ----
-        self._discovery.observe(len(srois))
-        discovered = False
-        if explore_frame or self._discovery.should_discover(
-                self.budget_s, planned_latency):
-            detections.extend(self.backend.infer_erp(
-                frame, self.variants[explore_idx]))
-            discovered = True
-            planned_latency = min(self.budget_s,
-                                  planned_latency + explore_cost)
-
-        result = FrameResult(
-            detections=detections,
+                requests.append(InferenceRequest(
+                    region=srois[j],
+                    variant=self.variants[model_idx - 1],
+                    slot=len(requests),
+                    special=srois[j].special,
+                    frame=frame,
+                ))
+        return PendingFrame(
+            frame=frame,
             srois=srois,
             plan=plan,
             planned_latency=planned_latency,
-            overhead_s=overhead_alloc,
+            overhead_s=time.perf_counter() - t0,
+            explore_frame=explore_frame,
+            explore_idx=explore_idx,
+            explore_cost=explore_cost,
+            requests=requests,
+        )
+
+    def finish_frame(self, pending: PendingFrame,
+                     request_detections: Sequence[list[sroi.Detection]], *,
+                     defer_nms: bool = False) -> FrameResult:
+        """Ingestion half: take the per-request detection lists (in
+        ``pending.requests`` slot order), run the discovery pass, and
+        complete the frame exactly like the inline path.  ``defer_nms``
+        has the same contract as :meth:`process_frame`."""
+        assert len(request_detections) == len(pending.requests)
+        detections: list[sroi.Detection] = []
+        for req, dets in zip(pending.requests, request_detections):
+            # special SRoIs keep only their largest detection
+            if req.special and dets:
+                dets = [max(dets, key=lambda d: d.noa())]
+            detections.extend(dets)
+
+        # ---- spherical object discovery ----
+        planned_latency = pending.planned_latency
+        self._discovery.observe(len(pending.srois))
+        discovered = False
+        if pending.explore_frame or self._discovery.should_discover(
+                self.budget_s, planned_latency):
+            detections.extend(self.backend.infer_erp(
+                pending.frame, self.variants[pending.explore_idx]))
+            discovered = True
+            planned_latency = min(self.budget_s,
+                                  planned_latency + pending.explore_cost)
+
+        result = FrameResult(
+            detections=detections,
+            srois=pending.srois,
+            plan=pending.plan,
+            planned_latency=planned_latency,
+            overhead_s=pending.overhead_s,
             discovered=discovered,
         )
         if defer_nms:
@@ -202,6 +265,25 @@ class OmniSenseLoop:
         self.finalize_detections(result, self.nms_keep(detections))
         result.overhead_s += time.perf_counter() - t1
         return result
+
+    def process_frame(self, frame: np.ndarray, *,
+                      defer_nms: bool = False) -> FrameResult:
+        """Run one frame inline (the per-request execution path):
+        emission, per-request backend inference in plan order, then
+        ingestion.  With ``defer_nms=True`` the returned result holds
+        the RAW (pre-NMS) detections and the history is NOT yet
+        updated; the caller owns suppression and must hand the
+        keep-mask back via :meth:`finalize_detections` before the next
+        frame.  ``PodServer`` instead splits the frame into
+        :meth:`begin_frame` / :meth:`finish_frame` so inference batches
+        across streams and suppression batches across the tick."""
+        pending = self.begin_frame(frame)
+        # ---- execute the plan (inference is NOT overhead) ----
+        request_detections = [
+            self.backend.infer_sroi(frame, req.region, req.variant)
+            for req in pending.requests]
+        return self.finish_frame(pending, request_detections,
+                                 defer_nms=defer_nms)
 
     def nms_keep(self, detections: list[sroi.Detection]) -> np.ndarray | None:
         """Keep-mask for one frame's detections at this stream's

@@ -57,6 +57,10 @@ def main() -> None:
     if stats.batch_sizes:
         print(f"variant batches: mean={stats.mean_batch:.2f} "
               f"p95={int(np.percentile(stats.batch_sizes, 95))}")
+    print(f"batched dispatches: {stats.dispatches}  "
+          f"inference gain: {stats.batching_gain:.2f}x "
+          f"({stats.sum_batched_inf_s:.1f}s batched vs "
+          f"{stats.sum_per_request_inf_s:.1f}s per-request)")
 
 
 if __name__ == "__main__":

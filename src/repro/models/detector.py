@@ -170,9 +170,16 @@ def apply(params: Params, images: Array, cfg: DetectorConfig) -> list[Array]:
 
 
 def decode(outs: list[Array], cfg: DetectorConfig,
-           conf_threshold: float = 0.3, max_det: int = 128):
+           conf_threshold: float = 0.3, max_det: int = 128,
+           valid: Array | None = None):
     """Raw heads -> (boxes_xyxy (B, N, 4) in pixels, scores (B, N),
-    classes (B, N)); N = max_det, padded with score 0."""
+    classes (B, N)); N = max_det, padded with score 0.
+
+    ``valid`` is an optional (B,) bool mask for shape-bucketed batched
+    inference: rows padded onto the batch (``valid == False``) decode
+    with every score forced to 0, so padding can never emit detections
+    while the batch keeps its bucketed static shape.
+    """
     all_boxes, all_scores, all_cls = [], [], []
     for out, stride in zip(outs, cfg.strides):
         b, gh, gw, _ = out.shape
@@ -195,6 +202,8 @@ def decode(outs: list[Array], cfg: DetectorConfig,
     scores = jnp.concatenate(all_scores, axis=1)
     cls = jnp.concatenate(all_cls, axis=1)
     scores = jnp.where(scores >= conf_threshold, scores, 0.0)
+    if valid is not None:
+        scores = jnp.where(valid[:, None], scores, 0.0)
     top_scores, idx = jax.lax.top_k(scores, min(max_det, scores.shape[1]))
     top_boxes = jnp.take_along_axis(boxes, idx[..., None], axis=1)
     top_cls = jnp.take_along_axis(cls, idx, axis=1)

@@ -20,7 +20,9 @@ import numpy as np
 
 from repro.core import accuracy as acc_mod
 from repro.core import allocation, sroi as sroi_mod
+from repro.core.omnisense import InferenceRequest
 from repro.core.sphere import pad_detection_rows, sph_nms_batch
+from repro.serving.batching import QueuedRequest, ShapeBuckets, VariantQueues
 from repro.serving.scheduler import OmniSenseLatencyModel
 
 CUBE_CENTERS = [
@@ -48,8 +50,18 @@ def run_erp_baseline(video, backend, latency: OmniSenseLatencyModel,
 
 def run_cubemap_baseline(video, backend, latency: OmniSenseLatencyModel,
                          variant: acc_mod.ModelProfile, frames: range,
-                         nms_threshold: float = 0.6):
-    """Six 90-degree faces, preprocessing pipelined with inference.
+                         nms_threshold: float = 0.6,
+                         face_batch: int = 1):
+    """Six 90-degree faces through the pod's variant-queue machinery.
+
+    Faces enqueue as :class:`InferenceRequest`s and drain through the
+    same bucketed ``infer_srois_batched`` dispatch path as
+    ``PodServer`` (resource-agnostic baselines share the serving
+    engine, they just never adapt).  ``face_batch=1`` reproduces the
+    paper's single-GPU implementation — preprocessing pipelined with
+    per-face inference — and keeps the calibrated E2E formula exactly;
+    ``face_batch>1`` additionally batches faces per forward (beyond
+    paper: serial preprocessing + sub-linear batched inference).
 
     Frames are independent (no detection feedback), so the overlapping
     face-edge detections of the WHOLE range are merged in one padded
@@ -60,21 +72,36 @@ def run_cubemap_baseline(video, backend, latency: OmniSenseLatencyModel,
     e2e = []
     d_pre = latency._pre(variant)
     d_inf = latency._inf(variant)
-    pipelined = allocation.plan_latency(
-        tuple([1] * 6),
-        np.array([[0.0] * 6, [d_pre] * 6]),
-        np.array([[0.0] * 6, [d_inf] * 6]))
+    n_faces = len(CUBE_CENTERS)
+    buckets = ShapeBuckets.for_max_batch(face_batch)
+    if face_batch == 1:
+        per_frame_e2e = allocation.plan_latency(
+            tuple([1] * n_faces),
+            np.array([[0.0] * n_faces, [d_pre] * n_faces]),
+            np.array([[0.0] * n_faces, [d_inf] * n_faces]))
+    else:
+        per_frame_e2e = n_faces * d_pre + sum(
+            latency.batched_inference_delay(variant, b)
+            for b in buckets.split(n_faces))
+    queues = VariantQueues(buckets)
     per_frame: list[tuple[int, list]] = []
     for f in frames:
         backend.set_frame(f)
-        dets = []
-        for ct, cp in CUBE_CENTERS:
+        for slot, (ct, cp) in enumerate(CUBE_CENTERS):
             region = sroi_mod.SRoI(center=(ct, cp), fov=fov)
-            dets.extend(backend.infer_sroi(None, region, variant))
+            queues.put(QueuedRequest(
+                request=InferenceRequest(region=region, variant=variant,
+                                         slot=slot, special=False),
+                owner=f, backend=backend, latency_model=latency))
+        results, _ = queues.drain()
+        by_slot = {item.request.slot: d for item, d in results}
+        dets = []
+        for slot in range(n_faces):
+            dets.extend(by_slot[slot])
         per_frame.append((f, dets))
         if variant.location != "device":
             latency.observe_delivery(variant)
-        e2e.append(pipelined)
+        e2e.append(per_frame_e2e)
 
     preds = []
     rows = [(f, dets) for f, dets in per_frame if dets]

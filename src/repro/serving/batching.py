@@ -1,0 +1,185 @@
+"""Shape-bucketed variant batching for the pod serving loop.
+
+At pod scale the dominant serving lever is *variant batching*: PI
+requests from many streams that chose the same model variant are
+stacked into one accelerator forward.  Batched dispatch on a jitted
+backend recompiles per input shape, so unrestricted batch sizes would
+turn every new stream count into an XLA compile; this module bounds the
+shape space instead (the ROADMAP shape-bucketing item):
+
+  * **batch buckets** — a small fixed ladder of batch sizes.  A drained
+    chunk of ``b`` requests is zero-padded up to the smallest bucket
+    ``>= b`` and the padded rows are masked out of the decode, so the
+    jit cache holds at most ``len(batch_sizes)`` entries per variant.
+  * **resolution buckets** — the set of legal crop resolutions.  Each
+    variant projects its SRoIs at its own fixed input size, so the
+    resolution set is exactly the ladder's input sizes; the helper
+    validates that no dispatch can introduce an off-ladder shape.
+
+``VariantQueues`` is the tick-level request fabric shared by
+``PodServer`` and the baselines: requests accumulate per variant and
+drain into bucketed chunks, each chunk becoming one batched detector
+forward (``repro.serving.scheduler.*.infer_srois_batched``).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Sequence
+
+DEFAULT_BATCH_BUCKETS = (1, 2, 4, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeBuckets:
+    """The bounded shape space of batched dispatches.
+
+    ``batch_sizes`` must be strictly increasing; ``resolutions`` is the
+    optional set of legal (square) crop sizes (``None`` = unrestricted,
+    for oracle backends that never touch pixels).
+    """
+
+    batch_sizes: tuple[int, ...] = DEFAULT_BATCH_BUCKETS
+    resolutions: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        if not self.batch_sizes or any(b <= 0 for b in self.batch_sizes):
+            raise ValueError(f"invalid batch buckets {self.batch_sizes}")
+        if list(self.batch_sizes) != sorted(set(self.batch_sizes)):
+            raise ValueError(
+                f"batch buckets must be strictly increasing: {self.batch_sizes}")
+
+    @property
+    def max_batch(self) -> int:
+        return self.batch_sizes[-1]
+
+    def pad_batch(self, b: int) -> int:
+        """Smallest bucket >= ``b`` (the padded dispatch batch size)."""
+        if b <= 0 or b > self.max_batch:
+            raise ValueError(f"batch {b} outside buckets {self.batch_sizes}")
+        for size in self.batch_sizes:
+            if size >= b:
+                return size
+        raise AssertionError  # unreachable: b <= max_batch
+
+    def split(self, count: int) -> list[int]:
+        """Split ``count`` queued requests into chunk sizes <= max_batch.
+
+        Greedy full-bucket chunks followed by one remainder chunk; the
+        remainder still pads up to a bucket, never to an ad-hoc shape.
+        """
+        out, rest = [], count
+        while rest > self.max_batch:
+            out.append(self.max_batch)
+            rest -= self.max_batch
+        if rest:
+            out.append(rest)
+        return out
+
+    def bucket_resolution(self, size: int) -> int:
+        """Validate/snap a crop resolution into the bounded set."""
+        if self.resolutions is None:
+            return size
+        if size in self.resolutions:
+            return size
+        raise ValueError(
+            f"crop resolution {size} outside buckets {self.resolutions}")
+
+    @classmethod
+    def for_max_batch(cls, max_batch: int,
+                      resolutions: tuple[int, ...] | None = None
+                      ) -> "ShapeBuckets":
+        """Default bucket ladder capped at ``max_batch`` (kept as the
+        top bucket so a full drain always lands on an exact bucket)."""
+        sizes = tuple(b for b in DEFAULT_BATCH_BUCKETS if b < max_batch)
+        return cls(sizes + (max_batch,), resolutions)
+
+
+@dataclasses.dataclass
+class QueuedRequest:
+    """One SRoI inference request parked in a variant queue."""
+
+    request: Any                  # repro.core.omnisense.InferenceRequest
+    owner: Any                    # opaque scatter key (the pending frame)
+    backend: Any                  # executes the batched forward
+    latency_model: Any = None     # prices the dispatch (may be None)
+
+
+class VariantQueues:
+    """Per-variant request queues drained into bucketed batched forwards.
+
+    ``put`` parks requests; ``drain`` empties every queue into chunks of
+    at most ``buckets.max_batch`` requests, issues one
+    ``infer_srois_batched`` call per (chunk, backend) group and returns
+    the per-request detections plus per-dispatch accounting records.
+    Variants are drained in sorted-name order so a tick's dispatch
+    schedule is deterministic.
+    """
+
+    def __init__(self, buckets: ShapeBuckets | None = None):
+        self.buckets = buckets or ShapeBuckets()
+        self._queues: dict[str, collections.deque] = collections.defaultdict(
+            collections.deque)
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def put(self, item: QueuedRequest) -> None:
+        self._queues[item.request.variant.name].append(item)
+
+    def drain(self) -> tuple[list[tuple[QueuedRequest, list]], list[dict]]:
+        """Empty all queues; returns (results, dispatch records).
+
+        ``results``: (queued_request, detections) per drained request,
+        in dispatch order.  ``dispatches``: one record per batched
+        forward with the variant, real batch ``b``, padded bucket size
+        and the items it served — the tick schedule the server prices.
+        """
+        results: list[tuple[QueuedRequest, list]] = []
+        dispatches: list[dict] = []
+        for name in sorted(self._queues):
+            q = self._queues[name]
+            while q:
+                chunk = [q.popleft()
+                         for _ in range(min(len(q), self.buckets.max_batch))]
+                results.extend(self._dispatch_chunk(name, chunk, dispatches))
+        return results, dispatches
+
+    def _dispatch_chunk(self, name: str, chunk: Sequence[QueuedRequest],
+                        dispatches: list[dict]):
+        """One drained chunk -> one batched detector forward.
+
+        Streams normally share one backend (the real detector ladder),
+        so the whole chunk is a single ``infer_srois_batched`` call;
+        per-stream oracle backends sub-group by identity (an execution
+        detail of the simulation — the chunk remains ONE dispatch in
+        the tick schedule the server prices).
+        """
+        variant = chunk[0].request.variant
+        groups: dict[int, list[QueuedRequest]] = {}
+        for item in chunk:
+            groups.setdefault(id(item.backend), []).append(item)
+        out = []
+        for items in groups.values():
+            dets = items[0].backend.infer_srois_batched(
+                [(it.request.frame, it.request.region) for it in items],
+                variant)
+            assert len(dets) == len(items)
+            out.extend(zip(items, dets))
+        # `semantic`: every backend in the chunk declares its batched
+        # entry a pure simulation (`semantic_batch = True`, e.g. the
+        # oracle), so the chunk models ONE shared-accelerator dispatch
+        # and is priced as such.  Otherwise each backend group is a
+        # real forward and must be priced individually.
+        dispatches.append(dict(
+            variant=name,
+            b=len(chunk),
+            padded=self.buckets.pad_batch(len(chunk)),
+            items=list(chunk),
+            forwards=len(groups),
+            group_sizes=[len(items) for items in groups.values()],
+            semantic=all(getattr(it.backend, "semantic_batch", False)
+                         for it in chunk),
+        ))
+        return out

@@ -42,10 +42,14 @@ from repro.serving.profiles import StageCosts
 
 class OmniSenseLatencyModel:
     def __init__(self, costs: StageCosts, network: NetworkModel,
-                 profiler: PassiveProfiler | None = None):
+                 profiler: PassiveProfiler | None = None,
+                 batch_marginal: float = 0.15):
         self.costs = costs
         self.network = network
         self.profiler = profiler or PassiveProfiler()
+        # marginal cost of each item beyond the first in a batched
+        # forward (the standard sub-linear batching curve)
+        self.batch_marginal = batch_marginal
 
     def _pre(self, variant: acc_mod.ModelProfile) -> float:
         mpix = variant.input_size ** 2 / 1e6
@@ -75,6 +79,29 @@ class OmniSenseLatencyModel:
             d_pre[1 + i, :] = self._pre(var)
             d_inf[1 + i, :] = self._inf(var)
         return d_pre, d_inf
+
+    def batched_inference_delay(self, variant: acc_mod.ModelProfile,
+                                batch_size: int) -> float:
+        """Cost of ONE batched forward serving ``batch_size`` PIs.
+
+        Per-batch fixed cost (the b=1 forward: dispatch, weight
+        streaming and — for remote variants — the bundled payload
+        delivery) plus a ``batch_marginal`` fraction of it for every
+        additional item.  ``batch_size == 1`` reduces exactly to the
+        per-request :meth:`_inf` term, so the allocator's utility
+        ordering (which prices requests individually) is unchanged by
+        the batched serving path; the pod server charges this instead
+        of summing ``_inf`` per request.
+        """
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        return self._inf(variant) * (
+            1.0 + (batch_size - 1) * self.batch_marginal)
+
+    def amortized_inference_delay(self, variant: acc_mod.ModelProfile,
+                                  batch_size: int) -> float:
+        """Per-item share of a batched forward (decreasing in batch)."""
+        return self.batched_inference_delay(variant, batch_size) / batch_size
 
     def observe_delivery(self, variant: acc_mod.ModelProfile) -> float:
         """Simulate one remote delivery, feed the passive profiler."""
@@ -115,12 +142,19 @@ def _angular_distance(det: sroi_mod.Detection, region: sroi_mod.SRoI) -> float:
 
 @dataclasses.dataclass
 class OracleBackend:
-    """Ground-truth-driven detection sampling (see module docstring)."""
+    """Ground-truth-driven detection sampling (see module docstring).
+
+    ``semantic_batch``: the batched entry point is a pure simulation
+    (no accelerator behind it), so the pod server prices a drained
+    chunk spanning per-stream oracle instances as ONE shared-
+    accelerator dispatch — the regime being simulated.
+    """
 
     video: SyntheticVideo
     frame: int = 0
     seed: int = 0
     fp_rate: float = 0.02
+    semantic_batch = True  # class-level: not a dataclass field
 
     def set_frame(self, frame: int) -> None:
         self.frame = frame
@@ -186,6 +220,18 @@ class OracleBackend:
                             ref_sr=sroi_mod.region_solid_angle(*region.fov),
                             region=region)
 
+    def infer_srois_batched(self, items, variant: acc_mod.ModelProfile):
+        """Batched entry point of the variant-queue machinery.
+
+        ``items`` is a list of ``(frame_img, region)`` pairs.  The
+        oracle samples from per-stream ground truth, so the "batch" is
+        semantic — results are bit-identical to per-request
+        :meth:`infer_sroi` calls, which is exactly what the
+        batched-vs-inline equivalence tests pin.
+        """
+        return [self.infer_sroi(frame_img, region, variant)
+                for frame_img, region in items]
+
     def infer_erp(self, frame_img, variant: acc_mod.ModelProfile):
         """Full-ERP inference: distortion + downsampling degrade small
         objects — modelled as a size-level demotion of the gav."""
@@ -201,43 +247,63 @@ class OracleBackend:
 
 
 class JaxDetectorBackend:
-    """Real path: Pallas gnomonic projection + JAX detector inference."""
+    """Real path: Pallas gnomonic projection + JAX detector inference.
+
+    Exposes BOTH execution paths of the serving loop:
+
+      * :meth:`infer_sroi` — the per-request path (one eager forward
+        per PI), used by standalone loops and as the batching baseline;
+      * :meth:`infer_srois_batched` — the pod path: the tick's crops
+        for one variant are stacked, zero-padded up to a batch-size
+        bucket (``repro.serving.batching.ShapeBuckets``) and pushed
+        through ONE jitted ``apply`` + masked ``decode``.  The jit
+        cache is keyed by (variant, padded batch), so a serving
+        lifetime compiles at most ``len(buckets) * n_variants``
+        distinct programs no matter how stream counts fluctuate
+        (``trace_count`` counts actual retraces for the regression
+        tests).
+    """
 
     def __init__(self, variants_cfg, params_per_variant, conf: float = 0.25,
-                 use_kernel: bool = True, max_det: int = 16):
+                 use_kernel: bool = True, max_det: int = 16, buckets=None):
+        from repro.serving.batching import ShapeBuckets
+
         self.cfgs = list(variants_cfg)
         self.params = list(params_per_variant)
         self.conf = conf
         self.use_kernel = use_kernel
         self.max_det = max_det
+        self.buckets = buckets or ShapeBuckets(
+            resolutions=tuple(sorted({c.input_size for c in self.cfgs})))
+        self._jit_cache: dict = {}
+        self.trace_count = 0  # incremented at trace time only
 
-    def infer_sroi(self, frame_img, region: sroi_mod.SRoI,
-                   variant: acc_mod.ModelProfile):
+    def _project(self, frame_img, region: sroi_mod.SRoI, size: int):
+        """SRoI -> (size, size, 3) PI; shared by both execution paths
+        so batched and per-request crops are identical."""
         import jax.numpy as jnp
 
-        from repro.kernels.gnomonic import ops as gno_ops
-        from repro.models import detector as det_mod
+        if self.use_kernel:
+            from repro.kernels.gnomonic import ops as gno_ops
 
-        idx = variant.index - 1
-        cfg = self.cfgs[idx]
-        size = cfg.input_size
-        pi = gno_ops.project_sroi_kernel(
-            jnp.asarray(frame_img), region.center[0], region.center[1],
-            region.fov, (size, size)) if self.use_kernel else None
-        if pi is None:
-            from repro.core.projection import project_sroi
+            return gno_ops.project_sroi_kernel(
+                jnp.asarray(frame_img), region.center[0], region.center[1],
+                region.fov, (size, size))
+        from repro.core.projection import project_sroi
 
-            pi = project_sroi(jnp.asarray(frame_img),
-                              jnp.asarray(region.center[0]),
-                              jnp.asarray(region.center[1]),
-                              region.fov, (size, size))
-        outs = det_mod.apply(self.params[idx], pi[None], cfg)
-        boxes, scores, classes = det_mod.decode(outs, cfg, self.conf,
-                                                max_det=self.max_det)
-        boxes, scores, classes = (np.asarray(boxes[0]), np.asarray(scores[0]),
-                                  np.asarray(classes[0]))
+        return project_sroi(jnp.asarray(frame_img),
+                            jnp.asarray(region.center[0]),
+                            jnp.asarray(region.center[1]),
+                            region.fov, (size, size))
+
+    def _row_to_dets(self, boxes, scores, classes,
+                     region: sroi_mod.SRoI, size: int):
+        """Back-project one row of decoded PI boxes to SphBB detections."""
+        import jax.numpy as jnp
+
         dets = []
-        for b, s, c in zip(boxes, scores, classes):
+        for b, s, c in zip(np.asarray(boxes), np.asarray(scores),
+                           np.asarray(classes)):
             if s <= 0:
                 continue
             sphbb = np.asarray(pi_box_to_sphbb(
@@ -246,6 +312,74 @@ class JaxDetectorBackend:
             dets.append(sroi_mod.Detection(box=sphbb, category=int(c),
                                            score=float(s)))
         return dets
+
+    def infer_sroi(self, frame_img, region: sroi_mod.SRoI,
+                   variant: acc_mod.ModelProfile):
+        from repro.models import detector as det_mod
+
+        idx = variant.index - 1
+        cfg = self.cfgs[idx]
+        size = cfg.input_size
+        pi = self._project(frame_img, region, size)
+        outs = det_mod.apply(self.params[idx], pi[None], cfg)
+        boxes, scores, classes = det_mod.decode(outs, cfg, self.conf,
+                                                max_det=self.max_det)
+        return self._row_to_dets(boxes[0], scores[0], classes[0], region, size)
+
+    def _batched_fn(self, idx: int, b_pad: int):
+        """The jitted (apply + masked decode) program for one
+        (variant, padded-batch) shape bucket."""
+        import jax
+
+        key = (idx, b_pad)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            from repro.models import detector as det_mod
+
+            cfg = self.cfgs[idx]
+
+            def forward(params, imgs, valid):
+                self.trace_count += 1  # runs at trace time only
+                outs = det_mod.apply(params, imgs, cfg)
+                return det_mod.decode(outs, cfg, self.conf,
+                                      max_det=self.max_det, valid=valid)
+
+            fn = self._jit_cache[key] = jax.jit(forward)
+        return fn
+
+    def infer_srois_batched(self, items, variant: acc_mod.ModelProfile):
+        """ONE padded batched forward for a tick's same-variant crops.
+
+        ``items``: list of ``(frame_img, region)``.  Crops are
+        projected at the variant's (bucketed) input resolution, stacked
+        into (B, S, S, 3), zero-padded up to the batch bucket and run
+        through the jitted forward with a validity mask; decoded rows
+        back-project to SphBBs exactly like the per-request path.
+        Chunks larger than the top bucket split into bucket-sized
+        dispatches.
+        """
+        import jax.numpy as jnp
+
+        idx = variant.index - 1
+        cfg = self.cfgs[idx]
+        size = self.buckets.bucket_resolution(cfg.input_size)
+        out: list[list] = []
+        lo = 0
+        for b in self.buckets.split(len(items)):
+            chunk = items[lo:lo + b]
+            lo += b
+            pis = jnp.stack([self._project(f, r, size) for f, r in chunk])
+            b_pad = self.buckets.pad_batch(b)
+            if b_pad > b:
+                pis = jnp.concatenate(
+                    [pis, jnp.zeros((b_pad - b,) + pis.shape[1:], pis.dtype)])
+            valid = jnp.arange(b_pad) < b
+            boxes, scores, classes = self._batched_fn(idx, b_pad)(
+                self.params[idx], pis, valid)
+            for r, (_, region) in enumerate(chunk):
+                out.append(self._row_to_dets(boxes[r], scores[r], classes[r],
+                                             region, size))
+        return out
 
     def infer_erp(self, frame_img, variant: acc_mod.ModelProfile):
         # ERP-wide pass with the largest model on the resized frame

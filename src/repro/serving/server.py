@@ -6,19 +6,29 @@ NMS) runs for hundreds of streams, and the interesting systems problem
 becomes *variant batching*: PI requests from many streams that chose the
 same model variant are batched into one accelerator dispatch.
 
-``PodServer`` simulates that loop with a virtual clock:
+``PodServer`` runs that loop against a virtual clock:
+
   * each stream runs its own ``OmniSenseLoop`` state (history,
-    discovery, allocator) against the shared latency model;
-  * per tick, the scheduler drains the per-variant queues, forms
-    batches up to ``max_batch``, and charges
-    ``batch_latency = infer_s * (1 + (batch-1) * marginal)`` — the
-    standard sub-linear batching curve;
+    discovery, allocator) against the shared latency model; per tick
+    every loop EMITS its planned inference requests
+    (``begin_frame``) instead of executing them inline;
+  * the requests park in real per-variant queues
+    (``repro.serving.batching.VariantQueues``) and drain into chunks of
+    at most ``max_batch``, each chunk zero-padded up to a batch-size
+    bucket and executed as ONE batched detector forward
+    (``infer_srois_batched``) — S streams choosing V distinct variants
+    issue exactly V batched forwards when V queues fit their buckets;
+  * the decoded detections scatter back to their owning loops
+    (``finish_frame``), which run discovery and defer suppression;
   * spherical NMS is NOT run per stream: every stream finishing in
-    the tick defers suppression (``process_frame(defer_nms=True)``),
-    the raw detections are padded into one ``(B, N, 4)`` stack, and a
-    single ``sph_nms_batch`` dispatch suppresses all rows at once
-    before the keep-masks are handed back to each loop's history;
-  * utilisation, queue depths and per-stream E2E are reported.
+    the tick defers suppression, the raw detections are padded into one
+    ``(B, N, 4)`` stack, and a single ``sph_nms_batch`` dispatch
+    suppresses all rows at once — the inference dispatch and the NMS
+    dispatch share one tick schedule;
+  * the tick's inference time is charged per DISPATCH via
+    ``OmniSenseLatencyModel.batched_inference_delay`` (per-batch fixed
+    cost + per-item marginal), not as a per-request ``_inf`` sum;
+    utilisation, queue depths and per-stream E2E are reported.
 
 This is the runnable stand-in for the 256-chip serving mesh (the
 dry-run proves the detector steps compile on that mesh; this loop
@@ -27,14 +37,15 @@ proves the control plane sustains multi-stream operation).
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 import time
+from typing import Callable
 
 import numpy as np
 
 from repro.core.omnisense import OmniSenseLoop
 from repro.core.sphere import pad_detection_rows, sph_nms_batch
+from repro.serving.batching import QueuedRequest, ShapeBuckets, VariantQueues
 
 
 @dataclasses.dataclass
@@ -44,6 +55,10 @@ class ServeStats:
     sum_e2e: float = 0.0
     sum_overhead: float = 0.0
     batch_sizes: list = dataclasses.field(default_factory=list)
+    # batched-dispatch accounting (one entry of work per tick)
+    dispatches: int = 0
+    sum_batched_inf_s: float = 0.0      # what the pod actually pays
+    sum_per_request_inf_s: float = 0.0  # what B per-request forwards would
 
     @property
     def mean_e2e(self) -> float:
@@ -53,55 +68,130 @@ class ServeStats:
     def mean_batch(self) -> float:
         return float(np.mean(self.batch_sizes)) if self.batch_sizes else 0.0
 
+    @property
+    def batching_gain(self) -> float:
+        """Per-request inference cost over batched cost (>= 1 when
+        batching pays; 1.0 when every dispatch had batch 1)."""
+        if self.sum_batched_inf_s <= 0:
+            return 1.0
+        return self.sum_per_request_inf_s / self.sum_batched_inf_s
+
 
 class PodServer:
+    """Variant-batched tick scheduler over per-stream OmniSense loops.
+
+    ``frame_source(stream_idx, frame_idx)`` optionally supplies real
+    frame pixels per stream (the Jax detector path); oracle backends
+    sample ground truth and take ``None``.
+    """
+
     def __init__(self, loops: list[OmniSenseLoop], backends: list,
-                 max_batch: int = 8, marginal_batch_cost: float = 0.15):
+                 max_batch: int = 8, marginal_batch_cost: float | None = None,
+                 buckets: ShapeBuckets | None = None,
+                 frame_source: Callable[[int, int], np.ndarray] | None = None):
         assert len(loops) == len(backends)
         self.loops = loops
         self.backends = backends
         self.max_batch = max_batch
+        # None = defer to each latency model's batched_inference_delay
+        # (the default OmniSenseLatencyModel curve); a float OVERRIDES
+        # the curve for every dispatch the server prices.
         self.marginal = marginal_batch_cost
+        self.buckets = buckets or ShapeBuckets.for_max_batch(max_batch)
+        if self.buckets.max_batch != max_batch:
+            raise ValueError(
+                f"buckets top out at {self.buckets.max_batch}, "
+                f"max_batch is {max_batch}")
+        # a drained chunk must be ONE backend dispatch: a backend whose
+        # own bucket ladder tops out below the server's would silently
+        # split chunks and the priced schedule would diverge from the
+        # executed one.
+        for b in backends:
+            b_buckets = getattr(b, "buckets", None)
+            if b_buckets is not None and b_buckets.max_batch < max_batch:
+                raise ValueError(
+                    f"backend buckets top out at {b_buckets.max_batch} < "
+                    f"max_batch {max_batch}; align the backend's "
+                    "ShapeBuckets with the server's")
+        self.frame_source = frame_source
+        self.queues = VariantQueues(self.buckets)
         self.stats = ServeStats()
-        self._queues: dict[str, collections.deque] = collections.defaultdict(
-            collections.deque)
+
+    def _dispatch_cost(self, dispatch: dict) -> tuple[float, float]:
+        """(batched, per-request-sum) inference seconds of one dispatch.
+
+        A chunk of per-stream *simulation* backends (oracle:
+        ``semantic_batch``) models one shared-accelerator forward and
+        is priced at the chunk's batch size; with real backends every
+        executed backend group is its own forward, so pricing follows
+        ``group_sizes`` and cannot overstate batching that never ran.
+        """
+        variant = dispatch["items"][0].request.variant
+        lat = dispatch["items"][0].latency_model
+        blat = getattr(lat, "batched_inference_delay", None)
+        single = blat(variant, 1) if blat is not None else variant.infer_s
+
+        def curve(n: int) -> float:
+            if self.marginal is not None:  # explicit override
+                return single * (1.0 + (n - 1) * self.marginal)
+            if blat is not None:
+                return blat(variant, n)
+            return single * (1.0 + (n - 1) * 0.15)
+
+        b = dispatch["b"]
+        if dispatch["semantic"]:
+            batched = curve(b)
+        else:
+            batched = sum(curve(g) for g in dispatch["group_sizes"])
+        return batched, single * b
 
     def step(self, frame_idx: int) -> None:
         """Process one frame for every stream (one scheduler tick)."""
+        # ---- emission: every loop plans and parks its requests ----
+        pendings = []
+        for s, (loop, backend) in enumerate(zip(self.loops, self.backends)):
+            if hasattr(backend, "set_frame"):
+                backend.set_frame(frame_idx)
+            frame = (self.frame_source(s, frame_idx)
+                     if self.frame_source is not None else None)
+            pending = loop.begin_frame(frame)
+            pendings.append((loop, pending))
+            for req in pending.requests:
+                self.queues.put(QueuedRequest(
+                    request=req, owner=pending, backend=backend,
+                    latency_model=loop.latency_model))
+
+        # ---- drain: bucketed batched forwards, one per variant chunk ----
+        results, dispatches = self.queues.drain()
+        scatter: dict[int, dict[int, list]] = {}
+        for item, dets in results:
+            scatter.setdefault(id(item.owner), {})[item.request.slot] = dets
+        for d in dispatches:
+            self.stats.dispatches += 1
+            self.stats.batch_sizes.append(d["b"])
+            batched, per_request = self._dispatch_cost(d)
+            self.stats.sum_batched_inf_s += batched
+            self.stats.sum_per_request_inf_s += per_request
+
+        # ---- ingestion: scatter detections back, defer suppression ----
         plans = []
-        for loop, backend in zip(self.loops, self.backends):
-            backend.set_frame(frame_idx)
-            captured = {}
-            loop.on_plan = lambda plan, srois, c=captured: c.update(
-                plan=plan, srois=srois)
-            result = loop.process_frame(None, defer_nms=True)
-            plans.append((loop, captured, result))
+        for loop, pending in pendings:
+            slots = scatter.get(id(pending), {})
+            request_detections = [slots.get(i, [])
+                                  for i in range(len(pending.requests))]
+            result = loop.finish_frame(pending, request_detections,
+                                       defer_nms=True)
+            plans.append((loop, result))
 
         # one batched spherical-NMS dispatch for every stream that
         # produced detections this tick (instead of B Python loops)
         self.stats.sum_overhead += self._suppress_tick(plans)
 
-        for _, _, result in plans:
+        for _, result in plans:
             self.stats.frames += 1
             self.stats.total_detections += len(result.detections)
             self.stats.sum_e2e += result.planned_latency
             self.stats.sum_overhead += result.overhead_s
-
-        # variant batching across streams: count how each variant's
-        # queue would batch this tick
-        per_variant = collections.Counter()
-        for loop, captured, _ in plans:
-            plan = captured.get("plan")
-            if plan is None:
-                continue
-            for mi in plan.models:
-                if mi > 0:
-                    per_variant[loop.variants[mi - 1].name] += 1
-        for name, count in per_variant.items():
-            while count > 0:
-                b = min(count, self.max_batch)
-                self.stats.batch_sizes.append(b)
-                count -= b
 
     def _suppress_tick(self, plans: list) -> float:
         """Batched spherical NMS across the tick; returns wall time.
@@ -114,7 +204,7 @@ class PodServer:
         disagree on the NMS threshold.
         """
         t0 = time.perf_counter()
-        rows = [(loop, res) for loop, _, res in plans if res.detections]
+        rows = [(loop, res) for loop, res in plans if res.detections]
         thresholds = {loop.nms_threshold for loop, _ in rows}
         keeps: dict[int, np.ndarray] = {}
         if rows and len(thresholds) == 1:
@@ -127,7 +217,7 @@ class PodServer:
         elif rows:  # heterogeneous thresholds: per-stream single rows
             for loop, res in rows:
                 keeps[id(res)] = loop.nms_keep(res.detections)
-        for loop, _, res in plans:
+        for loop, res in plans:
             loop.finalize_detections(res, keeps.get(id(res)))
         return time.perf_counter() - t0
 

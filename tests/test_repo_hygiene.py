@@ -1,0 +1,45 @@
+"""Repository hygiene gates, enforced in the fast tier (and CI).
+
+  * no compiled Python artifacts (``__pycache__``/``*.pyc``) may ever
+    be committed — they are machine-specific noise and mask real diffs;
+  * ``PodServer.step`` must stay a real batched execution engine: the
+    ``collections.Counter`` variant-batching *simulation* it replaced
+    (PR 2) must not creep back in.
+"""
+
+import inspect
+import re
+import subprocess
+
+import pytest
+
+from repro.serving import server as server_mod
+
+COMPILED = re.compile(r"(\.py[co]$|(^|/)__pycache__(/|$))")
+
+
+def _tracked_files():
+    try:
+        out = subprocess.run(
+            ["git", "ls-files"], capture_output=True, text=True, timeout=30,
+            cwd=str(__import__("pathlib").Path(__file__).resolve().parent.parent))
+    except (OSError, subprocess.TimeoutExpired):  # pragma: no cover
+        pytest.skip("git unavailable")
+    if out.returncode != 0:  # pragma: no cover - e.g. sdist without .git
+        pytest.skip("not a git checkout")
+    return out.stdout.splitlines()
+
+
+def test_no_tracked_compiled_artifacts():
+    offenders = [p for p in _tracked_files() if COMPILED.search(p)]
+    assert not offenders, (
+        f"compiled artifacts committed: {offenders}; "
+        "remove them (git rm --cached) — .gitignore already excludes them")
+
+
+def test_pod_server_has_no_counter_simulation():
+    src = inspect.getsource(server_mod)
+    assert "Counter" not in src, (
+        "PodServer must batch variants through real per-variant queues "
+        "(repro.serving.batching), not a collections.Counter simulation")
+    assert "VariantQueues" in src
