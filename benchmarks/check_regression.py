@@ -1,0 +1,75 @@
+"""Nightly bench-regression gate for the serving benchmark.
+
+Compares a freshly measured ``BENCH_SERVE.json`` against the snapshot
+committed in the repo and FAILS (exit 1) when the batched-vs-per-request
+speedup has regressed by more than ``--max-regression`` (default 25%).
+
+Grid entries match on stream count; the gate compares the MEAN ratio
+over matching entries so a single noisy CI tick doesn't flap the job,
+and ignores entries present on only one side (grid growth is not a
+regression).  Wall-clock noise moves both paths of a ratio together,
+which is why the ratio — not raw microseconds — is gated.
+
+    python benchmarks/check_regression.py \
+        --baseline BENCH_SERVE.json --fresh fresh_serve.json
+
+Invoked from .github/workflows/ci.yml's nightly job after the bench
+writes the fresh snapshot next to the checked-out baseline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def compare(baseline: dict, fresh: dict, max_regression: float,
+            key: str = "speedup", log=print) -> bool:
+    """True when ``fresh`` holds the line vs ``baseline``."""
+    base = {e["streams"]: e[key] for e in baseline.get("grid", [])
+            if key in e}
+    new = {e["streams"]: e[key] for e in fresh.get("grid", [])
+           if key in e}
+    common = sorted(set(base) & set(new))
+    if not common:
+        log(f"check_regression: no comparable grid entries for {key!r}")
+        return False
+    base_mean = sum(base[s] for s in common) / len(common)
+    new_mean = sum(new[s] for s in common) / len(common)
+    floor = base_mean * (1.0 - max_regression)
+    for s in common:
+        log(f"  streams={s:>3}  baseline {key}={base[s]:.2f}  "
+            f"fresh {key}={new[s]:.2f}")
+    log(f"check_regression: mean {key} baseline={base_mean:.2f} "
+        f"fresh={new_mean:.2f} floor={floor:.2f} "
+        f"(max regression {max_regression:.0%})")
+    if new_mean < floor:
+        log(f"::error::serving {key} regressed: {new_mean:.2f} < "
+            f"{floor:.2f} ({base_mean:.2f} baseline - {max_regression:.0%})")
+        return False
+    return True
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_SERVE.json",
+                    help="committed snapshot (the repo checkout's copy)")
+    ap.add_argument("--fresh", required=True,
+                    help="just-measured snapshot to gate")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="tolerated relative drop of the mean ratio")
+    ap.add_argument("--key", default="speedup",
+                    help="grid metric to gate (batched-vs-per-request "
+                         "ratio by default)")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    ok = compare(baseline, fresh, args.max_regression, key=args.key)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

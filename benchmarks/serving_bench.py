@@ -10,20 +10,38 @@ variants it chose — executed two ways on the REAL Jax detector ladder
     pushed through the shape-bucketed ``infer_srois_batched`` jitted
     forward (one dispatch per variant chunk).
 
-Sweeps stream counts and emits one CSV line per config plus
-``BENCH_SERVE.json`` so future snapshots track the trajectory.  Warmup
-runs both paths first so jit compiles (bounded by the bucket ladder)
-are not billed to the measurement.
+``--devices D`` (PR 3) adds the multi-device axis: the variants
+partition into per-variant replica groups (``repro.serving.placement``)
+and every group's forward is launched (shard_map-sharded over the
+group) before any result is resolved.  Two numbers come out of it:
 
-    PYTHONPATH=src:. python -c "from benchmarks import serving_bench; serving_bench.run()"
+  * ``sharded_us`` — measured wall time of the group-concurrent tick
+    (on a real multi-accelerator host the groups overlap; forced host
+    CPU devices share one threadpool, so treat it as a code-path
+    exercise there);
+  * ``tick_speedup`` — the device-aware latency model's tick
+    throughput ratio (dispatch SUM on one device vs MAX over per-group
+    sharded sums), the calibrated paper-regime metric every serving
+    number in this repo uses, with per-group utilisation alongside.
+
+Sweeps stream counts and emits one CSV line per config plus
+``BENCH_SERVE.json`` so future snapshots track the trajectory (the
+nightly regression gate ``benchmarks/check_regression.py`` compares
+the batched-vs-per-request ratio against the committed snapshot).
+Warmup runs both paths first so jit compiles (bounded by the bucket
+ladder) are not billed to the measurement.
+
+    PYTHONPATH=src:. python benchmarks/serving_bench.py --devices 8
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import json
 import math
 import os
+import sys
 import time
 
 import numpy as np
@@ -70,13 +88,50 @@ def _tick_requests(rng, n_streams, variants):
     return out
 
 
-def run(csv=print, grid=SERVE_GRID, json_path=SERVE_JSON_PATH) -> dict:
+def _tick_model_costs(by_variant, buckets, lat, placement=None):
+    """Build one tick's dispatch schedule and price it on the model.
+
+    Single device: every chunk serialises in one group (sum).  With a
+    placement: chunks shard over their variant's replica group and
+    groups run concurrently (max over per-group sums) — priced by
+    ``OmniSenseLatencyModel.tick_schedule_delay``, the same curve the
+    device-aware ``PodServer`` tick accounting uses.
+    """
+    schedule = []
+    for name, items in sorted(by_variant.items()):
+        v = items[0][0]
+        group = placement.group_for(name) if placement is not None else None
+        gidx = group.index if group is not None else 0
+        n_dev = group.n_devices if group is not None else 1
+        for b in buckets.split(len(items)):
+            schedule.append((v, b, n_dev, gidx))
+    return lat.tick_schedule_delay(schedule)
+
+
+def run(csv=print, grid=SERVE_GRID, json_path=SERVE_JSON_PATH,
+        devices: int = 1) -> dict:
     import jax
 
     from repro.serving import profiles
+    from repro.serving.network import NetworkModel
+    from repro.serving.scheduler import OmniSenseLatencyModel
 
     backend = _make_backend()
     variants = profiles.make_ladder(n_categories=8, seed=0)[:len(backend.cfgs)]
+    lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+    placement = None
+    if devices > 1:
+        from repro.serving.placement import VariantPlacement
+
+        n_dev = len(jax.devices())
+        if n_dev < devices:
+            raise RuntimeError(
+                f"{devices} devices requested but jax sees {n_dev}; on a "
+                "CPU host force fake devices with XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={devices} (the "
+                "__main__ entry point sets this automatically)")
+        placement = VariantPlacement(variants, devices=jax.devices()[:devices],
+                                     cost_fn=lat._inf)
     rng = np.random.default_rng(0)
 
     # warmup: compile EVERY batch bucket per variant (the serving loop
@@ -86,6 +141,9 @@ def run(csv=print, grid=SERVE_GRID, json_path=SERVE_JSON_PATH) -> dict:
         items = [(f, r) for vv, f, r in warm if vv.name == v.name]
         for b in backend.buckets.batch_sizes:
             backend.infer_srois_batched(items[:b], v)
+            if placement is not None:
+                backend.infer_srois_batched(items[:b], v,
+                                            group=placement.group_for(v.name))
         backend.infer_sroi(items[0][0], items[0][1], v)
 
     entries = []
@@ -121,19 +179,51 @@ def run(csv=print, grid=SERVE_GRID, json_path=SERVE_JSON_PATH) -> dict:
                      per_request_us=round(t_per_request, 1),
                      batched_us=round(t_batched, 1),
                      speedup=round(t_per_request / max(t_batched, 1e-9), 2))
+        if placement is not None:
+            # group-concurrent tick: every group's sharded forward is
+            # launched before any result is resolved
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                resolvers = [
+                    backend.launch_srois_batched(
+                        [(f, r) for _, f, r in items], items[0][0],
+                        placement.group_for(name))
+                    for name, items in sorted(by_variant.items())]
+                for resolve in resolvers:
+                    resolve()
+            t_sharded = (time.perf_counter() - t0) / repeats * 1e6
+            single_tick, _ = _tick_model_costs(by_variant, backend.buckets,
+                                               lat)
+            sharded_tick, group_sums = _tick_model_costs(
+                by_variant, backend.buckets, lat, placement)
+            entry.update(
+                sharded_us=round(t_sharded, 1),
+                tick_model_single_s=round(single_tick, 4),
+                tick_model_sharded_s=round(sharded_tick, 4),
+                tick_speedup=round(single_tick / max(sharded_tick, 1e-9), 2),
+                group_utilisation={
+                    f"g{g}": round(s / max(sharded_tick, 1e-9), 3)
+                    for g, s in sorted(group_sums.items())})
         entries.append(entry)
         csv(f"serving,tick_s{n_streams}_r{len(work)},us_per_tick_per_request,"
             f"{t_per_request:.0f},")
         csv(f"serving,tick_s{n_streams}_r{len(work)},us_per_tick_batched,"
             f"{t_batched:.0f},speedup={entry['speedup']}x "
             f"dispatches={dispatches}")
+        if placement is not None:
+            csv(f"serving,tick_s{n_streams}_r{len(work)},tick_speedup,"
+                f"{entry['tick_speedup']},devices={devices} "
+                f"util={entry['group_utilisation']}")
 
     out = {"bench": "variant_batched_serving",
            "backend": jax.default_backend(),
            "srois_per_stream": SROIS_PER_STREAM,
            "batch_buckets": list(backend.buckets.batch_sizes),
            "resolutions": list(backend.buckets.resolutions),
+           "devices": devices,
            "grid": entries}
+    if placement is not None:
+        out["placement"] = placement.device_counts()
     if json_path:
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2)
@@ -141,5 +231,22 @@ def run(csv=print, grid=SERVE_GRID, json_path=SERVE_JSON_PATH) -> dict:
     return out
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard per-variant forwards over replica groups "
+                         "cut from this many devices (1 = single-device)")
+    ap.add_argument("--json", default=SERVE_JSON_PATH)
+    args = ap.parse_args()
+    if args.devices > 1 and "jax" not in sys.modules:
+        # must happen before the first jax import anywhere in-process
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.devices}").strip()
+    run(devices=args.devices, json_path=args.json)
+
+
 if __name__ == "__main__":
-    run()
+    main()

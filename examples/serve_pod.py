@@ -1,12 +1,25 @@
-"""End-to-end serving driver: many camera streams, batched requests.
+"""End-to-end serving driver: many camera streams, batched + sharded.
 
 The paper's kind is SERVING, so the end-to-end driver multiplexes 8
 synthetic 360-degree streams through the pod scheduler: every stream
-runs its own OmniSense loop, and PI requests that picked the same
-detector variant are batched per tick (the deployment EXPERIMENTS.md
-§Perf Cell C assumes: 16-chip replica groups per variant).
+runs its own OmniSense loop, PI requests that picked the same detector
+variant are batched per tick, and the variants are placed onto
+per-variant REPLICA GROUPS (the deployment EXPERIMENTS.md §Perf Cell C
+assumes: 16-chip replica groups per variant) so the V batched forwards
+run concurrently — the tick pays the max over groups, not the sum.
 
     PYTHONPATH=src python examples/serve_pod.py
+
+The oracle pod prices the device-aware tick model on virtual device
+slots, so this runs anywhere without touching an accelerator.  The
+REAL shard_map-sharded detector path needs actual jax devices; on a
+machine without accelerators, force fake host devices before jax
+starts — exactly what the `multidevice` CI lane and the sharded
+benchmark do:
+
+    PYTHONPATH=src:. python benchmarks/serving_bench.py --devices 8
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest -q -m multidevice
 """
 
 import numpy as np
@@ -15,12 +28,14 @@ from repro.core.omnisense import OmniSenseLoop
 from repro.data.synthetic import make_video
 from repro.serving import profiles
 from repro.serving.network import NetworkModel
+from repro.serving.placement import VariantPlacement
 from repro.serving.scheduler import OmniSenseLatencyModel, OracleBackend
-from repro.serving.server import PodServer
+from repro.serving.server import PodServer, format_group_report
 
 
 def main():
     n_streams = 8
+    n_devices = 16
     variants = profiles.make_ladder()
     lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
     costs = [lat._pre(v) + lat._inf(v) for v in variants]
@@ -33,7 +48,8 @@ def main():
         loops.append(OmniSenseLoop(variants, lat, backend, budget_s=1.8,
                                    explore_costs=costs))
 
-    server = PodServer(loops, backends, max_batch=8)
+    placement = VariantPlacement.virtual(variants, n_devices, cost_fn=lat._inf)
+    server = PodServer(loops, backends, max_batch=8, placement=placement)
     stats = server.run(range(16))
 
     print(f"streams: {n_streams}, frames/stream: 16")
@@ -51,6 +67,8 @@ def main():
           f"(inference {stats.sum_batched_inf_s:.1f}s batched vs "
           f"{stats.sum_per_request_inf_s:.1f}s per-request -> "
           f"{stats.batching_gain:.2f}x)")
+    for line in format_group_report(stats, placement):
+        print(line)
     print("\npod serving loop OK")
 
 

@@ -360,6 +360,32 @@ def _sph_nms_batch_host(
     return keep
 
 
+# incremented at TRACE time of the jitted device/jit NMS path — the
+# regression pin for shape bucketing (a serving run's retrace count
+# stays bounded by the (B, N) ladder, mirroring JaxDetectorBackend's
+# `trace_count`).
+_NMS_DEVICE_TRACES = [0]
+
+
+def nms_device_trace_count() -> int:
+    """How many distinct (B, N) shapes the device NMS path has traced."""
+    return _NMS_DEVICE_TRACES[0]
+
+
+def nms_auto_backend(b: int, n: int) -> str:
+    """The backend ``sph_nms_batch(backend="auto")`` picks for (B, N).
+
+    Device only for genuinely batched work on TPU: the jitted path
+    retraces per (B, N) shape, so the small single-row calls the
+    per-frame serving loop makes stay on host everywhere.  Exposed so
+    callers (``PodServer._suppress_tick``) can decide whether ladder
+    padding buys bounded compile shapes or just wastes host-path work.
+    """
+    pod_scale = b * n >= _AUTO_DEVICE_MIN_ELEMS
+    return ("device" if jax.default_backend() == "tpu" and pod_scale
+            else "host")
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
 def _sph_nms_batch_device(
     boxes: Array, scores: Array, mask: Array, iou_threshold: Array,
@@ -374,6 +400,7 @@ def _sph_nms_batch_device(
     vmapped jnp oracle (XLA-fused; the fast compiled path on CPU where
     Pallas would run in interpret mode).
     """
+    _NMS_DEVICE_TRACES[0] += 1  # runs at trace time only
     b, n, _ = boxes.shape
     if use_pallas:
         from repro.kernels.sphiou.ops import sphiou_matrix_batch
@@ -465,14 +492,7 @@ def sph_nms_batch(
         return np.zeros((b, 0), dtype=bool)
 
     if backend == "auto":
-        # Device only for genuinely batched work on TPU: the jitted
-        # path retraces per (B, N) shape, so the small single-row calls
-        # the per-frame serving loop makes stay on host everywhere
-        # (ROADMAP: shape bucketing before the TPU path is the default
-        # for per-frame rows).
-        pod_scale = b * n >= _AUTO_DEVICE_MIN_ELEMS
-        backend = ("device" if jax.default_backend() == "tpu" and pod_scale
-                   else "host")
+        backend = nms_auto_backend(b, n)
     if backend == "host":
         keep = _sph_nms_batch_host(boxes, scores, mask, iou_threshold)
     elif backend in ("device", "jit"):
@@ -496,16 +516,27 @@ def sph_nms_batch(
     return keep
 
 
-def pad_detection_rows(rows) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+def pad_detection_rows(rows, pad_n=None, total_rows: int | None = None
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Pad per-row detection lists into ``sph_nms_batch`` inputs.
 
     ``rows`` is a sequence of detection lists (anything with a ``box``
     (4,) array and a ``score``), one per stream/frame.  Returns
     ``(boxes (B, N, 4), scores (B, N), mask (B, N))`` padded to the
     longest row, float64 so the host path keeps full precision.
+
+    ``pad_n`` bounds the device path's compile shapes: a callable
+    (e.g. ``ShapeBuckets.pad_nms_rows``) snapping the longest row up to
+    a bucket ladder, so the jitted (B, N) program compiles once per
+    ladder rung instead of once per distinct detection count.
+    ``total_rows`` pads B with all-masked rows up to a fixed row count
+    (the pod's stream count) for the same reason; masked padding can
+    never be kept, so the keep-masks of the real rows are unchanged.
     """
-    b = len(rows)
+    b = max(len(rows), total_rows or 0)
     n_max = max((len(r) for r in rows), default=0)
+    if pad_n is not None:
+        n_max = pad_n(n_max)
     boxes = np.zeros((b, n_max, 4), np.float64)
     scores = np.zeros((b, n_max), np.float64)
     mask = np.zeros((b, n_max), bool)

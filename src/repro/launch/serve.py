@@ -6,7 +6,18 @@ per-tick throughput / batching stats. ``--backend jax`` runs the real
 detector ladder on rendered frames; the default oracle backend is the
 calibrated fast path.
 
-    PYTHONPATH=src python -m repro.launch.serve --streams 8 --frames 16
+``--devices D`` partitions D VIRTUAL device slots into per-variant
+replica groups (``repro.serving.placement``): the V per-variant
+forwards are scheduled concurrently and the tick model switches to the
+device-aware max-over-groups — priced by the calibrated latency model,
+no accelerators consulted:
+
+    PYTHONPATH=src python -m repro.launch.serve --streams 8 --devices 8
+
+The REAL shard_map-sharded detector path is exercised by
+``benchmarks/serving_bench.py --devices 8`` and the `multidevice` test
+lane (both force fake host devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
 """
 
 from __future__ import annotations
@@ -30,6 +41,9 @@ def main() -> None:
     ap.add_argument("--budget", type=float, default=1.8)
     ap.add_argument("--bandwidth-mbps", type=float, default=17.9)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="partition this many device slots into per-variant "
+                         "replica groups (0 = single-device pod)")
     args = ap.parse_args()
 
     variants = profiles.make_ladder()
@@ -47,7 +61,15 @@ def main() -> None:
                                    budget_s=args.budget,
                                    explore_costs=costs))
 
-    server = PodServer(loops, backends, max_batch=args.max_batch)
+    placement = None
+    if args.devices > 0:
+        from repro.serving.placement import VariantPlacement
+
+        placement = VariantPlacement.virtual(variants, args.devices,
+                                             cost_fn=lat._inf)
+
+    server = PodServer(loops, backends, max_batch=args.max_batch,
+                       placement=placement)
     stats = server.run(range(args.frames))
     print(f"served {stats.frames} frames across {args.streams} streams")
     print(f"detections: {stats.total_detections}  "
@@ -61,6 +83,11 @@ def main() -> None:
           f"inference gain: {stats.batching_gain:.2f}x "
           f"({stats.sum_batched_inf_s:.1f}s batched vs "
           f"{stats.sum_per_request_inf_s:.1f}s per-request)")
+    if placement is not None:
+        from repro.serving.server import format_group_report
+
+        for line in format_group_report(stats, placement):
+            print(line)
 
 
 if __name__ == "__main__":

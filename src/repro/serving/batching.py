@@ -29,6 +29,11 @@ import dataclasses
 from typing import Any, Sequence
 
 DEFAULT_BATCH_BUCKETS = (1, 2, 4, 8)
+# detection-count ladder for the tick's batched spherical-NMS rows:
+# rows pad to the smallest member >= the tick's max row length, so the
+# (B, N) device path compiles one program per ladder rung instead of
+# one per distinct detection count (ROADMAP: bounded NMS shapes).
+DEFAULT_NMS_SIZES = (8, 16, 32, 64, 128)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,13 +47,16 @@ class ShapeBuckets:
 
     batch_sizes: tuple[int, ...] = DEFAULT_BATCH_BUCKETS
     resolutions: tuple[int, ...] | None = None
+    nms_sizes: tuple[int, ...] = DEFAULT_NMS_SIZES
 
     def __post_init__(self):
-        if not self.batch_sizes or any(b <= 0 for b in self.batch_sizes):
-            raise ValueError(f"invalid batch buckets {self.batch_sizes}")
-        if list(self.batch_sizes) != sorted(set(self.batch_sizes)):
-            raise ValueError(
-                f"batch buckets must be strictly increasing: {self.batch_sizes}")
+        for name, sizes in (("batch", self.batch_sizes),
+                            ("nms", self.nms_sizes)):
+            if not sizes or any(b <= 0 for b in sizes):
+                raise ValueError(f"invalid {name} buckets {sizes}")
+            if list(sizes) != sorted(set(sizes)):
+                raise ValueError(
+                    f"{name} buckets must be strictly increasing: {sizes}")
 
     @property
     def max_batch(self) -> int:
@@ -76,6 +84,19 @@ class ShapeBuckets:
         if rest:
             out.append(rest)
         return out
+
+    def pad_nms_rows(self, n: int) -> int:
+        """Smallest NMS bucket >= ``n`` (the padded row length of the
+        tick's batched-NMS dispatch).  Beyond the top rung, rows round
+        up to a top-rung multiple so pathological ticks stay bounded
+        (one extra shape per multiple) instead of erroring."""
+        if n <= 0:
+            return self.nms_sizes[0]
+        for size in self.nms_sizes:
+            if size >= n:
+                return size
+        top = self.nms_sizes[-1]
+        return -(-n // top) * top
 
     def bucket_resolution(self, size: int) -> int:
         """Validate/snap a crop resolution into the bounded set."""
@@ -128,45 +149,70 @@ class VariantQueues:
     def put(self, item: QueuedRequest) -> None:
         self._queues[item.request.variant.name].append(item)
 
-    def drain(self) -> tuple[list[tuple[QueuedRequest, list]], list[dict]]:
+    def drain(self, placement=None
+              ) -> tuple[list[tuple[QueuedRequest, list]], list[dict]]:
         """Empty all queues; returns (results, dispatch records).
 
         ``results``: (queued_request, detections) per drained request,
         in dispatch order.  ``dispatches``: one record per batched
         forward with the variant, real batch ``b``, padded bucket size
         and the items it served — the tick schedule the server prices.
+
+        With a ``placement`` (``repro.serving.placement``), each
+        chunk's forward routes to its variant's replica group and every
+        forward is LAUNCHED before any result is resolved: backends
+        exposing the non-blocking ``launch_srois_batched`` entry
+        overlap the per-variant forwards across their disjoint device
+        groups instead of serialising in sorted-name order.
         """
-        results: list[tuple[QueuedRequest, list]] = []
+        resolvers: list[tuple[list[QueuedRequest], Any]] = []
         dispatches: list[dict] = []
         for name in sorted(self._queues):
             q = self._queues[name]
+            group = placement.group_for(name) if placement is not None else None
             while q:
                 chunk = [q.popleft()
                          for _ in range(min(len(q), self.buckets.max_batch))]
-                results.extend(self._dispatch_chunk(name, chunk, dispatches))
+                resolvers.extend(
+                    self._launch_chunk(name, chunk, dispatches, group))
+        results: list[tuple[QueuedRequest, list]] = []
+        for items, resolve in resolvers:
+            dets = resolve()
+            assert len(dets) == len(items)
+            results.extend(zip(items, dets))
         return results, dispatches
 
-    def _dispatch_chunk(self, name: str, chunk: Sequence[QueuedRequest],
-                        dispatches: list[dict]):
-        """One drained chunk -> one batched detector forward.
+    def _launch_chunk(self, name: str, chunk: Sequence[QueuedRequest],
+                      dispatches: list[dict], group=None):
+        """One drained chunk -> one (launched) batched detector forward.
 
         Streams normally share one backend (the real detector ladder),
         so the whole chunk is a single ``infer_srois_batched`` call;
         per-stream oracle backends sub-group by identity (an execution
         detail of the simulation — the chunk remains ONE dispatch in
-        the tick schedule the server prices).
+        the tick schedule the server prices).  Returns
+        ``(items, resolver)`` pairs; backends without a non-blocking
+        entry execute inline and resolve trivially.
         """
         variant = chunk[0].request.variant
         groups: dict[int, list[QueuedRequest]] = {}
         for item in chunk:
             groups.setdefault(id(item.backend), []).append(item)
         out = []
+        # virtual-slot groups price the tick model but cannot host a
+        # sharded forward — execution falls back to the plain batched
+        # path while the dispatch record keeps the group for pricing
+        exec_group = group if group is not None and not group.is_virtual \
+            else None
         for items in groups.values():
-            dets = items[0].backend.infer_srois_batched(
-                [(it.request.frame, it.request.region) for it in items],
-                variant)
-            assert len(dets) == len(items)
-            out.extend(zip(items, dets))
+            backend = items[0].backend
+            pairs = [(it.request.frame, it.request.region) for it in items]
+            if hasattr(backend, "launch_srois_batched"):
+                out.append((items, backend.launch_srois_batched(
+                    pairs, variant, exec_group)))
+            else:
+                dets = backend.infer_srois_batched(pairs, variant)
+                out.append((items, lambda dets=dets: dets))
         # `semantic`: every backend in the chunk declares its batched
         # entry a pure simulation (`semantic_batch = True`, e.g. the
         # oracle), so the chunk models ONE shared-accelerator dispatch
@@ -181,5 +227,6 @@ class VariantQueues:
             group_sizes=[len(items) for items in groups.values()],
             semantic=all(getattr(it.backend, "semantic_batch", False)
                          for it in chunk),
+            group=group,
         ))
         return out

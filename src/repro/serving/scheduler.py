@@ -103,6 +103,47 @@ class OmniSenseLatencyModel:
         """Per-item share of a batched forward (decreasing in batch)."""
         return self.batched_inference_delay(variant, batch_size) / batch_size
 
+    def sharded_inference_delay(self, variant: acc_mod.ModelProfile,
+                                batch_size: int, n_devices: int = 1) -> float:
+        """Cost of one batched forward sharded over a replica group.
+
+        The batch splits evenly over the group's ``data`` axis, so the
+        critical path is the largest per-device shard; ``n_devices == 1``
+        reduces exactly to :meth:`batched_inference_delay`.
+        """
+        if n_devices < 1:
+            raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+        per_device = -(-batch_size // n_devices)  # ceil division
+        return self.batched_inference_delay(variant, per_device)
+
+    def tick_inference_delay(self, group_costs) -> float:
+        """Device-aware cost of one pod tick.
+
+        ``group_costs``: per replica group, the summed delays of the
+        dispatches it executed this tick.  Dispatches within a group
+        serialise; groups run concurrently on disjoint devices, so the
+        tick pays the MAX over groups — the single-device pod (one
+        group) degenerates to the old sum-over-dispatches.
+        """
+        return max(group_costs, default=0.0)
+
+    def tick_schedule_delay(self, schedule):
+        """Price a whole tick's dispatch schedule on the pure curve.
+
+        ``schedule``: one ``(variant, batch_size, n_devices,
+        group_index)`` tuple per dispatch.  Returns ``(tick_delay,
+        per-group sums)`` — the projection ``benchmarks/serving_bench``
+        records, kept here so a future curve change cannot silently
+        diverge from the serving path's pricing (``PodServer`` adds
+        execution detail — marginal overrides, per-backend forwards —
+        on top of these same methods).
+        """
+        group_sums: dict = {}
+        for variant, batch_size, n_devices, gidx in schedule:
+            group_sums[gidx] = group_sums.get(gidx, 0.0) + \
+                self.sharded_inference_delay(variant, batch_size, n_devices)
+        return self.tick_inference_delay(group_sums.values()), group_sums
+
     def observe_delivery(self, variant: acc_mod.ModelProfile) -> float:
         """Simulate one remote delivery, feed the passive profiler."""
         n_bytes = variant.input_size ** 2 * self.costs.bytes_per_pixel
@@ -326,12 +367,15 @@ class JaxDetectorBackend:
                                                 max_det=self.max_det)
         return self._row_to_dets(boxes[0], scores[0], classes[0], region, size)
 
-    def _batched_fn(self, idx: int, b_pad: int):
+    def _batched_fn(self, idx: int, b_pad: int, group=None):
         """The jitted (apply + masked decode) program for one
-        (variant, padded-batch) shape bucket."""
+        (variant, padded-batch) shape bucket — ``shard_map``-sharded
+        over ``group``'s ``data`` mesh axis when a multi-device replica
+        group is given (the multi-device serving path)."""
         import jax
 
-        key = (idx, b_pad)
+        key = (idx, b_pad) if group is None or group.n_devices == 1 else (
+            idx, b_pad, tuple(getattr(d, "id", d) for d in group.devices))
         fn = self._jit_cache.get(key)
         if fn is None:
             from repro.models import detector as det_mod
@@ -339,15 +383,84 @@ class JaxDetectorBackend:
             cfg = self.cfgs[idx]
 
             def forward(params, imgs, valid):
-                self.trace_count += 1  # runs at trace time only
                 outs = det_mod.apply(params, imgs, cfg)
                 return det_mod.decode(outs, cfg, self.conf,
                                       max_det=self.max_det, valid=valid)
 
-            fn = self._jit_cache[key] = jax.jit(forward)
+            if len(key) == 3:
+                from jax.sharding import PartitionSpec as P
+
+                from repro.distributed.sharding import (
+                    no_activation_constraints, shard_map)
+
+                inner = forward
+
+                def forward(params, imgs, valid):  # noqa: F811
+                    # rows are independent, so per-device shards decode
+                    # exactly like the unsharded batch; the training-
+                    # oriented activation constraints are meaningless
+                    # inside the manual (per-device) region.
+                    with no_activation_constraints():
+                        return shard_map(
+                            inner, mesh=group.mesh,
+                            in_specs=(P(), P("data"), P("data")),
+                            out_specs=(P("data"), P("data"), P("data")),
+                            check_vma=False)(params, imgs, valid)
+
+            def traced(params, imgs, valid):
+                self.trace_count += 1  # runs at trace time only
+                return forward(params, imgs, valid)
+
+            fn = self._jit_cache[key] = jax.jit(traced)
         return fn
 
-    def infer_srois_batched(self, items, variant: acc_mod.ModelProfile):
+    def launch_srois_batched(self, items, variant: acc_mod.ModelProfile,
+                             group=None):
+        """Launch the padded batched forward(s) for a tick's
+        same-variant crops WITHOUT blocking on the result.
+
+        Returns a zero-argument resolver producing the per-item
+        detection lists.  Jax dispatch is asynchronous, so a caller
+        that launches every replica group's forward before resolving
+        any of them overlaps the V variants' inference across their
+        disjoint device groups — the multi-device tick.
+        """
+        import jax.numpy as jnp
+
+        idx = variant.index - 1
+        cfg = self.cfgs[idx]
+        size = self.buckets.bucket_resolution(cfg.input_size)
+        launched = []  # (chunk, boxes, scores, classes)
+        lo = 0
+        for b in self.buckets.split(len(items)):
+            chunk = items[lo:lo + b]
+            lo += b
+            pis = jnp.stack([self._project(f, r, size) for f, r in chunk])
+            b_pad = self.buckets.pad_batch(b)
+            if group is not None and group.n_devices > 1:
+                # pad further to a group-width multiple so the batch
+                # axis shards evenly over the group's `data` axis
+                b_pad = group.shard_batch(b_pad)
+            if b_pad > b:
+                pis = jnp.concatenate(
+                    [pis, jnp.zeros((b_pad - b,) + pis.shape[1:], pis.dtype)])
+            valid = jnp.arange(b_pad) < b
+            boxes, scores, classes = self._batched_fn(idx, b_pad, group)(
+                self.params[idx], pis, valid)
+            launched.append((chunk, boxes, scores, classes))
+
+        def resolve() -> list[list]:
+            out: list[list] = []
+            for chunk, boxes, scores, classes in launched:
+                for r, (_, region) in enumerate(chunk):
+                    out.append(self._row_to_dets(
+                        boxes[r], scores[r], classes[r], region, size))
+            return out
+
+        return resolve
+
+    def infer_srois_batched(self, items, variant: acc_mod.ModelProfile,
+                            group=None):
         """ONE padded batched forward for a tick's same-variant crops.
 
         ``items``: list of ``(frame_img, region)``.  Crops are
@@ -356,30 +469,11 @@ class JaxDetectorBackend:
         through the jitted forward with a validity mask; decoded rows
         back-project to SphBBs exactly like the per-request path.
         Chunks larger than the top bucket split into bucket-sized
-        dispatches.
+        dispatches.  With a multi-device ``group`` the batch axis
+        shards over the group's mesh (see :meth:`launch_srois_batched`,
+        the non-blocking form the pod drain uses).
         """
-        import jax.numpy as jnp
-
-        idx = variant.index - 1
-        cfg = self.cfgs[idx]
-        size = self.buckets.bucket_resolution(cfg.input_size)
-        out: list[list] = []
-        lo = 0
-        for b in self.buckets.split(len(items)):
-            chunk = items[lo:lo + b]
-            lo += b
-            pis = jnp.stack([self._project(f, r, size) for f, r in chunk])
-            b_pad = self.buckets.pad_batch(b)
-            if b_pad > b:
-                pis = jnp.concatenate(
-                    [pis, jnp.zeros((b_pad - b,) + pis.shape[1:], pis.dtype)])
-            valid = jnp.arange(b_pad) < b
-            boxes, scores, classes = self._batched_fn(idx, b_pad)(
-                self.params[idx], pis, valid)
-            for r, (_, region) in enumerate(chunk):
-                out.append(self._row_to_dets(boxes[r], scores[r], classes[r],
-                                             region, size))
-        return out
+        return self.launch_srois_batched(items, variant, group)()
 
     def infer_erp(self, frame_img, variant: acc_mod.ModelProfile):
         # ERP-wide pass with the largest model on the resized frame

@@ -28,7 +28,14 @@ same model variant are batched into one accelerator dispatch.
   * the tick's inference time is charged per DISPATCH via
     ``OmniSenseLatencyModel.batched_inference_delay`` (per-batch fixed
     cost + per-item marginal), not as a per-request ``_inf`` sum;
-    utilisation, queue depths and per-stream E2E are reported.
+    utilisation, queue depths and per-stream E2E are reported;
+  * with a ``VariantPlacement`` (``repro.serving.placement``), each
+    variant's forward routes to its own replica group — sharded over
+    the group's ``data`` axis and launched before any result is
+    resolved, so V variants execute concurrently on disjoint device
+    groups — and the tick model switches from the dispatch SUM to the
+    device-aware MAX over per-group sums
+    (``OmniSenseLatencyModel.tick_inference_delay``).
 
 This is the runnable stand-in for the 256-chip serving mesh (the
 dry-run proves the detector steps compile on that mesh; this loop
@@ -44,21 +51,31 @@ from typing import Callable
 import numpy as np
 
 from repro.core.omnisense import OmniSenseLoop
-from repro.core.sphere import pad_detection_rows, sph_nms_batch
+from repro.core.sphere import (nms_auto_backend, pad_detection_rows,
+                               sph_nms_batch)
 from repro.serving.batching import QueuedRequest, ShapeBuckets, VariantQueues
 
 
 @dataclasses.dataclass
 class ServeStats:
     frames: int = 0
+    ticks: int = 0
     total_detections: int = 0
     sum_e2e: float = 0.0
     sum_overhead: float = 0.0
     batch_sizes: list = dataclasses.field(default_factory=list)
     # batched-dispatch accounting (one entry of work per tick)
     dispatches: int = 0
-    sum_batched_inf_s: float = 0.0      # what the pod actually pays
+    sum_batched_inf_s: float = 0.0      # aggregate device-busy seconds
     sum_per_request_inf_s: float = 0.0  # what B per-request forwards would
+    # device-aware tick accounting: replica groups run concurrently, so
+    # the tick pays max-over-groups, not the dispatch sum
+    sum_tick_inf_s: float = 0.0
+    group_busy_s: dict = dataclasses.field(default_factory=dict)
+    # device count per group index as last seen at dispatch time, so
+    # utilisation reports label busy seconds with the partition that
+    # actually accrued them (rebalances can change a group's width)
+    group_devices: dict = dataclasses.field(default_factory=dict)
 
     @property
     def mean_e2e(self) -> float:
@@ -76,6 +93,39 @@ class ServeStats:
             return 1.0
         return self.sum_per_request_inf_s / self.sum_batched_inf_s
 
+    @property
+    def sharding_gain(self) -> float:
+        """Serialised dispatch cost over the device-aware tick cost
+        (>= 1; 1.0 on a single-device pod where every tick serialises)."""
+        if self.sum_tick_inf_s <= 0:
+            return 1.0
+        return self.sum_batched_inf_s / self.sum_tick_inf_s
+
+    def group_utilisation(self) -> dict:
+        """Per replica group: busy seconds over the pod's tick seconds
+        (the idle share is the cost of imbalanced variant load)."""
+        if self.sum_tick_inf_s <= 0:
+            return {g: 0.0 for g in self.group_busy_s}
+        return {g: busy / self.sum_tick_inf_s
+                for g, busy in sorted(self.group_busy_s.items())}
+
+
+def format_group_report(stats: ServeStats, placement) -> list[str]:
+    """Human-readable replica-group summary lines (shared by the
+    serving drivers so the format can't drift between them).  Device
+    counts come from dispatch time, not the final partition, so busy
+    seconds accrued before a rebalance keep their real group width."""
+    util = ", ".join(
+        f"g{g}[{stats.group_devices.get(g, '?')}dev]={u:.0%}"
+        for g, u in stats.group_utilisation().items())
+    return [
+        f"replica groups over {placement.n_devices} devices: "
+        f"device-aware tick inference {stats.sum_tick_inf_s:.1f}s "
+        f"(sharding gain {stats.sharding_gain:.2f}x, "
+        f"{placement.rebalances} rebalances)",
+        f"group utilisation: {util}",
+    ]
+
 
 class PodServer:
     """Variant-batched tick scheduler over per-stream OmniSense loops.
@@ -88,11 +138,24 @@ class PodServer:
     def __init__(self, loops: list[OmniSenseLoop], backends: list,
                  max_batch: int = 8, marginal_batch_cost: float | None = None,
                  buckets: ShapeBuckets | None = None,
-                 frame_source: Callable[[int, int], np.ndarray] | None = None):
+                 frame_source: Callable[[int, int], np.ndarray] | None = None,
+                 placement=None):
         assert len(loops) == len(backends)
         self.loops = loops
         self.backends = backends
         self.max_batch = max_batch
+        # repro.serving.placement.VariantPlacement: routes each drained
+        # chunk to its variant's replica group and switches the tick
+        # model to max-over-groups; None = single-device pod (every
+        # dispatch serialises in one implicit group).
+        self.placement = placement
+        if placement is not None:
+            placed = set(placement.variant_names)
+            missing = {v.name for loop in loops for v in loop.variants
+                       if v.name not in placed}
+            if missing:
+                raise ValueError(
+                    f"placement has no replica group for variants {sorted(missing)}")
         # None = defer to each latency model's batched_inference_delay
         # (the default OmniSenseLatencyModel curve); a float OVERRIDES
         # the curve for every dispatch the server prices.
@@ -125,18 +188,28 @@ class PodServer:
         is priced at the chunk's batch size; with real backends every
         executed backend group is its own forward, so pricing follows
         ``group_sizes`` and cannot overstate batching that never ran.
+        A dispatch routed to a multi-device replica group shards its
+        batch over the group, so the priced forward is the largest
+        per-device shard (``sharded_inference_delay``); the
+        per-request comparator stays the single-device sum.
         """
         variant = dispatch["items"][0].request.variant
         lat = dispatch["items"][0].latency_model
+        group = dispatch.get("group")
+        n_dev = group.n_devices if group is not None else 1
         blat = getattr(lat, "batched_inference_delay", None)
         single = blat(variant, 1) if blat is not None else variant.infer_s
 
         def curve(n: int) -> float:
+            n_eff = -(-n // n_dev)  # largest per-device shard
             if self.marginal is not None:  # explicit override
-                return single * (1.0 + (n - 1) * self.marginal)
+                return single * (1.0 + (n_eff - 1) * self.marginal)
+            shard = getattr(lat, "sharded_inference_delay", None)
+            if shard is not None:
+                return shard(variant, n, n_dev)
             if blat is not None:
-                return blat(variant, n)
-            return single * (1.0 + (n - 1) * 0.15)
+                return blat(variant, n_eff)
+            return single * (1.0 + (n_eff - 1) * 0.15)
 
         b = dispatch["b"]
         if dispatch["semantic"]:
@@ -161,17 +234,47 @@ class PodServer:
                     request=req, owner=pending, backend=backend,
                     latency_model=loop.latency_model))
 
-        # ---- drain: bucketed batched forwards, one per variant chunk ----
-        results, dispatches = self.queues.drain()
+        # ---- placement feedback: fold this tick's variant mix into the
+        # popularity EMA and re-balance replica groups if the allocator
+        # shifted load (atomic swap: queued requests keep a group) ----
+        if self.placement is not None:
+            counts: dict[str, int] = {}
+            for _, pending in pendings:
+                for req in pending.requests:
+                    counts[req.variant.name] = counts.get(req.variant.name, 0) + 1
+            self.placement.observe(counts)
+            self.placement.maybe_rebalance()
+
+        # ---- drain: bucketed batched forwards, one per variant chunk,
+        # each routed to (and sharded over) its variant's replica group ----
+        results, dispatches = self.queues.drain(self.placement)
         scatter: dict[int, dict[int, list]] = {}
         for item, dets in results:
             scatter.setdefault(id(item.owner), {})[item.request.slot] = dets
+        tick_lat = None
+        group_costs: dict[int, float] = {}
         for d in dispatches:
             self.stats.dispatches += 1
             self.stats.batch_sizes.append(d["b"])
             batched, per_request = self._dispatch_cost(d)
             self.stats.sum_batched_inf_s += batched
             self.stats.sum_per_request_inf_s += per_request
+            group = d.get("group")
+            gidx = group.index if group is not None else 0
+            group_costs[gidx] = group_costs.get(gidx, 0.0) + batched
+            self.stats.group_busy_s[gidx] = (
+                self.stats.group_busy_s.get(gidx, 0.0) + batched)
+            self.stats.group_devices[gidx] = (
+                group.n_devices if group is not None else 1)
+            tick_lat = tick_lat or getattr(
+                d["items"][0].latency_model, "tick_inference_delay", None)
+        # device-aware tick cost: groups run concurrently on disjoint
+        # devices, so the tick pays the max over per-group sums (the
+        # single-group pod degenerates to the old dispatch sum)
+        self.stats.ticks += 1
+        self.stats.sum_tick_inf_s += (
+            tick_lat(group_costs.values()) if tick_lat is not None
+            else max(group_costs.values(), default=0.0))
 
         # ---- ingestion: scatter detections back, defer suppression ----
         plans = []
@@ -208,8 +311,20 @@ class PodServer:
         thresholds = {loop.nms_threshold for loop, _ in rows}
         keeps: dict[int, np.ndarray] = {}
         if rows and len(thresholds) == 1:
-            boxes, scores, mask = pad_detection_rows(
-                [res.detections for _, res in rows])
+            # bucketed padding bounds the device path's compile shapes:
+            # B pins to the stream count, N snaps to the NMS ladder, so
+            # a serving lifetime compiles at most len(nms_sizes)
+            # programs (pinned by the trace-counter regression test).
+            # The host path never compiles, so there padding is skipped
+            # instead of wasting O(B*N^2) on masked rows.
+            row_dets = [res.detections for _, res in rows]
+            n_pad = self.buckets.pad_nms_rows(max(len(d) for d in row_dets))
+            if nms_auto_backend(len(plans), n_pad) == "device":
+                boxes, scores, mask = pad_detection_rows(
+                    row_dets, pad_n=self.buckets.pad_nms_rows,
+                    total_rows=len(plans))
+            else:
+                boxes, scores, mask = pad_detection_rows(row_dets)
             keep = sph_nms_batch(boxes, scores, mask,
                                  iou_threshold=thresholds.pop())
             for r, (_, res) in enumerate(rows):

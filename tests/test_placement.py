@@ -1,0 +1,439 @@
+"""Multi-device sharded pod serving (PR 3).
+
+Pins the placement subsystem and the device-aware tick model:
+
+  * the greedy partition is a DISJOINT COVER of the devices — every
+    device in exactly one replica group, every variant mapped to
+    exactly one group, heavier variants get more devices;
+  * popularity-EMA rebalancing swaps partitions atomically: every
+    variant keeps a group at all times, so a rebalance with requests
+    already queued never strands a non-empty queue;
+  * ``sharded_inference_delay`` prices the largest per-device shard
+    and reduces to the batched delay on one device;
+    ``tick_inference_delay`` is max-over-groups (concurrent groups);
+  * a placed PodServer tick produces BIT-IDENTICAL detections to the
+    single-device path on the oracle backend — placement moves
+    compute, never results;
+  * (multidevice) the ``shard_map``-sharded Jax forward matches the
+    unsharded batched path, and its jit retraces stay bounded by the
+    bucket ladder.
+"""
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import sroi as sroi_mod
+from repro.core.omnisense import OmniSenseLoop
+from repro.data.synthetic import make_video
+from repro.models import detector as det_mod
+from repro.serving import profiles
+from repro.serving.batching import ShapeBuckets
+from repro.serving.network import NetworkModel
+from repro.serving.placement import VariantPlacement
+from repro.serving.scheduler import (JaxDetectorBackend, OmniSenseLatencyModel,
+                                     OracleBackend)
+from repro.serving.server import PodServer
+
+needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 local devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _variants(n=5):
+    return profiles.make_ladder(seed=0)[:n]
+
+
+class TestPartition:
+    def test_disjoint_cover_of_devices(self):
+        """Every device lands in exactly one group and every variant
+        maps to exactly one group, for any (V, D) combination."""
+        for n_var in (1, 2, 3, 5):
+            variants = _variants(n_var)
+            for n_dev in (1, 2, 3, 5, 8, 16):
+                p = VariantPlacement(variants, devices=list(range(n_dev)))
+                seen = [d for g in p.groups for d in g.devices]
+                assert sorted(seen) == list(range(n_dev)), (n_var, n_dev)
+                assigned = [v for g in p.groups for v in g.variants]
+                assert sorted(assigned) == sorted(v.name for v in variants)
+                for v in variants:
+                    assert p.group_for(v.name) in p.groups
+
+    def test_heavier_variant_gets_more_devices(self):
+        variants = _variants(2)
+        heavy = dataclasses.replace(variants[1], infer_s=variants[0].infer_s * 5)
+        p = VariantPlacement([variants[0], heavy], devices=list(range(12)))
+        counts = p.device_counts()
+        assert counts[heavy.name] > counts[variants[0].name]
+        assert sum(counts.values()) == 12
+
+    def test_more_variants_than_devices_shares_groups(self):
+        variants = _variants(5)
+        p = VariantPlacement(variants, devices=list(range(2)))
+        assert len(p.groups) == 2
+        for v in variants:  # every variant still routed
+            assert p.group_for(v.name).n_devices >= 1
+
+    def test_partition_deterministic(self):
+        variants = _variants(4)
+        a = VariantPlacement(variants, devices=list(range(8)))
+        b = VariantPlacement(variants, devices=list(range(8)))
+        assert [(g.variants, g.devices) for g in a.groups] == \
+               [(g.variants, g.devices) for g in b.groups]
+
+    def test_virtual_group_has_no_mesh(self):
+        p = VariantPlacement.virtual(_variants(2), 4)
+        with pytest.raises(TypeError):
+            _ = p.groups[0].mesh
+
+    def test_shard_batch_rounds_to_group_width(self):
+        p = VariantPlacement.virtual(_variants(1), 3)
+        g = p.groups[0]
+        assert g.n_devices == 3
+        assert [g.shard_batch(b) for b in (1, 2, 3, 4, 7)] == [3, 3, 3, 6, 9]
+
+    def test_empty_inputs_rejected(self):
+        with pytest.raises(ValueError):
+            VariantPlacement([], devices=[0])
+        with pytest.raises(ValueError):
+            VariantPlacement(_variants(1), devices=[])
+
+
+class TestRebalance:
+    def test_popularity_shift_moves_devices(self):
+        variants = _variants(5)
+        p = VariantPlacement(variants, devices=list(range(8)))
+        before = p.device_counts()
+        hot = variants[0].name
+        for _ in range(8):
+            p.observe({hot: 50})
+        assert p.maybe_rebalance()
+        after = p.device_counts()
+        assert after[hot] > before[hot]
+        assert p.rebalances == 1
+        # still a disjoint cover after the swap
+        seen = [d for g in p.groups for d in g.devices]
+        assert sorted(seen) == list(range(8))
+
+    def test_small_shift_does_not_thrash(self):
+        p = VariantPlacement(_variants(3), devices=list(range(8)))
+        counts = {v.name: 10 for v in _variants(3)}
+        p.observe(counts)
+        assert not p.maybe_rebalance()  # uniform load, nothing to move
+        assert p.rebalances == 0
+
+    def test_rebalance_never_strands_a_nonempty_queue(self):
+        """The nasty window: requests are already queued per variant
+        when the allocator shift triggers a rebalance.  Every queued
+        variant must still resolve to a live group and drain."""
+        from repro.core.omnisense import InferenceRequest
+        from repro.serving.batching import QueuedRequest, VariantQueues
+
+        class _CountingBackend:
+            semantic_batch = True
+
+            def __init__(self):
+                self.served = 0
+
+            def infer_srois_batched(self, items, variant):
+                self.served += len(items)
+                return [[] for _ in items]
+
+        variants = _variants(4)
+        p = VariantPlacement(variants, devices=list(range(8)),
+                             rebalance_threshold=0.0)
+        backend = _CountingBackend()
+        q = VariantQueues(ShapeBuckets((1, 2, 4)))
+        for slot, v in enumerate(variants * 3):  # every queue non-empty
+            q.put(QueuedRequest(
+                request=InferenceRequest(
+                    region=sroi_mod.SRoI(center=(0.0, 0.0), fov=(1.0, 1.0)),
+                    variant=v, slot=slot, special=False),
+                owner=None, backend=backend))
+        n_queued = len(q)
+        # allocator shift: one variant takes all the traffic
+        for _ in range(8):
+            p.observe({variants[-1].name: 100})
+        assert p.maybe_rebalance()
+        results, dispatches = q.drain(p)
+        assert len(results) == n_queued and backend.served == n_queued
+        assert len(q) == 0
+        for d in dispatches:  # every dispatch routed to a live group
+            assert d["group"] in p.groups
+
+
+class TestDeviceAwareTickModel:
+    def _lat(self):
+        return OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+
+    def test_one_device_reduces_to_batched(self):
+        lat = self._lat()
+        for v in _variants(5):
+            for b in (1, 3, 8):
+                assert lat.sharded_inference_delay(v, b, 1) == \
+                    lat.batched_inference_delay(v, b)
+
+    def test_shards_price_largest_per_device_batch(self):
+        lat = self._lat()
+        v = _variants(5)[3]
+        assert lat.sharded_inference_delay(v, 8, 4) == \
+            lat.batched_inference_delay(v, 2)
+        assert lat.sharded_inference_delay(v, 7, 4) == \
+            lat.batched_inference_delay(v, 2)  # ceil(7/4) = 2
+
+    def test_more_devices_never_cost_more(self):
+        lat = self._lat()
+        v = _variants(5)[4]
+        costs = [lat.sharded_inference_delay(v, 16, d) for d in (1, 2, 4, 8)]
+        assert all(a >= b for a, b in zip(costs, costs[1:]))
+
+    def test_invalid_device_count_rejected(self):
+        with pytest.raises(ValueError):
+            self._lat().sharded_inference_delay(_variants(1)[0], 4, 0)
+
+    def test_tick_is_max_over_groups(self):
+        lat = self._lat()
+        assert lat.tick_inference_delay([1.0, 3.0, 2.0]) == 3.0
+        assert lat.tick_inference_delay([]) == 0.0
+
+
+def _oracle_pod(n_streams, seed0=40, budget=2.0):
+    variants = profiles.make_ladder(seed=0)
+    loops, backends = [], []
+    for s in range(n_streams):
+        video = make_video(n_frames=16, n_objects=30, seed=seed0 + s)
+        lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+        b = OracleBackend(video)
+        backends.append(b)
+        loops.append(OmniSenseLoop(variants, lat, b, budget_s=budget))
+    return variants, loops, backends
+
+
+class TestPlacedPodServer:
+    def test_placed_tick_bit_identical_to_single_device(self):
+        """Placement moves compute across replica groups; results must
+        be bit-identical to the single-device drain on the oracle."""
+        n_streams, n_frames = 6, 8
+        _, loops_a, backends_a = _oracle_pod(n_streams)
+        variants, loops_b, backends_b = _oracle_pod(n_streams)
+        single = PodServer(loops_a, backends_a, max_batch=8)
+        placed = PodServer(loops_b, backends_b, max_batch=8,
+                           placement=VariantPlacement.virtual(variants, 8))
+        for f in range(n_frames):
+            single.step(f)
+            placed.step(f)
+            for la, lb in zip(loops_a, loops_b):
+                da, db = la._history[-1], lb._history[-1]
+                assert len(da) == len(db)
+                for a, b in zip(da, db):
+                    np.testing.assert_array_equal(a.box, b.box)
+                    assert a.score == b.score and a.category == b.category
+        assert single.stats.total_detections == placed.stats.total_detections
+        assert single.stats.total_detections > 0
+
+    def test_tick_cost_is_max_over_groups_not_sum(self):
+        variants, loops, backends = _oracle_pod(6)
+        placement = VariantPlacement.virtual(variants, 8)
+        server = PodServer(loops, backends, max_batch=8, placement=placement)
+        stats = server.run(range(8))
+        assert stats.ticks == 8
+        # concurrent groups: the tick pays strictly less than the
+        # serialised dispatch sum once >1 group is busy in some tick
+        assert 0 < stats.sum_tick_inf_s < stats.sum_batched_inf_s
+        assert stats.sharding_gain > 1.0
+        util = stats.group_utilisation()
+        assert util and all(0.0 <= u <= 1.0 + 1e-9 for u in util.values())
+        # at least one group is the per-tick bottleneck somewhere
+        assert max(util.values()) > 0.5
+
+    def test_single_device_pod_keeps_sum_semantics(self):
+        _, loops, backends = _oracle_pod(4)
+        server = PodServer(loops, backends, max_batch=8)
+        stats = server.run(range(6))
+        assert stats.sum_tick_inf_s == pytest.approx(stats.sum_batched_inf_s)
+        assert stats.sharding_gain == pytest.approx(1.0)
+
+    def test_placement_missing_variant_rejected(self):
+        variants, loops, backends = _oracle_pod(2)
+        partial = VariantPlacement.virtual(variants[:2], 4)
+        with pytest.raises(ValueError):
+            PodServer(loops, backends, placement=partial)
+
+    def test_virtual_group_prices_but_never_reaches_execution(self):
+        """A virtual (simulation) placement must price the tick while
+        real backends fall back to the PLAIN batched forward — a
+        meshless group handed to the sharded path would crash."""
+        from repro.core.omnisense import InferenceRequest
+        from repro.serving.batching import QueuedRequest, VariantQueues
+
+        class _LaunchBackend:
+            def __init__(self):
+                self.exec_groups = []
+
+            def launch_srois_batched(self, items, variant, group=None):
+                self.exec_groups.append(group)
+                return lambda: [[] for _ in items]
+
+        variants = _variants(2)
+        placement = VariantPlacement.virtual(variants, 4)
+        backend = _LaunchBackend()
+        q = VariantQueues(ShapeBuckets((1, 2)))
+        for slot, v in enumerate(variants):
+            q.put(QueuedRequest(
+                request=InferenceRequest(
+                    region=sroi_mod.SRoI(center=(0.0, 0.0), fov=(1.0, 1.0)),
+                    variant=v, slot=slot, special=False),
+                owner=None, backend=backend))
+        results, dispatches = q.drain(placement)
+        assert len(results) == 2
+        assert backend.exec_groups == [None, None]  # execution fallback
+        for d in dispatches:  # ...while pricing keeps the group
+            assert d["group"] is placement.group_for(d["variant"])
+            assert d["group"].is_virtual
+
+
+# ---------------------------------------------------------------------------
+# real sharded path (runs in the CI multidevice lane; skips on 1 device)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sharded_setup():
+    cfgs = [dataclasses.replace(det_mod.PAPER_LADDER[i], input_size=64,
+                                n_classes=8) for i in range(2)]
+    params = [det_mod.init_params(jax.random.PRNGKey(i), c)
+              for i, c in enumerate(cfgs)]
+    backend = JaxDetectorBackend(
+        cfgs, params, conf=0.01, use_kernel=False, max_det=4,
+        buckets=ShapeBuckets((1, 2, 4, 8), resolutions=(64,)))
+    variants = profiles.make_ladder(n_categories=8, seed=0)[:2]
+    placement = VariantPlacement(variants, devices=jax.devices()[:8])
+    return backend, variants, placement
+
+
+def _regions(rng, n):
+    fov = (math.radians(60), math.radians(60))
+    return [sroi_mod.SRoI(center=(float(rng.uniform(-2.5, 2.5)),
+                                  float(rng.uniform(-0.9, 0.9))), fov=fov)
+            for _ in range(n)]
+
+
+@pytest.mark.multidevice
+@needs_devices
+class TestShardedJaxBackend:
+    def test_sharded_forward_matches_unsharded(self, sharded_setup):
+        backend, variants, placement = sharded_setup
+        rng = np.random.default_rng(0)
+        frame = rng.random((64, 128, 3)).astype(np.float32)
+        items = [(frame, r) for r in _regions(rng, 7)]
+        for v in variants:
+            group = placement.group_for(v.name)
+            assert group.n_devices > 1  # the point of the lane
+            plain = backend.infer_srois_batched(items, v)
+            sharded = backend.infer_srois_batched(items, v, group=group)
+            assert len(plain) == len(sharded)
+            assert sum(len(d) for d in plain) > 0
+            for dets_a, dets_b in zip(plain, sharded):
+                assert len(dets_a) == len(dets_b)
+                for da, db in zip(dets_a, dets_b):
+                    assert da.category == db.category
+                    np.testing.assert_allclose(da.box, db.box,
+                                               rtol=1e-4, atol=1e-4)
+                    np.testing.assert_allclose(da.score, db.score,
+                                               rtol=1e-4, atol=1e-5)
+
+    def test_launch_overlaps_groups_then_resolves(self, sharded_setup):
+        """The pod drain's two-phase form: every group's forward is
+        launched before any result is resolved; results match the
+        blocking entry point."""
+        backend, variants, placement = sharded_setup
+        rng = np.random.default_rng(1)
+        frame = rng.random((64, 128, 3)).astype(np.float32)
+        items = [(frame, r) for r in _regions(rng, 5)]
+        resolvers = [(v, backend.launch_srois_batched(
+            items, v, placement.group_for(v.name))) for v in variants]
+        for v, resolve in resolvers:
+            got = resolve()
+            want = backend.infer_srois_batched(items, v)
+            assert [len(d) for d in got] == [len(d) for d in want]
+
+    def test_sharded_retraces_bounded_by_buckets(self, sharded_setup):
+        backend, variants, placement = sharded_setup
+        rng = np.random.default_rng(2)
+        frame = rng.random((64, 128, 3)).astype(np.float32)
+        v = variants[0]
+        group = placement.group_for(v.name)
+        start = backend.trace_count
+        for count in (1, 2, 3, 5, 1, 4, 2):  # mixed-size "ticks"
+            backend.infer_srois_batched(
+                [(frame, r) for r in _regions(rng, count)], v, group=group)
+        n_buckets = len(backend.buckets.batch_sizes)
+        assert backend.trace_count - start <= n_buckets
+        # sharded programs key on (variant, padded batch, group devices)
+        # and the padded batch always divides over its group
+        for key in backend._jit_cache:
+            assert len(key) in (2, 3)
+            if len(key) == 3:
+                assert key[1] % len(key[2]) == 0
+
+    def test_placed_pod_on_real_detector_matches_single_device(self):
+        """End-to-end: a placed PodServer on the REAL detector path
+        (frames, shard_map groups) matches the unplaced pod
+        detection-for-detection."""
+        rng = np.random.default_rng(5)
+        n_streams, n_frames = 4, 2
+        cfgs = [dataclasses.replace(det_mod.PAPER_LADDER[i], input_size=64,
+                                    n_classes=8) for i in range(2)]
+        params = [det_mod.init_params(jax.random.PRNGKey(i), c)
+                  for i, c in enumerate(cfgs)]
+        variants = profiles.make_ladder(n_categories=8, seed=0)[:2]
+        frames = {(s, f): rng.random((64, 128, 3)).astype(np.float32)
+                  for s in range(n_streams) for f in range(n_frames)}
+        seeds = [[sroi_mod.Detection(
+                      box=np.array([rng.uniform(-2, 2), rng.uniform(-0.8, 0.8),
+                                    0.5, 0.5]), category=int(rng.integers(8)),
+                      score=0.9) for _ in range(2)]
+                 for _ in range(n_streams)]
+
+        def build(placement):
+            backend = JaxDetectorBackend(
+                cfgs, params, conf=0.01, use_kernel=False, max_det=4,
+                buckets=ShapeBuckets((1, 2, 4, 8), resolutions=(64,)))
+            lat = OmniSenseLatencyModel(profiles.paper_profile(),
+                                        NetworkModel())
+            loops = []
+            for s in range(n_streams):
+                loop = OmniSenseLoop(variants, lat, backend, budget_s=4.0,
+                                     n_categories=8, explore_every=0)
+                loop.seed_history(list(seeds[s]))
+                loops.append(loop)
+            return loops, PodServer(
+                loops, [backend] * n_streams, max_batch=8,
+                frame_source=lambda s, f: frames[(s, f)],
+                placement=placement)
+
+        loops_a, single = build(None)
+        loops_b, placed = build(
+            VariantPlacement(variants, devices=jax.devices()[:8]))
+        saw = 0
+        for f in range(n_frames):
+            single.step(f)
+            placed.step(f)
+            for la, lb in zip(loops_a, loops_b):
+                da, db = la._history[-1], lb._history[-1]
+                assert len(da) == len(db)
+                for a, b in zip(da, db):
+                    assert a.category == b.category
+                    np.testing.assert_allclose(a.box, b.box,
+                                               rtol=1e-4, atol=1e-4)
+                saw += len(da)
+        assert saw > 0
+        # tick accounting is device-aware (max over groups can only be
+        # <= the dispatch sum; equality when every tick keeps a single
+        # group busy, which a 2-variant allocator is free to do)
+        assert placed.stats.sum_tick_inf_s <= placed.stats.sum_batched_inf_s
+        assert placed.stats.group_busy_s

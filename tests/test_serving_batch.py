@@ -457,6 +457,91 @@ class TestCubeMapThroughQueues:
         assert e2es[6] < e2es[1]
 
 
+class TestNmsShapeBuckets:
+    """PR-3 satellite (ROADMAP open item): per-tick batched-NMS rows
+    pad to the ShapeBuckets N-ladder so the device path's (B, N)
+    compile shapes are bounded, pinned by the sphere-level trace
+    counter exactly like ``infer_srois_batched``'s."""
+
+    def test_pad_nms_rows_snaps_to_ladder(self):
+        b = ShapeBuckets((1, 2), nms_sizes=(8, 16, 32))
+        assert [b.pad_nms_rows(n) for n in (0, 1, 8, 9, 16, 30)] == \
+            [8, 8, 8, 16, 16, 32]
+        # beyond the top rung: top-rung multiples, never an error
+        assert b.pad_nms_rows(33) == 64 and b.pad_nms_rows(65) == 96
+
+    def test_invalid_nms_buckets_rejected(self):
+        with pytest.raises(ValueError):
+            ShapeBuckets((1, 2), nms_sizes=(16, 8))
+        with pytest.raises(ValueError):
+            ShapeBuckets((1, 2), nms_sizes=())
+
+    def _rows(self, rng, n_rows, max_det=12):
+        rows = []
+        for _ in range(n_rows):
+            k = int(rng.integers(0, max_det))
+            rows.append([sroi_mod.Detection(
+                box=np.array([rng.uniform(-2, 2), rng.uniform(-0.8, 0.8),
+                              rng.uniform(0.2, 0.6), rng.uniform(0.2, 0.6)]),
+                category=0, score=float(rng.uniform(0.1, 1.0)))
+                for _ in range(k)])
+        return rows
+
+    def test_bucketed_padding_keeps_identical_masks(self):
+        """Masked padding (N to the ladder, B to the stream count) can
+        never change which real detections survive."""
+        rng = np.random.default_rng(0)
+        buckets = ShapeBuckets((1, 2, 4), nms_sizes=(8, 16, 32))
+        for trial in range(5):
+            rows = self._rows(rng, n_rows=int(rng.integers(1, 6)))
+            boxes_a, scores_a, mask_a = pad_detection_rows(rows)
+            keep_a = sph_nms_batch(boxes_a, scores_a, mask_a,
+                                   iou_threshold=0.6)
+            boxes_b, scores_b, mask_b = pad_detection_rows(
+                rows, pad_n=buckets.pad_nms_rows, total_rows=8)
+            assert boxes_b.shape[0] == 8
+            assert boxes_b.shape[1] in (8, 16, 32)
+            keep_b = sph_nms_batch(boxes_b, scores_b, mask_b,
+                                   iou_threshold=0.6)
+            for r, dets in enumerate(rows):
+                np.testing.assert_array_equal(keep_a[r, :len(dets)],
+                                              keep_b[r, :len(dets)])
+            assert not keep_b[len(rows):].any()  # padded rows keep nothing
+
+    def test_device_path_traces_bounded_by_ladder(self):
+        """Trace-counter pin: ladder-padded ticks retrace the jitted
+        device NMS once per rung, not once per detection count."""
+        from repro.core.sphere import nms_device_trace_count
+
+        rng = np.random.default_rng(1)
+        buckets = ShapeBuckets((1, 2, 4), nms_sizes=(8, 16))
+        n_streams = 4
+        start = nms_device_trace_count()
+        for tick in range(6):
+            rows = self._rows(rng, n_rows=int(rng.integers(1, n_streams + 1)))
+            boxes, scores, mask = pad_detection_rows(
+                rows, pad_n=buckets.pad_nms_rows, total_rows=n_streams)
+            sph_nms_batch(boxes, scores, mask, iou_threshold=0.6,
+                          backend="jit")
+        assert nms_device_trace_count() - start <= len(buckets.nms_sizes)
+
+    def test_pod_server_suppression_unchanged_by_bucketing(self):
+        """The served histories with bucketed NMS padding equal the
+        unpadded per-stream suppression (the pre-PR-3 behaviour)."""
+        inline, backends_a = _oracle_pod(3, seed0=70)
+        batched, backends_b = _oracle_pod(3, seed0=70)
+        server = PodServer(batched, backends_b, max_batch=4)
+        for f in range(6):
+            for loop, b in zip(inline, backends_a):
+                b.set_frame(f)
+                loop.process_frame(None)
+            server.step(f)
+        for la, lb in zip(inline, batched):
+            assert len(la._history[-1]) == len(lb._history[-1])
+            for a, b in zip(la._history[-1], lb._history[-1]):
+                np.testing.assert_array_equal(a.box, b.box)
+
+
 class TestVariantQueuesUnit:
     class _CountingBackend:
         def __init__(self):
