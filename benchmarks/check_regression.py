@@ -10,6 +10,14 @@ and ignores entries present on only one side (grid growth is not a
 regression).  Wall-clock noise moves both paths of a ratio together,
 which is why the ratio — not raw microseconds — is gated.
 
+When both snapshots carry a ``pod_grid`` section (PR 4,
+``serving_bench.py --pod-allocate``) the coupled-vs-uncoupled
+accuracy-proxy ratio is gated the same way, PLUS a hard dominance
+floor: at >= ``--pod-min-streams`` streams the coupled allocator must
+stay strictly better on the accuracy proxy at equal-or-lower tick
+latency (the pod-allocation acceptance invariant; deterministic, so it
+is gated exactly rather than within a noise band).
+
     python benchmarks/check_regression.py \
         --baseline BENCH_SERVE.json --fresh fresh_serve.json
 
@@ -25,15 +33,16 @@ import sys
 
 
 def compare(baseline: dict, fresh: dict, max_regression: float,
-            key: str = "speedup", log=print) -> bool:
+            key: str = "speedup", section: str = "grid",
+            log=print) -> bool:
     """True when ``fresh`` holds the line vs ``baseline``."""
-    base = {e["streams"]: e[key] for e in baseline.get("grid", [])
+    base = {e["streams"]: e[key] for e in baseline.get(section, [])
             if key in e}
-    new = {e["streams"]: e[key] for e in fresh.get("grid", [])
+    new = {e["streams"]: e[key] for e in fresh.get(section, [])
            if key in e}
     common = sorted(set(base) & set(new))
     if not common:
-        log(f"check_regression: no comparable grid entries for {key!r}")
+        log(f"check_regression: no comparable {section} entries for {key!r}")
         return False
     base_mean = sum(base[s] for s in common) / len(common)
     new_mean = sum(new[s] for s in common) / len(common)
@@ -51,6 +60,38 @@ def compare(baseline: dict, fresh: dict, max_regression: float,
     return True
 
 
+def pod_dominates(fresh: dict, min_streams: int = 8, log=print) -> bool:
+    """The pod-allocation acceptance floor (strict, not a noise band).
+
+    Every fresh ``pod_grid`` entry at >= ``min_streams`` streams must
+    show the coupled allocator strictly better on the accuracy proxy
+    (``accuracy_ratio > 1``) at equal-or-lower mean tick latency
+    (``tick_ratio <= 1``).  The frontier is computed by a deterministic
+    oracle pod on the calibrated latency model — no wall clock — so
+    exact gating does not flap.
+    """
+    entries = [e for e in fresh.get("pod_grid", [])
+               if e.get("streams", 0) >= min_streams]
+    if not entries:
+        log(f"check_regression: no pod_grid entries at "
+            f">= {min_streams} streams")
+        return False
+    ok = True
+    for e in entries:
+        dominates = (e["accuracy_ratio"] > 1.0
+                     and e["tick_ratio"] <= 1.0 + 1e-6)
+        log(f"  pod streams={e['streams']:>3}  accuracy_ratio="
+            f"{e['accuracy_ratio']:.4f}  tick_ratio={e['tick_ratio']:.4f}"
+            f"{'' if dominates else '  <-- FAILS dominance'}")
+        if not dominates:
+            log(f"::error::pod allocation no longer dominates at "
+                f"{e['streams']} streams: accuracy_ratio="
+                f"{e['accuracy_ratio']:.4f} tick_ratio="
+                f"{e['tick_ratio']:.4f}")
+            ok = False
+    return ok
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", default="BENCH_SERVE.json",
@@ -62,12 +103,30 @@ def main(argv=None) -> int:
     ap.add_argument("--key", default="speedup",
                     help="grid metric to gate (batched-vs-per-request "
                          "ratio by default)")
+    ap.add_argument("--pod-min-streams", type=int, default=8,
+                    help="stream floor above which the pod-allocation "
+                         "dominance invariant is enforced")
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
     ok = compare(baseline, fresh, args.max_regression, key=args.key)
+    if baseline.get("pod_grid") and not fresh.get("pod_grid"):
+        # a baseline with a pod_grid means the pod gate is armed; a
+        # fresh snapshot without one means the --pod-allocate bench
+        # never ran (or its merge failed) — fail loudly instead of
+        # silently skipping the dominance gate
+        print("::error::baseline has pod_grid but fresh snapshot does "
+              "not; did the --pod-allocate bench step run?")
+        ok = False
+    elif fresh.get("pod_grid"):
+        if baseline.get("pod_grid"):
+            # the coupled-vs-uncoupled accuracy gain must hold the line
+            ok = compare(baseline, fresh, args.max_regression,
+                         key="accuracy_ratio", section="pod_grid") and ok
+        # the dominance invariant is exact (deterministic bench)
+        ok = pod_dominates(fresh, args.pod_min_streams) and ok
     return 0 if ok else 1
 
 

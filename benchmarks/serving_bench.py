@@ -24,14 +24,28 @@ group) before any result is resolved.  Two numbers come out of it:
     sharded sums), the calibrated paper-regime metric every serving
     number in this repo uses, with per-group utilisation alongside.
 
+``--pod-allocate`` (PR 4) instead measures the pod-level ALLOCATION
+frontier: the same oracle pod served twice — per-stream (uncoupled)
+knapsacks vs the capacity-enveloped fixed-point coupling
+(``repro.serving.pod_allocation``) — recording the accuracy proxy
+(mean allocator plan value per stream-frame) against the model-priced
+mean tick inference latency.  Fully deterministic (oracle backend,
+virtual device slots, calibrated latency model; no wall clock), so the
+coupled-vs-uncoupled ratios are CI-gateable: at >= 8 streams the
+coupled allocator must be strictly better on the accuracy proxy at
+equal-or-lower tick latency.  Results merge into ``BENCH_SERVE.json``
+under ``pod_grid`` without touching the wall-clock ``grid``.
+
 Sweeps stream counts and emits one CSV line per config plus
 ``BENCH_SERVE.json`` so future snapshots track the trajectory (the
 nightly regression gate ``benchmarks/check_regression.py`` compares
-the batched-vs-per-request ratio against the committed snapshot).
-Warmup runs both paths first so jit compiles (bounded by the bucket
-ladder) are not billed to the measurement.
+the batched-vs-per-request ratio — and the pod-allocation accuracy
+ratio — against the committed snapshot).  Warmup runs both paths
+first so jit compiles (bounded by the bucket ladder) are not billed
+to the measurement.
 
     PYTHONPATH=src:. python benchmarks/serving_bench.py --devices 8
+    PYTHONPATH=src:. python benchmarks/serving_bench.py --pod-allocate
 """
 
 from __future__ import annotations
@@ -49,6 +63,11 @@ import numpy as np
 SERVE_GRID = (1, 2, 4, 8, 16)   # streams per tick
 SROIS_PER_STREAM = 2
 SERVE_JSON_PATH = os.environ.get("BENCH_SERVE_JSON", "BENCH_SERVE.json")
+
+POD_GRID = (2, 4, 8, 16)        # streams for the pod-allocation frontier
+POD_FRAMES = 12
+POD_DEVICES = 8
+POD_BUDGET_S = 1.8
 
 
 def _make_backend(n_variants: int = 2):
@@ -231,13 +250,114 @@ def run(csv=print, grid=SERVE_GRID, json_path=SERVE_JSON_PATH,
     return out
 
 
+def _pod_variants():
+    """The acceptance pod's ladder: p5-896 vs p6-1280 (distinct
+    cost/accuracy, both edge-served, each on its own replica group)."""
+    from repro.serving import profiles
+
+    return profiles.make_ladder()[3:5]
+
+
+def _pod_serve(n_streams: int, pod_allocate: bool, frames: int,
+               devices: int):
+    """One oracle pod run (coupled or uncoupled), deterministic."""
+    from repro.core.omnisense import OmniSenseLoop
+    from repro.data.synthetic import make_video
+    from repro.serving.network import NetworkModel
+    from repro.serving.placement import VariantPlacement
+    from repro.serving.scheduler import OmniSenseLatencyModel, OracleBackend
+    from repro.serving.server import PodServer
+    from repro.serving import profiles
+
+    variants = _pod_variants()
+    lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+    costs = [lat._pre(v) + lat._inf(v) for v in variants]
+    loops, backends = [], []
+    for s in range(n_streams):
+        video = make_video(n_frames=frames + 8, n_objects=30 + 5 * (s % 4),
+                           seed=100 + s)
+        backend = OracleBackend(video)
+        backends.append(backend)
+        loops.append(OmniSenseLoop(variants, lat, backend,
+                                   budget_s=POD_BUDGET_S,
+                                   explore_costs=costs))
+    placement = VariantPlacement.virtual(variants, devices, cost_fn=lat._inf)
+    server = PodServer(loops, backends, max_batch=8, placement=placement,
+                       pod_allocate=pod_allocate)
+    return server.run(range(frames))
+
+
+def run_pod_allocation(csv=print, grid=POD_GRID, json_path=SERVE_JSON_PATH,
+                       frames: int = POD_FRAMES,
+                       devices: int = POD_DEVICES) -> dict:
+    """The coupled-vs-uncoupled allocation frontier (``--pod-allocate``).
+
+    Merges a ``pod_grid`` section into ``json_path`` WITHOUT touching
+    the wall-clock ``grid`` section (the two measure different things:
+    ``grid`` is measured dispatch time, ``pod_grid`` is the calibrated
+    model's deterministic accuracy/tick frontier).
+    """
+    entries = []
+    for n_streams in grid:
+        base = _pod_serve(n_streams, False, frames, devices)
+        coup = _pod_serve(n_streams, True, frames, devices)
+        base_tick = base.sum_tick_inf_s / max(base.ticks, 1)
+        coup_tick = coup.sum_tick_inf_s / max(coup.ticks, 1)
+        entry = dict(
+            streams=n_streams,
+            frames=frames,
+            accuracy_proxy_uncoupled=round(base.accuracy_proxy, 4),
+            accuracy_proxy_coupled=round(coup.accuracy_proxy, 4),
+            accuracy_ratio=round(coup.accuracy_proxy
+                                 / max(base.accuracy_proxy, 1e-9), 4),
+            tick_s_uncoupled=round(base_tick, 4),
+            tick_s_coupled=round(coup_tick, 4),
+            tick_ratio=round(coup_tick / max(base_tick, 1e-9), 4),
+            rounds_per_tick=round(coup.pod_rounds
+                                  / max(coup.pod_ticks, 1), 2),
+            converged_ticks=f"{coup.pod_converged_ticks}/{coup.pod_ticks}",
+        )
+        entries.append(entry)
+        csv(f"serving,pod_alloc_s{n_streams},accuracy_ratio,"
+            f"{entry['accuracy_ratio']},tick_ratio={entry['tick_ratio']} "
+            f"rounds={entry['rounds_per_tick']}")
+    out = {}
+    if json_path and os.path.exists(json_path):
+        with open(json_path) as f:
+            out = json.load(f)
+    pod_variants = _pod_variants()
+    out["pod_allocation"] = {
+        "variants": [v.name for v in pod_variants],
+        "devices": devices, "budget_s": POD_BUDGET_S, "frames": frames}
+    out["pod_grid"] = entries
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        csv(f"serving,pod_alloc_json,path,0,{json_path}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--devices", type=int, default=1,
+    ap.add_argument("--devices", type=int, default=0,
                     help="shard per-variant forwards over replica groups "
-                         "cut from this many devices (1 = single-device)")
+                         "cut from this many devices (default: 1 for the "
+                         f"wall-clock grid, {POD_DEVICES} virtual slots "
+                         "for --pod-allocate)")
+    ap.add_argument("--pod-allocate", action="store_true",
+                    help="measure the pod-level allocation frontier "
+                         "(coupled vs uncoupled knapsacks) instead of the "
+                         "wall-clock dispatch grid; merges a pod_grid "
+                         "section into the JSON (virtual device slots — no "
+                         "jax devices needed)")
     ap.add_argument("--json", default=SERVE_JSON_PATH)
     args = ap.parse_args()
+    if args.pod_allocate:
+        # 0 is the "not given" sentinel, so an explicit --devices 1
+        # really does measure the single-group pod frontier
+        run_pod_allocation(json_path=args.json,
+                           devices=args.devices or POD_DEVICES)
+        return
     if args.devices > 1 and "jax" not in sys.modules:
         # must happen before the first jax import anywhere in-process
         flags = os.environ.get("XLA_FLAGS", "")
@@ -245,7 +365,7 @@ def main() -> None:
             os.environ["XLA_FLAGS"] = (
                 f"{flags} --xla_force_host_platform_device_count="
                 f"{args.devices}").strip()
-    run(devices=args.devices, json_path=args.json)
+    run(devices=args.devices or 1, json_path=args.json)
 
 
 if __name__ == "__main__":

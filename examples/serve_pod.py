@@ -7,6 +7,10 @@ variant are batched per tick, and the variants are placed onto
 per-variant REPLICA GROUPS (the deployment EXPERIMENTS.md §Perf Cell C
 assumes: 16-chip replica groups per variant) so the V batched forwards
 run concurrently — the tick pays the max over groups, not the sum.
+Since PR 4 the per-stream knapsacks are also COUPLED: the pod-level
+allocator (``repro.serving.pod_allocation``) re-prices each stream's
+variant costs against the co-streams' batched demand and the replica
+groups' utilisation, iterating to a fixed point each tick.
 
     PYTHONPATH=src python examples/serve_pod.py
 
@@ -30,7 +34,8 @@ from repro.serving import profiles
 from repro.serving.network import NetworkModel
 from repro.serving.placement import VariantPlacement
 from repro.serving.scheduler import OmniSenseLatencyModel, OracleBackend
-from repro.serving.server import PodServer, format_group_report
+from repro.serving.server import (PodServer, format_group_report,
+                                  format_pod_allocation_report)
 
 
 def main():
@@ -49,7 +54,12 @@ def main():
                                    explore_costs=costs))
 
     placement = VariantPlacement.virtual(variants, n_devices, cost_fn=lat._inf)
-    server = PodServer(loops, backends, max_batch=8, placement=placement)
+    # pod_allocate: the per-stream knapsacks are coupled each tick by
+    # the fixed-point pod-level allocator (amortized batched costs +
+    # per-group queue depth/utilisation), so streams prefer variants
+    # whose replica groups are idle instead of planning solo
+    server = PodServer(loops, backends, max_batch=8, placement=placement,
+                       pod_allocate=True)
     stats = server.run(range(16))
 
     print(f"streams: {n_streams}, frames/stream: 16")
@@ -69,6 +79,7 @@ def main():
           f"{stats.batching_gain:.2f}x)")
     for line in format_group_report(stats, placement):
         print(line)
+    print(format_pod_allocation_report(stats))
     print("\npod serving loop OK")
 
 

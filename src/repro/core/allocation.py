@@ -27,8 +27,36 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+from typing import Callable
 
 import numpy as np
+
+# (i, j, d_pre_ij, d_inf_ij) -> (d_pre_ij, d_inf_ij): reprices model i
+# on SRoI j before the DP sees it.  The pod-level allocator
+# (repro.serving.pod_allocation) injects tick-coupled batched costs
+# through this; with no hook the solver is byte-for-byte the legacy
+# per-stream knapsack.
+CostHook = Callable[[int, int, float, float], tuple[float, float]]
+
+
+def apply_cost_hook(
+    hook: CostHook, d_pre: np.ndarray, d_inf: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Materialise the hooked (d_pre, d_inf) matrices.
+
+    Shared by :func:`allocate` / :func:`allocate_bruteforce` and by
+    callers that need the same repriced matrices outside the DP (e.g.
+    to re-price an incumbent plan via :func:`plan_latency`), so the
+    hook semantics cannot drift between them.
+    """
+    m, r = d_pre.shape
+    out_pre = np.empty_like(d_pre, dtype=np.float64)
+    out_inf = np.empty_like(d_inf, dtype=np.float64)
+    for i in range(m):
+        for j in range(r):
+            out_pre[i, j], out_inf[i, j] = hook(
+                i, j, float(d_pre[i, j]), float(d_inf[i, j]))
+    return out_pre, out_inf
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +94,8 @@ def allocate(
     d_pre: np.ndarray,
     d_inf: np.ndarray,
     budget: float,
+    *,
+    cost_hook: CostHook | None = None,
 ) -> Plan | None:
     """Algorithm 2.
 
@@ -73,6 +103,10 @@ def allocate(
     ``d_pre``: (M, R) preprocessing delays d^P_{i,j} (skip row = 0).
     ``d_inf``: (M, R) inference delays d^I_{i,j} (skip row = 0).
     ``budget``: analysis latency budget T (seconds).
+    ``cost_hook``: optional :data:`CostHook` repricing each (model,
+    SRoI) delay pair before the DP runs (the pod-level coupling entry
+    point); with ``None`` the input matrices are used untouched, so
+    legacy plans stay bit-identical.
 
     Returns the best feasible plan for SRoIs processed in column order,
     or ``None`` when even skipping everything violates the budget
@@ -81,6 +115,8 @@ def allocate(
     m, r = acc.shape
     if r == 0:
         return Plan(0.0, 0.0, 0.0, ())
+    if cost_hook is not None:
+        d_pre, d_inf = apply_cost_hook(cost_hook, d_pre, d_inf)
     d_tot = d_pre + d_inf
 
     frontier: list[Plan] = []
@@ -115,9 +151,13 @@ def allocate_bruteforce(
     d_pre: np.ndarray,
     d_inf: np.ndarray,
     budget: float,
+    *,
+    cost_hook: CostHook | None = None,
 ) -> Plan | None:
     """Exhaustive oracle (M^R enumeration) for tests; same semantics."""
     m, r = acc.shape
+    if cost_hook is not None:
+        d_pre, d_inf = apply_cost_hook(cost_hook, d_pre, d_inf)
     d_tot = d_pre + d_inf
     best: Plan | None = None
     for models in itertools.product(range(m), repeat=r):

@@ -79,6 +79,36 @@ class InferenceRequest:
 
 
 @dataclasses.dataclass
+class FrameContext:
+    """The planning inputs of one frame, before any allocator ran.
+
+    Produced by :meth:`OmniSenseLoop.frame_context` (which advances the
+    stream's frame/exploration state); consumed by
+    :meth:`OmniSenseLoop.emit_pending` together with a plan.  The pod
+    server collects every stream's context first and hands the batch to
+    the pod-level allocator (``repro.serving.pod_allocation``), which
+    couples the per-stream knapsacks through shared batched costs;
+    standalone :meth:`OmniSenseLoop.begin_frame` composes the two
+    halves with the per-stream ``allocation.allocate`` in between.
+
+    ``acc``/``d_pre``/``d_inf`` are the (1 + M, R) allocator matrices
+    (``None`` when the frame predicted no SRoIs); ``budget`` is the
+    frame's latency budget net of any reserved exploration cost.
+    """
+
+    frame: np.ndarray | None
+    srois: list[sroi.SRoI]
+    acc: np.ndarray | None
+    d_pre: np.ndarray | None
+    d_inf: np.ndarray | None
+    budget: float
+    explore_frame: bool
+    explore_idx: int
+    explore_cost: float
+    t0: float
+
+
+@dataclasses.dataclass
 class PendingFrame:
     """A planned-but-not-executed frame (emission half of the loop).
 
@@ -161,13 +191,13 @@ class OmniSenseLoop:
 
     # -- main entry --------------------------------------------------------
 
-    def begin_frame(self, frame: np.ndarray) -> PendingFrame:
-        """Emission half of the frame: predict SRoIs, allocate models
-        and emit one :class:`InferenceRequest` per non-skipped SRoI —
-        WITHOUT executing any inference.  The pod server parks the
-        requests in per-variant queues and drains them into batched
-        detector forwards; standalone use goes through
-        :meth:`process_frame`, which executes the requests inline."""
+    def frame_context(self, frame: np.ndarray) -> FrameContext:
+        """First half of the emission: advance the frame/exploration
+        state, predict SRoIs and build the allocator's input matrices —
+        WITHOUT choosing a plan.  Callers that allocate per stream go
+        through :meth:`begin_frame`; the pod server instead collects
+        every stream's context and solves the coupled pod-level
+        allocation before handing each plan to :meth:`emit_pending`."""
         t0 = time.perf_counter()
         self._frame_idx += 1
         explore_frame = (self.explore_every > 0
@@ -185,17 +215,34 @@ class OmniSenseLoop:
             gamma=self.gamma,
             n_categories=self.n_categories,
         )
-
-        plan = None
-        planned_latency = 0.0
+        acc = d_pre = d_inf = None
         if srois:
             acc = self._weighted_acc_matrix(srois)
             d_pre, d_inf = self.latency_model.delays(srois, self.variants)
-            plan = allocation.allocate(acc, d_pre, d_inf, budget)
-            if plan is not None:
-                planned_latency = plan.t_done
-                if self.on_plan is not None:
-                    self.on_plan(plan, list(srois))
+        return FrameContext(
+            frame=frame,
+            srois=srois,
+            acc=acc,
+            d_pre=d_pre,
+            d_inf=d_inf,
+            budget=budget,
+            explore_frame=explore_frame,
+            explore_idx=explore_idx,
+            explore_cost=explore_cost,
+            t0=t0,
+        )
+
+    def emit_pending(self, ctx: FrameContext,
+                     plan: allocation.Plan | None) -> PendingFrame:
+        """Second half of the emission: turn a (possibly pod-coupled)
+        plan for ``ctx`` into the frame's :class:`InferenceRequest`
+        list.  ``plan.models`` must index ``ctx.srois`` column-wise
+        exactly like a per-stream ``allocation.allocate`` result."""
+        planned_latency = 0.0
+        if plan is not None:
+            planned_latency = plan.t_done
+            if self.on_plan is not None:
+                self.on_plan(plan, list(ctx.srois))
 
         requests: list[InferenceRequest] = []
         if plan is not None:
@@ -203,23 +250,40 @@ class OmniSenseLoop:
                 if model_idx == 0:
                     continue  # skipped SRoI
                 requests.append(InferenceRequest(
-                    region=srois[j],
+                    region=ctx.srois[j],
                     variant=self.variants[model_idx - 1],
                     slot=len(requests),
-                    special=srois[j].special,
-                    frame=frame,
+                    special=ctx.srois[j].special,
+                    frame=ctx.frame,
                 ))
         return PendingFrame(
-            frame=frame,
-            srois=srois,
+            frame=ctx.frame,
+            srois=ctx.srois,
             plan=plan,
             planned_latency=planned_latency,
-            overhead_s=time.perf_counter() - t0,
-            explore_frame=explore_frame,
-            explore_idx=explore_idx,
-            explore_cost=explore_cost,
+            overhead_s=time.perf_counter() - ctx.t0,
+            explore_frame=ctx.explore_frame,
+            explore_idx=ctx.explore_idx,
+            explore_cost=ctx.explore_cost,
             requests=requests,
         )
+
+    def begin_frame(self, frame: np.ndarray) -> PendingFrame:
+        """Emission half of the frame: predict SRoIs, allocate models
+        and emit one :class:`InferenceRequest` per non-skipped SRoI —
+        WITHOUT executing any inference.  The pod server parks the
+        requests in per-variant queues and drains them into batched
+        detector forwards; standalone use goes through
+        :meth:`process_frame`, which executes the requests inline.
+        (Composition of :meth:`frame_context` + per-stream
+        ``allocation.allocate`` + :meth:`emit_pending`; the pod-level
+        allocator replaces only the middle step.)"""
+        ctx = self.frame_context(frame)
+        plan = None
+        if ctx.srois:
+            plan = allocation.allocate(ctx.acc, ctx.d_pre, ctx.d_inf,
+                                       ctx.budget)
+        return self.emit_pending(ctx, plan)
 
     def finish_frame(self, pending: PendingFrame,
                      request_detections: Sequence[list[sroi.Detection]], *,

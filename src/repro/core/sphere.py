@@ -17,8 +17,11 @@ OmniSense paper:
     lat/long-interval overlap of two equator-centred rectangles (the
     fast approximation of the AAAI'20 spherical criteria).
   * ``sph_nms`` — greedy spherical non-maximum suppression (paper
-    default threshold 0.6), in both a jit-compatible ``lax`` form and a
-    fast host/NumPy form used by the online serving loop.
+    default threshold 0.6): the single-row (B=1) entry point of
+    ``sph_nms_batch``.  ``sph_nms_lax`` keeps the original
+    jit-compatible ``lax.fori_loop`` form as an independent oracle, and
+    ``sph_nms_host`` the fast NumPy form used by the online serving
+    loop.
   * ``sph_nms_batch`` — the batched NMS subsystem used by the pod
     serving loop (design note below).
 
@@ -212,12 +215,35 @@ def sph_nms(
     scores: Array,
     iou_threshold: float = 0.6,
     max_out: int | None = None,
+) -> np.ndarray:
+    """Greedy spherical NMS for one frame's boxes -> (N,) keep-mask.
+
+    The single-row entry point of the batched subsystem: dispatches to
+    ``sph_nms_batch(boxes[None], ...)`` (ROADMAP fold — the while-loop
+    path has soaked, so the B=1 case no longer carries a private
+    implementation).  The original jit-compatible ``lax.fori_loop``
+    form lives on as :func:`sph_nms_lax`, kept as an INDEPENDENT oracle
+    for the equivalence suite; trace-time callers should use it
+    directly.
+    """
+    keep = sph_nms_batch(np.asarray(boxes)[None], np.asarray(scores)[None],
+                         None, iou_threshold, max_out=max_out)
+    return keep[0]
+
+
+def sph_nms_lax(
+    boxes: Array,
+    scores: Array,
+    iou_threshold: float = 0.6,
+    max_out: int | None = None,
 ) -> Array:
-    """Greedy spherical NMS, jit-compatible.
+    """Greedy spherical NMS, jit-compatible (``lax.fori_loop``).
 
     Returns a boolean keep-mask of shape (N,).  Suppression follows the
     paper's default SphIoU threshold of 0.6.  ``max_out`` bounds the
     number of survivors (useful for fixed-shape serving buffers).
+    Deliberately NOT expressed via ``sph_nms_batch``: this is the
+    independent oracle the batched implementations are tested against.
     """
     n = boxes.shape[0]
     order = jnp.argsort(-scores)

@@ -14,6 +14,15 @@ no accelerators consulted:
 
     PYTHONPATH=src python -m repro.launch.serve --streams 8 --devices 8
 
+``--pod-allocate`` switches the control plane to the pod-level
+allocator (``repro.serving.pod_allocation``): each tick the per-stream
+knapsacks are coupled through amortized batched costs and per-group
+queue depth/utilisation by a fixed-point loop, so streams stop
+planning as if they had the edge to themselves:
+
+    PYTHONPATH=src python -m repro.launch.serve --streams 8 --devices 8 \
+        --pod-allocate
+
 The REAL shard_map-sharded detector path is exercised by
 ``benchmarks/serving_bench.py --devices 8`` and the `multidevice` test
 lane (both force fake host devices via
@@ -44,6 +53,10 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=0,
                     help="partition this many device slots into per-variant "
                          "replica groups (0 = single-device pod)")
+    ap.add_argument("--pod-allocate", action="store_true",
+                    help="couple the per-stream knapsacks through batched "
+                         "costs and group utilisation (the fixed-point "
+                         "pod-level allocator, repro.serving.pod_allocation)")
     args = ap.parse_args()
 
     variants = profiles.make_ladder()
@@ -69,11 +82,15 @@ def main() -> None:
                                              cost_fn=lat._inf)
 
     server = PodServer(loops, backends, max_batch=args.max_batch,
-                       placement=placement)
+                       placement=placement, pod_allocate=args.pod_allocate)
     stats = server.run(range(args.frames))
     print(f"served {stats.frames} frames across {args.streams} streams")
     print(f"detections: {stats.total_detections}  "
           f"mean plan latency: {stats.mean_e2e:.2f}s (budget {args.budget}s)")
+    if args.pod_allocate:
+        from repro.serving.server import format_pod_allocation_report
+
+        print(format_pod_allocation_report(stats))
     print(f"control-plane overhead: "
           f"{1e3 * stats.sum_overhead / stats.frames:.2f} ms/frame")
     if stats.batch_sizes:

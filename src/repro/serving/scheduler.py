@@ -127,6 +127,45 @@ class OmniSenseLatencyModel:
         """
         return max(group_costs, default=0.0)
 
+    def variant_queue_cost(self, variant: acc_mod.ModelProfile,
+                           n_requests: int, buckets=None,
+                           n_devices: int = 1) -> float:
+        """Device-busy seconds of draining ``n_requests`` of ``variant``.
+
+        Exactly the variant's contribution to its replica group in one
+        tick schedule: the requests split into bucket-capped chunks
+        (``ShapeBuckets.split``) and each chunk is one sharded batched
+        forward (:meth:`sharded_inference_delay`) — the same curve
+        :meth:`tick_schedule_delay` prices, so the pod-level allocator
+        and the tick model can never disagree on what a queue costs.
+        Without ``buckets`` the whole count is one dispatch.
+        """
+        if n_requests <= 0:
+            return 0.0
+        chunks = buckets.split(n_requests) if buckets is not None \
+            else [n_requests]
+        return sum(self.sharded_inference_delay(variant, b, n_devices)
+                   for b in chunks)
+
+    def pod_amortization(self, variant: acc_mod.ModelProfile,
+                         batch_size: int, buckets=None,
+                         n_devices: int = 1) -> float:
+        """Per-request share of the variant's tick drain, relative to
+        the b=1 forward.
+
+        ``== 1.0`` exactly at ``batch_size == 1`` on one device (the
+        b=1 pin that keeps uncoupled plans byte-identical), decreasing
+        as co-streams share the batch and as the replica group widens.
+        The pod allocator scales each stream's base ``d_inf`` row by
+        this factor, so coupling inherits whatever per-stream delivery
+        estimates the base matrices carry.
+        """
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        total = self.variant_queue_cost(variant, batch_size, buckets,
+                                        n_devices)
+        return total / (batch_size * self.batched_inference_delay(variant, 1))
+
     def tick_schedule_delay(self, schedule):
         """Price a whole tick's dispatch schedule on the pure curve.
 

@@ -76,10 +76,23 @@ class ServeStats:
     # utilisation reports label busy seconds with the partition that
     # actually accrued them (rebalances can change a group's width)
     group_devices: dict = dataclasses.field(default_factory=dict)
+    # summed allocator plan values (the paper's objective — the pod
+    # bench's accuracy proxy, comparable coupled vs uncoupled because
+    # values come from the acc matrices, never from prices)
+    sum_plan_value: float = 0.0
+    # pod-level allocation accounting (zero when pod_allocate is off)
+    pod_rounds: int = 0
+    pod_ticks: int = 0
+    pod_converged_ticks: int = 0
 
     @property
     def mean_e2e(self) -> float:
         return self.sum_e2e / max(self.frames, 1)
+
+    @property
+    def accuracy_proxy(self) -> float:
+        """Mean allocator plan value per stream-frame."""
+        return self.sum_plan_value / max(self.frames, 1)
 
     @property
     def mean_batch(self) -> float:
@@ -127,6 +140,18 @@ def format_group_report(stats: ServeStats, placement) -> list[str]:
     ]
 
 
+def format_pod_allocation_report(stats: ServeStats) -> str:
+    """Human-readable pod-level allocation summary (shared by the
+    serving drivers, like :func:`format_group_report`, so the format —
+    and the accuracy-proxy units — cannot drift between them)."""
+    return (f"pod-level allocation: "
+            f"{stats.pod_rounds / max(stats.pod_ticks, 1):.1f} "
+            f"fixed-point rounds/tick "
+            f"({stats.pod_converged_ticks}/{stats.pod_ticks} ticks "
+            f"converged), accuracy proxy "
+            f"{stats.accuracy_proxy:.3f}/stream-frame")
+
+
 class PodServer:
     """Variant-batched tick scheduler over per-stream OmniSense loops.
 
@@ -139,11 +164,25 @@ class PodServer:
                  max_batch: int = 8, marginal_batch_cost: float | None = None,
                  buckets: ShapeBuckets | None = None,
                  frame_source: Callable[[int, int], np.ndarray] | None = None,
-                 placement=None):
+                 placement=None, pod_allocate: bool = False):
         assert len(loops) == len(backends)
         self.loops = loops
         self.backends = backends
         self.max_batch = max_batch
+        # opt-in pod-level allocation: each tick, every stream's
+        # knapsack is coupled through batched costs + group utilisation
+        # by the fixed-point solver (repro.serving.pod_allocation)
+        # instead of planning as if it had the edge to itself.  Off by
+        # default: the uncoupled path stays byte-identical.
+        self.pod_allocate = pod_allocate
+        if pod_allocate:
+            ladder = tuple(v.name for v in loops[0].variants)
+            for loop in loops:
+                if tuple(v.name for v in loop.variants) != ladder:
+                    raise ValueError(
+                        "pod_allocate=True needs every stream on the same "
+                        f"variant ladder; got {ladder} vs "
+                        f"{tuple(v.name for v in loop.variants)}")
         # repro.serving.placement.VariantPlacement: routes each drained
         # chunk to its variant's replica group and switches the tick
         # model to max-over-groups; None = single-device pod (every
@@ -218,17 +257,67 @@ class PodServer:
             batched = sum(curve(g) for g in dispatch["group_sizes"])
         return batched, single * b
 
+    def _pod_plan(self, frames: list) -> list:
+        """Coupled emission: collect every stream's planning context,
+        solve the pod-level fixed point, emit per the joint plans.
+
+        Coupled prices derive from the FIRST loop's latency model (one
+        edge serves the pod, so one batched curve); per-stream base
+        matrices still carry each stream's own delivery estimates, and
+        the zero-co-stream coupling is the exact identity, so streams
+        with private models only ever see pod-relative adjustments."""
+        from repro.serving import pod_allocation
+
+        ctxs, ctx_durations = [], []
+        for loop, frame in zip(self.loops, frames):
+            ctx = loop.frame_context(frame)
+            ctx_durations.append(time.perf_counter() - ctx.t0)
+            ctxs.append(ctx)
+        problems = [pod_allocation.StreamProblem(
+            ctx.acc, ctx.d_pre, ctx.d_inf, ctx.budget) for ctx in ctxs]
+        util = (self.stats.group_utilisation()
+                if self.placement is not None and self.stats.sum_tick_inf_s > 0
+                else None)
+        t_solve = time.perf_counter()
+        sol = pod_allocation.solve_pod(
+            problems, self.loops[0].variants, self.loops[0].latency_model,
+            buckets=self.buckets, placement=self.placement,
+            group_utilisation=util)
+        solve_share = (time.perf_counter() - t_solve) / len(self.loops)
+        self.stats.pod_ticks += 1
+        self.stats.pod_rounds += sol.rounds
+        self.stats.pod_converged_ticks += int(sol.converged)
+        # re-stamp each context immediately before ITS emission so
+        # emit_pending bills the stream its own planning time plus a
+        # fair share of the shared solve — never the sequential wall
+        # time of the other streams' planning or emission
+        out = []
+        for loop, ctx, dur, plan in zip(self.loops, ctxs, ctx_durations,
+                                        sol.plans):
+            ctx.t0 = time.perf_counter() - dur - solve_share
+            out.append(loop.emit_pending(ctx, plan))
+        return out
+
     def step(self, frame_idx: int) -> None:
         """Process one frame for every stream (one scheduler tick)."""
-        # ---- emission: every loop plans and parks its requests ----
-        pendings = []
-        for s, (loop, backend) in enumerate(zip(self.loops, self.backends)):
+        # ---- emission: every loop plans and parks its requests (the
+        # pod-allocate path plans all streams jointly first) ----
+        frames = []
+        for s, backend in enumerate(self.backends):
             if hasattr(backend, "set_frame"):
                 backend.set_frame(frame_idx)
-            frame = (self.frame_source(s, frame_idx)
-                     if self.frame_source is not None else None)
-            pending = loop.begin_frame(frame)
+            frames.append(self.frame_source(s, frame_idx)
+                          if self.frame_source is not None else None)
+        if self.pod_allocate:
+            emitted = self._pod_plan(frames)
+        else:
+            emitted = [loop.begin_frame(frame)
+                       for loop, frame in zip(self.loops, frames)]
+        pendings = []
+        for loop, backend, pending in zip(self.loops, self.backends, emitted):
             pendings.append((loop, pending))
+            if pending.plan is not None:
+                self.stats.sum_plan_value += pending.plan.value
             for req in pending.requests:
                 self.queues.put(QueuedRequest(
                     request=req, owner=pending, backend=backend,

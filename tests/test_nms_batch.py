@@ -2,11 +2,15 @@
 
 Three independent implementations must produce bit-identical keep-masks:
 
-  * ``sph_nms``        — jit-compatible ``lax.fori_loop`` (the oracle),
+  * ``sph_nms_lax``    — jit-compatible ``lax.fori_loop`` (the oracle),
   * ``sph_nms_host``   — vectorised NumPy greedy (serving fast path),
   * ``sph_nms_batch``  — the padded (B, N) subsystem, exercised through
     BOTH backends: vectorised host and the batched Pallas SphIoU kernel
     + ``lax.while_loop`` (interpret mode on CPU).
+
+``sph_nms`` itself is now the B=1 entry point of ``sph_nms_batch``
+(the ROADMAP fold); ``TestSingleRowFold`` pins it against the kept-old
+``sph_nms_lax`` oracle on this suite's corpus.
 
 Sweeps cover antimeridian seam-wrap boxes, all-padded rows, single-box
 rows and empty inputs; property tests (shimmed when hypothesis is
@@ -67,14 +71,14 @@ class TestEquivalence:
             assert (keep[r, :n] == ref).all(), f"row {r}"
 
     def test_lax_oracle_agrees(self):
-        """The jit ``sph_nms`` oracle vs host/batched paths on a few
-        fixed shapes (each distinct N compiles the fori_loop once)."""
+        """The jit ``sph_nms_lax`` oracle vs host/batched paths on a
+        few fixed shapes (each distinct N compiles the fori_loop once)."""
         rng = np.random.default_rng(13)
         for n in (1, 2, 17, 24):
             for _ in range(4):
                 boxes = random_boxes(rng, n)
                 scores = rng.uniform(0.01, 1.0, n).astype(np.float32)
-                ref_lax = np.asarray(sphere.sph_nms(
+                ref_lax = np.asarray(sphere.sph_nms_lax(
                     jnp.asarray(boxes), jnp.asarray(scores), THR))
                 host = sphere.sph_nms_host(boxes, scores, THR)
                 batch = sphere.sph_nms_batch(
@@ -161,6 +165,54 @@ class TestEquivalence:
         kept_scores = scores[0][capped[0]]
         assert (kept_scores >= scores[0][full[0]].min() - 1e-9).all()
         assert (capped & ~full).sum() == 0
+
+
+class TestSingleRowFold:
+    """ROADMAP fold (PR 4 satellite): ``sph_nms`` is now expressed as
+    ``sph_nms_batch(boxes[None], ...)``; the ORIGINAL jit-compatible
+    implementation is kept as ``sph_nms_lax`` and these tests pin
+    keep-mask equality on the existing property-suite corpus."""
+
+    def test_fold_matches_old_oracle_on_corpus(self):
+        rng = np.random.default_rng(13)  # the lax-oracle corpus
+        for n in (1, 2, 17, 24, 40):
+            for _ in range(4):
+                boxes = random_boxes(rng, n)
+                scores = rng.uniform(0.01, 1.0, n).astype(np.float32)
+                old = np.asarray(sphere.sph_nms_lax(
+                    jnp.asarray(boxes), jnp.asarray(scores), THR))
+                new = sphere.sph_nms(boxes, scores, THR)
+                assert (new == old).all(), n
+
+    def test_fold_is_the_batch_single_row(self):
+        rng = np.random.default_rng(29)
+        boxes = random_boxes(rng, 20)
+        scores = rng.uniform(0.01, 1.0, 20).astype(np.float32)
+        keep = sphere.sph_nms(boxes, scores, THR)
+        batch = sphere.sph_nms_batch(boxes[None], scores[None], None, THR)[0]
+        assert (keep == batch).all()
+        assert keep.shape == (20,)
+
+    def test_fold_max_out_matches_old_oracle(self):
+        rng = np.random.default_rng(31)
+        boxes = random_boxes(rng, 30)
+        # distinct scores so max_out's score ranking is unambiguous
+        scores = (rng.permutation(30) + 1.0).astype(np.float32) / 30.0
+        for max_out in (1, 3, 8, None):
+            old = np.asarray(sphere.sph_nms_lax(
+                jnp.asarray(boxes), jnp.asarray(scores), THR,
+                max_out=max_out))
+            new = sphere.sph_nms(boxes, scores, THR, max_out=max_out)
+            assert (new == old).all(), max_out
+
+    def test_fold_seam_and_empty(self):
+        boxes = np.array([[math.pi - 0.02, 0.0, 0.4, 0.4],
+                          [-math.pi + 0.02, 0.0, 0.4, 0.4]], np.float32)
+        scores = np.array([0.9, 0.8], np.float32)
+        assert sphere.sph_nms(boxes, scores, THR).tolist() == [True, False]
+        empty = sphere.sph_nms(np.zeros((0, 4), np.float32),
+                               np.zeros((0,), np.float32))
+        assert empty.shape == (0,)
 
 
 class TestProperties:

@@ -1,0 +1,523 @@
+"""Pod-level allocation (PR 4): the fixed-point coupling of the
+per-stream knapsacks through batched costs and group utilisation.
+
+Pins the new subsystem end to end:
+
+  * the ``allocation.allocate`` cost hook is bit-identical when absent
+    (or the identity), and hook semantics match the brute-force oracle;
+  * the b=1 amortization pin: ``pod_amortization(v, 1) == 1.0`` exactly
+    and zero-co-stream prices are the exact identity, so legacy plans
+    stay byte-identical;
+  * the fixed-point solver terminates within the round cap, a
+    convergent run is a genuine fixed point (re-running a best-response
+    sweep changes nothing), and the capacity envelope bounds the
+    projected tick by the uncoupled projection;
+  * degenerate pods (V=1 or S=1) reproduce per-stream ``allocate``
+    exactly;
+  * coupled prices are monotone: wider replica groups and lower
+    utilisation never make any variant dearer, so adding idle capacity
+    never worsens a chosen plan's latency;
+  * tiny-pod joint brute force never loses to the fixed point
+    (Pareto sanity) and the fixed point is jointly feasible;
+  * ``PodServer(pod_allocate=True)`` dominates the uncoupled pod on
+    the accuracy proxy at equal-or-lower tick latency (the bench
+    acceptance invariant at test scale), and keeps the jit trace
+    counts inside the ``ShapeBuckets`` ladder (the coupling is
+    host-side only).
+"""
+
+import dataclasses
+import types
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import allocation
+from repro.core.omnisense import OmniSenseLoop
+from repro.data.synthetic import make_video
+from repro.serving import pod_allocation as pa
+from repro.serving import profiles
+from repro.serving.batching import ShapeBuckets
+from repro.serving.network import NetworkModel
+from repro.serving.placement import VariantPlacement
+from repro.serving.scheduler import OmniSenseLatencyModel, OracleBackend
+from repro.serving.server import PodServer
+
+
+def _lat():
+    return OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+
+
+def _variants(v=3):
+    return profiles.make_ladder(seed=0)[:v]
+
+
+def rand_problem(rng, n_variants, r, budget=None):
+    """Random (1 + V, R) allocator instance (row 0 = zero-cost skip)."""
+    acc = rng.uniform(0, 1, (1 + n_variants, r))
+    acc[0] = 0.0
+    d_pre = rng.uniform(0.01, 0.2, (1 + n_variants, r))
+    d_pre[0] = 0.0
+    d_inf = rng.uniform(0.02, 0.6, (1 + n_variants, r))
+    d_inf[0] = 0.0
+    budget = budget if budget is not None else float(rng.uniform(0.2, 2.5))
+    return pa.StreamProblem(acc, d_pre, d_inf, budget)
+
+
+def _stub_placement(spec):
+    """Placement stand-in: ``spec`` maps variant name -> (gidx, n_dev)."""
+    groups = {name: types.SimpleNamespace(index=g, n_devices=n)
+              for name, (g, n) in spec.items()}
+    return types.SimpleNamespace(group_for=lambda name: groups[name])
+
+
+def _plans_equal(a, b):
+    if (a is None) != (b is None):
+        return False
+    return a is None or (a.models == b.models and a.value == b.value)
+
+
+class TestCostHook:
+    def _check_identity(self, seed):
+        rng = np.random.default_rng(seed)
+        p = rand_problem(rng, 3, 4)
+        plain = allocation.allocate(p.acc, p.d_pre, p.d_inf, p.budget)
+        hooked = allocation.allocate(
+            p.acc, p.d_pre, p.d_inf, p.budget,
+            cost_hook=lambda i, j, dp, di: (dp, di))
+        assert plain.models == hooked.models
+        assert plain.value == hooked.value
+        assert plain.t_pre == hooked.t_pre
+        assert plain.t_done == hooked.t_done
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_identity_hook_bit_identical_property(self, seed):
+        self._check_identity(seed)
+
+    def test_identity_hook_bit_identical_fixed(self):
+        for seed in (0, 1, 2, 3, 4):
+            self._check_identity(seed)
+
+    def _check_hook_vs_bruteforce(self, seed):
+        """A non-trivial hook must keep allocate exact vs brute force."""
+        rng = np.random.default_rng(seed)
+        p = rand_problem(rng, 2, 3)
+
+        def hook(i, j, dp, di):
+            return dp, di * (0.5 + 0.25 * i) + 0.01 * j
+
+        got = allocation.allocate(p.acc, p.d_pre, p.d_inf, p.budget,
+                                  cost_hook=hook)
+        want = allocation.allocate_bruteforce(p.acc, p.d_pre, p.d_inf,
+                                              p.budget, cost_hook=hook)
+        assert (got is None) == (want is None)
+        if got is not None:
+            assert np.isclose(got.value, want.value, atol=1e-9)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_hooked_allocate_matches_bruteforce_property(self, seed):
+        self._check_hook_vs_bruteforce(seed)
+
+    def test_hooked_allocate_matches_bruteforce_fixed(self):
+        for seed in (10, 11, 12, 13):
+            self._check_hook_vs_bruteforce(seed)
+
+    def test_b1_amortization_pin(self):
+        """``batched_inference_delay(v, 1) == _inf(v)`` and
+        ``pod_amortization(v, 1) == 1.0`` EXACTLY — the pin that keeps
+        legacy (uncoupled) plans byte-identical."""
+        lat = _lat()
+        buckets = ShapeBuckets()
+        for v in _variants(5):
+            assert lat.batched_inference_delay(v, 1) == lat._inf(v)
+            assert lat.pod_amortization(v, 1, buckets) == 1.0
+            assert lat.variant_queue_cost(v, 0, buckets) == 0.0
+
+    def test_zero_co_stream_prices_are_exact_identity(self):
+        """With no co-streams and no utilisation, every coupled price
+        is the exact (1.0, 0.0, 1.0) identity and the hooked matrices
+        are bit-identical to the base matrices."""
+        lat = _lat()
+        variants = _variants(3)
+        buckets = ShapeBuckets()
+        prices = pa.stream_prices(variants, {v.name: 0 for v in variants},
+                                  lat, buckets)
+        for v in variants:
+            assert prices[v.name] == pa.VariantPrice(1.0, 0.0, 1.0)
+        rng = np.random.default_rng(0)
+        p = rand_problem(rng, 3, 4)
+        d_pre_c, d_inf_c = allocation.apply_cost_hook(
+            pa.price_hook(prices, variants), p.d_pre, p.d_inf)
+        assert (d_pre_c == p.d_pre).all()
+        assert (d_inf_c == p.d_inf).all()
+
+
+class TestFixedPoint:
+    def _rand_pod(self, rng, s=None, v=None, r=None):
+        s = s or int(rng.integers(2, 5))
+        v = v or int(rng.integers(2, 4))
+        r = r or int(rng.integers(1, 4))
+        variants = _variants(v)
+        problems = [rand_problem(rng, v, int(rng.integers(1, r + 1)))
+                    for _ in range(s)]
+        return problems, variants
+
+    def _check_termination_and_fixed_point(self, seed):
+        rng = np.random.default_rng(seed)
+        problems, variants = self._rand_pod(rng)
+        lat = _lat()
+        buckets = ShapeBuckets()
+        sol = pa.solve_pod(problems, variants, lat, buckets=buckets)
+        assert 1 <= sol.rounds <= pa.DEFAULT_MAX_ROUNDS
+        assert sol.coupled
+        # the envelope bounds the projection
+        assert sol.projected_tick <= sol.tick_cap + 1e-9
+        # counts describe the returned plans
+        assert sol.counts == pa._total_counts(sol.plans, variants)
+        if sol.converged:
+            # a convergent run is a GENUINE fixed point: one more
+            # best-response sweep changes nothing
+            replans, changed = pa.best_response(
+                problems, sol.plans, variants, lat, buckets,
+                tick_cap=sol.tick_cap)
+            assert not changed
+            for a, b in zip(sol.plans, replans):
+                assert _plans_equal(a, b)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_termination_and_fixed_point_property(self, seed):
+        self._check_termination_and_fixed_point(seed)
+
+    def test_termination_and_fixed_point_fixed(self):
+        for seed in (0, 1, 2, 3, 7, 21):
+            self._check_termination_and_fixed_point(seed)
+
+    def _check_value_never_below_uncoupled(self, seed):
+        """Hysteresis + incumbents: with per-variant replica groups
+        (coupled prices never above base — the bench topology) the
+        coupled total value can never fall below the uncoupled round-0
+        total.  (On a SHARED group the queue-wait term may price an
+        overcommitted incumbent out of its budget and legitimately shed
+        work, so the guarantee is scoped to split groups.)"""
+        rng = np.random.default_rng(seed)
+        problems, variants = self._rand_pod(rng, v=2)
+        a, b = (v.name for v in variants)
+        placement = _stub_placement({a: (0, 1), b: (1, 1)})
+        lat = _lat()
+        sol = pa.solve_pod(problems, variants, lat, placement=placement)
+        base = [allocation.allocate(p.acc, p.d_pre, p.d_inf, p.budget)
+                for p in problems]
+        tot = sum(p.value for p in sol.plans if p is not None)
+        tot_base = sum(p.value for p in base if p is not None)
+        assert tot >= tot_base - 1e-9
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_value_never_below_uncoupled_property(self, seed):
+        self._check_value_never_below_uncoupled(seed)
+
+    def test_value_never_below_uncoupled_fixed(self):
+        for seed in (5, 6, 8, 13):
+            self._check_value_never_below_uncoupled(seed)
+
+    def test_single_variant_equals_per_stream_allocate(self):
+        """V=1: no cross-variant choice to couple — plans are the
+        per-stream ``allocate`` results, bit-identical."""
+        rng = np.random.default_rng(3)
+        variants = _variants(1)
+        problems = [rand_problem(rng, 1, 3) for _ in range(4)]
+        sol = pa.solve_pod(problems, variants, _lat())
+        assert not sol.coupled and sol.rounds == 0 and sol.converged
+        for p, plan in zip(problems, sol.plans):
+            want = allocation.allocate(p.acc, p.d_pre, p.d_inf, p.budget)
+            assert plan.models == want.models
+            assert plan.value == want.value
+            assert plan.t_pre == want.t_pre
+            assert plan.t_done == want.t_done
+
+    def test_single_stream_equals_per_stream_allocate(self):
+        """S=1: no co-streams — the short-circuit returns the
+        uncoupled plan bit-identical, AND the pricing path agrees
+        naturally (a lone best-response sweep changes nothing because
+        zero-co prices are the exact identity)."""
+        rng = np.random.default_rng(4)
+        variants = _variants(3)
+        problems = [rand_problem(rng, 3, 4)]
+        lat = _lat()
+        sol = pa.solve_pod(problems, variants, lat)
+        want = allocation.allocate(problems[0].acc, problems[0].d_pre,
+                                   problems[0].d_inf, problems[0].budget)
+        assert not sol.coupled
+        assert sol.plans[0].models == want.models
+        assert sol.plans[0].value == want.value
+        assert sol.plans[0].t_done == want.t_done
+        # natural identity, no short-circuit involved
+        replans, changed = pa.best_response(
+            problems, [want], variants, lat, ShapeBuckets())
+        assert not changed and replans[0].models == want.models
+        assert replans[0].t_done == pytest.approx(want.t_done)
+
+    def test_damping_caps_switches_per_sweep(self):
+        """damping < 1 bounds how many streams may switch per round;
+        the solver still terminates and ends on a no-switch sweep when
+        it reports convergence."""
+        rng = np.random.default_rng(11)
+        problems, variants = self._rand_pod(rng, s=4, v=3, r=2)
+        lat = _lat()
+        sol = pa.solve_pod(problems, variants, lat, damping=0.25,
+                           max_rounds=12)
+        assert 1 <= sol.rounds <= 12
+        if sol.converged:
+            _, changed = pa.best_response(
+                problems, sol.plans, variants, lat, ShapeBuckets(),
+                tick_cap=sol.tick_cap, max_switches=1)
+            assert not changed
+
+
+class TestMonotonicity:
+    def _prices(self, spec, co, util=None):
+        variants = _variants(2)
+        return pa.stream_prices(
+            variants, co, _lat(), ShapeBuckets(),
+            placement=_stub_placement(spec), group_utilisation=util)
+
+    def test_wider_group_never_dearer(self):
+        """Adding devices to a variant's replica group (an idle group
+        absorbing it, a widened group) never raises any coupled
+        price."""
+        variants = _variants(2)
+        a, b = (v.name for v in variants)
+        co = {a: 5, b: 3}
+        d_inf = np.array([0.3, 0.7])
+        for n1, n2 in ((1, 2), (2, 4), (1, 8), (3, 4)):
+            narrow = self._prices({a: (0, n1), b: (1, 1)}, co)
+            wide = self._prices({a: (0, n2), b: (1, 1)}, co)
+            for name, base in zip((a, b), d_inf):
+                assert wide[name].apply(base) <= \
+                    narrow[name].apply(base) + 1e-12, (n1, n2, name)
+
+    def test_separate_group_never_dearer_than_shared(self):
+        """Splitting a shared group (an idle group takes one variant)
+        removes the co-variant queue wait for both sides."""
+        variants = _variants(2)
+        a, b = (v.name for v in variants)
+        co = {a: 4, b: 4}
+        shared = self._prices({a: (0, 1), b: (0, 1)}, co)
+        split = self._prices({a: (0, 1), b: (1, 1)}, co)
+        for name, base in ((a, 0.3), (b, 0.7)):
+            assert split[name].apply(base) <= shared[name].apply(base) + 1e-12
+        # the shared group genuinely paid a queue wait
+        assert shared[a].extra > 0 and split[a].extra == 0.0
+
+    def test_lower_utilisation_never_dearer(self):
+        variants = _variants(2)
+        a, b = (v.name for v in variants)
+        co = {a: 3, b: 2}
+        spec = {a: (0, 2), b: (1, 1)}
+        busy = self._prices(spec, co, util={0: 1.0, 1: 0.8})
+        idle = self._prices(spec, co, util={0: 0.2, 1: 0.0})
+        for name, base in ((a, 0.3), (b, 0.7)):
+            assert idle[name].apply(base) <= busy[name].apply(base) + 1e-12
+
+    def test_added_devices_never_worsen_chosen_latency(self):
+        """Solver-level: re-pricing a solution's plans with extra idle
+        devices (same variant->group mapping) never increases any
+        stream's plan latency."""
+        rng = np.random.default_rng(9)
+        variants = _variants(2)
+        a, b = (v.name for v in variants)
+        problems = [rand_problem(rng, 2, 2) for _ in range(3)]
+        lat = _lat()
+        buckets = ShapeBuckets()
+        narrow = _stub_placement({a: (0, 1), b: (1, 1)})
+        wide = _stub_placement({a: (0, 4), b: (1, 2)})
+        sol = pa.solve_pod(problems, variants, lat, buckets=buckets,
+                           placement=narrow)
+        counts = pa._total_counts(sol.plans, variants)
+        for s, (prob, plan) in enumerate(zip(problems, sol.plans)):
+            if plan is None:
+                continue
+            own = pa._plan_counts(plan, variants)
+            co = {n: counts[n] - own[n] for n in own}
+            lats = {}
+            for tag, placement in (("narrow", narrow), ("wide", wide)):
+                prices = pa.stream_prices(variants, co, lat, buckets,
+                                          placement=placement)
+                dp, di = allocation.apply_cost_hook(
+                    pa.price_hook(prices, variants), prob.d_pre, prob.d_inf)
+                lats[tag] = allocation.plan_latency(plan.models, dp, di)
+            assert lats["wide"] <= lats["narrow"] + 1e-12, s
+
+
+class TestJointOracle:
+    """Brute-force joint allocation on tiny pods: the fixed point is
+    jointly feasible and never beats the joint optimum."""
+
+    def _tiny_pod(self, rng):
+        s = int(rng.integers(2, 4))
+        variants = _variants(2)
+        a, b = (v.name for v in variants)
+        problems = [rand_problem(rng, 2, int(rng.integers(1, 3)))
+                    for _ in range(s)]
+        # each variant its own single-device group: coupled prices are
+        # then never above base, so incumbents stay feasible and the
+        # fixed point lives inside the oracle's feasible set
+        placement = _stub_placement({a: (0, 1), b: (1, 1)})
+        return problems, variants, placement
+
+    def _check_oracle(self, seed):
+        rng = np.random.default_rng(seed)
+        problems, variants, placement = self._tiny_pod(rng)
+        lat = _lat()
+        buckets = ShapeBuckets()
+        sol = pa.solve_pod(problems, variants, lat, buckets=buckets,
+                           placement=placement)
+        counts = pa._total_counts(sol.plans, variants)
+        # joint feasibility of the fixed point under its own prices
+        for s, (prob, plan) in enumerate(zip(problems, sol.plans)):
+            if plan is None:
+                continue
+            own = pa._plan_counts(plan, variants)
+            co = {n: counts[n] - own[n] for n in own}
+            prices = pa.stream_prices(variants, co, lat, buckets,
+                                      placement=placement)
+            dp, di = allocation.apply_cost_hook(
+                pa.price_hook(prices, variants), prob.d_pre, prob.d_inf)
+            assert allocation.plan_latency(plan.models, dp, di) \
+                <= prob.budget + 1e-9, s
+        # ...and the joint optimum never loses to it
+        _, best = pa.solve_pod_bruteforce(
+            problems, variants, lat, buckets=buckets, placement=placement,
+            tick_cap=sol.tick_cap)
+        tot = sum(p.value for p in sol.plans if p is not None)
+        assert best >= tot - 1e-9
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_fixed_point_never_beats_bruteforce_property(self, seed):
+        self._check_oracle(seed)
+
+    def test_fixed_point_never_beats_bruteforce_fixed(self):
+        for seed in (0, 1, 2, 5):
+            self._check_oracle(seed)
+
+
+def _oracle_pod(n_streams, pod_allocate, frames=8, seed0=100, budget=1.8):
+    """The bench acceptance pod at test scale: 2 variants (p5-896 /
+    p6-1280), 8 virtual device slots, shared latency model."""
+    variants = profiles.make_ladder()[3:5]
+    lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+    costs = [lat._pre(v) + lat._inf(v) for v in variants]
+    loops, backends = [], []
+    for s in range(n_streams):
+        video = make_video(n_frames=frames + 8, n_objects=30 + 5 * (s % 4),
+                           seed=seed0 + s)
+        backend = OracleBackend(video)
+        backends.append(backend)
+        loops.append(OmniSenseLoop(variants, lat, backend, budget_s=budget,
+                                   explore_costs=costs))
+    placement = VariantPlacement.virtual(variants, 8, cost_fn=lat._inf)
+    return PodServer(loops, backends, max_batch=8, placement=placement,
+                     pod_allocate=pod_allocate)
+
+
+class TestPodServerCoupling:
+    def test_pod_allocate_defaults_off(self):
+        server = _oracle_pod(2, False)
+        assert server.pod_allocate is False
+
+    def test_mixed_ladders_rejected(self):
+        variants = profiles.make_ladder()
+        lat = _lat()
+        loops = []
+        for vs in (variants[:2], variants[1:3]):
+            video = make_video(n_frames=8, n_objects=20, seed=1)
+            loops.append(OmniSenseLoop(vs, lat, OracleBackend(video),
+                                       budget_s=1.8))
+        backends = [loop.backend for loop in loops]
+        with pytest.raises(ValueError):
+            PodServer(loops, backends, pod_allocate=True)
+        PodServer(loops, backends)  # uncoupled pods may mix ladders
+
+    def test_coupled_pod_serves_and_converges(self):
+        server = _oracle_pod(4, True, frames=6)
+        stats = server.run(range(6))
+        assert stats.frames == 24
+        assert stats.pod_ticks == 6
+        assert stats.pod_rounds >= stats.pod_ticks  # >= 1 round/tick
+        assert stats.pod_converged_ticks == stats.pod_ticks
+        assert stats.total_detections > 0
+        # coupled plans still respect every stream's budget estimate
+        for loop in server.loops:
+            assert loop.budget_s == 1.8
+
+    def test_uncoupled_pod_reports_no_rounds(self):
+        server = _oracle_pod(2, False, frames=4)
+        stats = server.run(range(4))
+        assert stats.pod_ticks == 0 and stats.pod_rounds == 0
+        assert stats.sum_plan_value > 0  # the proxy accrues regardless
+
+    def test_coupled_dominates_uncoupled(self):
+        """The acceptance invariant at test scale: at 8 streams / 2
+        variants the coupled pod is strictly better on the accuracy
+        proxy at equal-or-lower mean tick inference latency."""
+        base = _oracle_pod(8, False).run(range(8))
+        coup = _oracle_pod(8, True).run(range(8))
+        assert coup.accuracy_proxy > base.accuracy_proxy
+        assert (coup.sum_tick_inf_s / coup.ticks
+                <= base.sum_tick_inf_s / base.ticks + 1e-9)
+
+
+class TestTraceRegression:
+    """``pod_allocate=True`` must stay host-side: no new compiled
+    shapes beyond the existing ``ShapeBuckets`` ladder for either the
+    batched detector forward or the device NMS path."""
+
+    def test_jit_traces_bounded_under_pod_allocate(self):
+        import jax
+
+        from repro.core import sroi as sroi_mod
+        from repro.core.sphere import nms_device_trace_count
+        from repro.models import detector as det_mod
+        from repro.serving.scheduler import JaxDetectorBackend
+
+        rng = np.random.default_rng(5)
+        n_streams, n_frames = 2, 2
+        cfgs = [dataclasses.replace(det_mod.PAPER_LADDER[i], input_size=64,
+                                    n_classes=8) for i in range(2)]
+        params = [det_mod.init_params(jax.random.PRNGKey(i), c)
+                  for i, c in enumerate(cfgs)]
+        variants = profiles.make_ladder(n_categories=8, seed=0)[:2]
+        backend = JaxDetectorBackend(
+            cfgs, params, conf=0.01, use_kernel=False, max_det=4,
+            buckets=ShapeBuckets((1, 2, 4), resolutions=(64,)))
+        lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+        frames = {(s, f): rng.random((64, 128, 3)).astype(np.float32)
+                  for s in range(n_streams) for f in range(n_frames)}
+        loops = []
+        for s in range(n_streams):
+            loop = OmniSenseLoop(variants, lat, backend, budget_s=4.0,
+                                 n_categories=8, explore_every=0)
+            loop.seed_history([sroi_mod.Detection(
+                box=np.array([rng.uniform(-2, 2), rng.uniform(-0.8, 0.8),
+                              0.5, 0.5]), category=int(rng.integers(8)),
+                score=0.9) for _ in range(2)])
+            loops.append(loop)
+        server = PodServer(loops, [backend] * n_streams, max_batch=4,
+                           buckets=ShapeBuckets((1, 2, 4)),
+                           frame_source=lambda s, f: frames[(s, f)],
+                           pod_allocate=True)
+        nms_traces = nms_device_trace_count()
+        server.run(range(n_frames))
+        n_buckets = len(backend.buckets.batch_sizes)
+        assert backend.trace_count <= n_buckets * len(cfgs)
+        for key in backend._jit_cache:
+            assert key[1] in backend.buckets.batch_sizes
+        # the tick NMS stays on the host path here: coupling must not
+        # have pushed anything through the jitted device NMS
+        assert nms_device_trace_count() == nms_traces

@@ -74,7 +74,7 @@ class TestIoU:
 
 
 class TestNMS:
-    def test_host_and_lax_agree(self):
+    def test_host_lax_and_folded_agree(self):
         rng = np.random.default_rng(0)
         boxes = np.stack([
             rng.uniform(-math.pi, math.pi, 40),
@@ -83,8 +83,11 @@ class TestNMS:
             rng.uniform(0.1, 0.8, 40)], axis=-1).astype(np.float32)
         scores = rng.uniform(0, 1, 40).astype(np.float32)
         k1 = sphere.sph_nms_host(boxes, scores)
-        k2 = np.asarray(sphere.sph_nms(jnp.asarray(boxes), jnp.asarray(scores)))
+        k2 = np.asarray(sphere.sph_nms_lax(jnp.asarray(boxes),
+                                           jnp.asarray(scores)))
+        k3 = sphere.sph_nms(boxes, scores)  # B=1 fold of sph_nms_batch
         assert (k1 == k2).all()
+        assert (k1 == k3).all()
 
     def test_suppresses_duplicates(self):
         b = np.array([[0, 0, 0.5, 0.5], [0.01, 0.0, 0.5, 0.5]], np.float32)
