@@ -18,6 +18,12 @@ stay strictly better on the accuracy proxy at equal-or-lower tick
 latency (the pod-allocation acceptance invariant; deterministic, so it
 is gated exactly rather than within a noise band).
 
+When the snapshots carry a ``policy_grid`` section (PR 5,
+``serving_bench.py --policy``), the drain-policy dominance floor is
+gated too: at >= ``--pod-min-streams`` streams the async-drain policy's
+mean event-clock tick must STRICTLY undercut the sync barrier's
+(deterministic oracle pod, gated exactly).
+
     python benchmarks/check_regression.py \
         --baseline BENCH_SERVE.json --fresh fresh_serve.json
 
@@ -92,6 +98,39 @@ def pod_dominates(fresh: dict, min_streams: int = 8, log=print) -> bool:
     return ok
 
 
+def policy_async_dominates(fresh: dict, min_streams: int = 8,
+                           log=print) -> bool:
+    """The drain-policy acceptance floor (strict, not a noise band).
+
+    Every fresh ``policy_grid`` entry at >= ``min_streams`` streams
+    must show async drain strictly undercutting the sync barrier on
+    mean tick inference latency (``serving_bench.py --policy``): the
+    carried residual chunks merge into fuller batches, so at pod scale
+    the event-clock tick must be cheaper, not just equal.  The grid is
+    computed by a deterministic oracle pod on the calibrated latency
+    model — no wall clock — so exact gating does not flap.
+    """
+    entries = [e for e in fresh.get("policy_grid", [])
+               if e.get("streams", 0) >= min_streams]
+    if not entries:
+        log(f"check_regression: no policy_grid entries at "
+            f">= {min_streams} streams")
+        return False
+    ok = True
+    for e in entries:
+        a, s = e["async"]["mean_tick_s"], e["sync"]["mean_tick_s"]
+        dominates = a < s
+        log(f"  policy streams={e['streams']:>3}  sync tick={s:.4f}  "
+            f"async tick={a:.4f}  ratio={e['async_tick_ratio']:.4f}"
+            f"{'' if dominates else '  <-- FAILS dominance'}")
+        if not dominates:
+            log(f"::error::async drain no longer undercuts the sync "
+                f"barrier at {e['streams']} streams: async={a:.4f} "
+                f"sync={s:.4f}")
+            ok = False
+    return ok
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", default="BENCH_SERVE.json",
@@ -127,6 +166,15 @@ def main(argv=None) -> int:
                          key="accuracy_ratio", section="pod_grid") and ok
         # the dominance invariant is exact (deterministic bench)
         ok = pod_dominates(fresh, args.pod_min_streams) and ok
+    if baseline.get("policy_grid") and not fresh.get("policy_grid"):
+        # armed policy gate, missing fresh grid: the --policy bench
+        # step did not run (or its merge failed) — fail loudly
+        print("::error::baseline has policy_grid but fresh snapshot "
+              "does not; did the --policy bench step run?")
+        ok = False
+    elif fresh.get("policy_grid"):
+        # async drain must strictly undercut the sync barrier
+        ok = policy_async_dominates(fresh, args.pod_min_streams) and ok
     return 0 if ok else 1
 
 

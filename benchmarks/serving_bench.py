@@ -69,6 +69,11 @@ POD_FRAMES = 12
 POD_DEVICES = 8
 POD_BUDGET_S = 1.8
 
+POLICY_GRID = (2, 4, 8, 16)     # streams for the drain-policy frontier
+POLICY_FRAMES = 12
+POLICY_DEVICES = 1              # one shared group: ordering + carry both bite
+POLICIES = ("sync", "deadline", "async")
+
 
 def _make_backend(n_variants: int = 2):
     import jax
@@ -258,18 +263,37 @@ def _pod_variants():
     return profiles.make_ladder()[3:5]
 
 
+def _policy_variants():
+    """The drain-policy pod's ladder: yolo-tiny-416 vs yolo-p6-1280 —
+    maximally spread in cost (0.002s on-device vs 1.12s edge), both
+    heavily allocated under moderate budgets, AND the cheap one sorts
+    LAST by name, so the sync policy's arbitrary sorted-variant drain
+    order is pessimal and ordering/carry-over effects are visible."""
+    from repro.serving import profiles
+
+    ladder = profiles.make_ladder()
+    return [ladder[0], ladder[4]]
+
+
 def _pod_serve(n_streams: int, pod_allocate: bool, frames: int,
-               devices: int):
-    """One oracle pod run (coupled or uncoupled), deterministic."""
+               devices: int, policy: str = "sync", variants=None,
+               budget_fn=None):
+    """One oracle pod run, deterministic (no wall clock in any metric).
+
+    ``policy`` names a ``repro.serving.runtime`` drain policy;
+    ``budget_fn(stream_idx)`` optionally spreads per-stream latency
+    budgets (the deadline policy's ordering signal).
+    """
     from repro.core.omnisense import OmniSenseLoop
     from repro.data.synthetic import make_video
     from repro.serving.network import NetworkModel
     from repro.serving.placement import VariantPlacement
+    from repro.serving.runtime import make_policy
     from repro.serving.scheduler import OmniSenseLatencyModel, OracleBackend
     from repro.serving.server import PodServer
     from repro.serving import profiles
 
-    variants = _pod_variants()
+    variants = variants or _pod_variants()
     lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
     costs = [lat._pre(v) + lat._inf(v) for v in variants]
     loops, backends = [], []
@@ -278,12 +302,13 @@ def _pod_serve(n_streams: int, pod_allocate: bool, frames: int,
                            seed=100 + s)
         backend = OracleBackend(video)
         backends.append(backend)
+        budget = budget_fn(s) if budget_fn is not None else POD_BUDGET_S
         loops.append(OmniSenseLoop(variants, lat, backend,
-                                   budget_s=POD_BUDGET_S,
+                                   budget_s=budget,
                                    explore_costs=costs))
     placement = VariantPlacement.virtual(variants, devices, cost_fn=lat._inf)
     server = PodServer(loops, backends, max_batch=8, placement=placement,
-                       pod_allocate=pod_allocate)
+                       policy=make_policy(policy, pod_allocate=pod_allocate))
     return server.run(range(frames))
 
 
@@ -337,6 +362,78 @@ def run_pod_allocation(csv=print, grid=POD_GRID, json_path=SERVE_JSON_PATH,
     return out
 
 
+def _policy_metrics(stats) -> dict:
+    pct = stats.event_e2e_percentiles()
+    e2e = stats.event_e2e or [0.0]
+    return dict(
+        mean_tick_s=round(stats.mean_tick, 4),
+        mean_e2e_s=round(float(np.mean(e2e)), 4),
+        p50_e2e_s=round(pct[50], 4),
+        p95_e2e_s=round(pct[95], 4),
+        p99_e2e_s=round(pct[99], 4),
+        dispatches=stats.dispatches,
+        carried_requests=stats.carried_requests,
+    )
+
+
+def run_policy_grid(csv=print, grid=POLICY_GRID, json_path=SERVE_JSON_PATH,
+                    frames: int = POLICY_FRAMES,
+                    devices: int = POLICY_DEVICES) -> dict:
+    """The drain-policy frontier (``--policy``): the same oracle pod
+    served under every ``repro.serving.runtime`` policy.
+
+    Per stream count and policy, records the event-clock mean tick and
+    the per-frame E2E distribution (p50/p95/p99 of each frame's last
+    dispatch completion minus its emission time).  Streams carry a
+    spread of latency budgets (the deadline policy's ordering signal)
+    and the ladder pairs the cheapest variant with the most expensive
+    (``_policy_variants``).  Fully deterministic — oracle backend,
+    virtual device slots, calibrated latency model, no wall clock — so
+    ``check_regression.py`` gates the async-vs-sync mean-tick ratio
+    exactly: at >= 8 streams async drain must strictly undercut the
+    sync barrier.  Merges a ``policy_grid`` section into ``json_path``
+    without touching ``grid``/``pod_grid``.
+    """
+    variants = _policy_variants()
+
+    def budget_fn(s):  # deterministic per-stream deadline spread
+        return 1.2 + 0.4 * (s % 3)
+
+    entries = []
+    for n_streams in grid:
+        entry = dict(streams=n_streams, frames=frames)
+        for policy in POLICIES:
+            stats = _pod_serve(n_streams, False, frames, devices,
+                               policy=policy, variants=variants,
+                               budget_fn=budget_fn)
+            entry[policy] = _policy_metrics(stats)
+        entry["async_tick_ratio"] = round(
+            entry["async"]["mean_tick_s"]
+            / max(entry["sync"]["mean_tick_s"], 1e-9), 4)
+        entries.append(entry)
+        csv(f"serving,policy_s{n_streams},async_tick_ratio,"
+            f"{entry['async_tick_ratio']},"
+            f"sync_tick={entry['sync']['mean_tick_s']} "
+            f"async_tick={entry['async']['mean_tick_s']} "
+            f"deadline_p95={entry['deadline']['p95_e2e_s']} "
+            f"sync_p95={entry['sync']['p95_e2e_s']}")
+    out = {}
+    if json_path and os.path.exists(json_path):
+        with open(json_path) as f:
+            out = json.load(f)
+    out["policy_bench"] = {
+        "variants": [v.name for v in variants],
+        "devices": devices, "frames": frames,
+        "budgets_s": sorted({budget_fn(s) for s in range(max(grid))}),
+        "policies": list(POLICIES)}
+    out["policy_grid"] = entries
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        csv(f"serving,policy_json,path,0,{json_path}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--devices", type=int, default=0,
@@ -350,8 +447,21 @@ def main() -> None:
                          "wall-clock dispatch grid; merges a pod_grid "
                          "section into the JSON (virtual device slots — no "
                          "jax devices needed)")
+    ap.add_argument("--policy", choices=POLICIES, default=None,
+                    help="measure the drain-policy frontier instead: the "
+                         "oracle pod under EVERY runtime policy (the named "
+                         "one is just the headline), recording per-policy "
+                         "mean tick + E2E percentiles into a policy_grid "
+                         "section (virtual device slots — no jax devices "
+                         "needed)")
     ap.add_argument("--json", default=SERVE_JSON_PATH)
     args = ap.parse_args()
+    if args.policy:
+        # the grid always measures all policies — a lone async number
+        # could not show dominance over sync
+        run_policy_grid(json_path=args.json,
+                        devices=args.devices or POLICY_DEVICES)
+        return
     if args.pod_allocate:
         # 0 is the "not given" sentinel, so an explicit --devices 1
         # really does measure the single-group pod frontier

@@ -10,9 +10,13 @@ run concurrently — the tick pays the max over groups, not the sum.
 Since PR 4 the per-stream knapsacks are also COUPLED: the pod-level
 allocator (``repro.serving.pod_allocation``) re-prices each stream's
 variant costs against the co-streams' batched demand and the replica
-groups' utilisation, iterating to a fixed point each tick.
+groups' utilisation, iterating to a fixed point each tick.  Since PR 5
+the tick itself is scheduled by a pluggable drain policy on the
+event-clock runtime (``repro.serving.runtime``):
 
-    PYTHONPATH=src python examples/serve_pod.py
+    PYTHONPATH=src python examples/serve_pod.py --policy sync      # barrier
+    PYTHONPATH=src python examples/serve_pod.py --policy deadline  # EDF order
+    PYTHONPATH=src python examples/serve_pod.py --policy async     # carry-over
 
 The oracle pod prices the device-aware tick model on virtual device
 slots, so this runs anywhere without touching an accelerator.  The
@@ -26,6 +30,8 @@ benchmark do:
         PYTHONPATH=src python -m pytest -q -m multidevice
 """
 
+import argparse
+
 import numpy as np
 
 from repro.core.omnisense import OmniSenseLoop
@@ -33,36 +39,49 @@ from repro.data.synthetic import make_video
 from repro.serving import profiles
 from repro.serving.network import NetworkModel
 from repro.serving.placement import VariantPlacement
+from repro.serving.runtime import make_policy
 from repro.serving.scheduler import OmniSenseLatencyModel, OracleBackend
 from repro.serving.server import (PodServer, format_group_report,
                                   format_pod_allocation_report)
 
 
 def main():
-    n_streams = 8
-    n_devices = 16
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--streams", type=int, default=8)
+    ap.add_argument("--frames", type=int, default=16)
+    ap.add_argument("--devices", type=int, default=16)
+    ap.add_argument("--policy", choices=("sync", "deadline", "async"),
+                    default="sync",
+                    help="drain policy of the event-clock serving runtime")
+    args = ap.parse_args()
+
     variants = profiles.make_ladder()
     lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
     costs = [lat._pre(v) + lat._inf(v) for v in variants]
 
     loops, backends = [], []
-    for s in range(n_streams):
-        video = make_video(n_frames=24, n_objects=30 + 5 * s, seed=100 + s)
+    for s in range(args.streams):
+        video = make_video(n_frames=args.frames + 8, n_objects=30 + 5 * s,
+                           seed=100 + s)
         backend = OracleBackend(video)
         backends.append(backend)
         loops.append(OmniSenseLoop(variants, lat, backend, budget_s=1.8,
                                    explore_costs=costs))
 
-    placement = VariantPlacement.virtual(variants, n_devices, cost_fn=lat._inf)
-    # pod_allocate: the per-stream knapsacks are coupled each tick by
-    # the fixed-point pod-level allocator (amortized batched costs +
-    # per-group queue depth/utilisation), so streams prefer variants
-    # whose replica groups are idle instead of planning solo
+    placement = VariantPlacement.virtual(variants, args.devices,
+                                         cost_fn=lat._inf)
+    # pod_allocate on the policy: the per-stream knapsacks are coupled
+    # each tick by the fixed-point pod-level allocator (amortized
+    # batched costs + per-group queue depth/utilisation), so streams
+    # prefer variants whose replica groups are idle instead of
+    # planning solo
+    policy = make_policy(args.policy, pod_allocate=True)
     server = PodServer(loops, backends, max_batch=8, placement=placement,
-                       pod_allocate=True)
-    stats = server.run(range(16))
+                       policy=policy)
+    stats = server.run(range(args.frames))
 
-    print(f"streams: {n_streams}, frames/stream: 16")
+    print(f"streams: {args.streams}, frames/stream: {args.frames}, "
+          f"policy: {stats.policy}")
     print(f"total frames served: {stats.frames}")
     print(f"total detections:    {stats.total_detections}")
     print(f"mean per-frame plan latency: {stats.mean_e2e:.2f}s "
@@ -77,6 +96,10 @@ def main():
           f"(inference {stats.sum_batched_inf_s:.1f}s batched vs "
           f"{stats.sum_per_request_inf_s:.1f}s per-request -> "
           f"{stats.batching_gain:.2f}x)")
+    pct = stats.event_e2e_percentiles()
+    print(f"event clock: mean tick {stats.mean_tick:.3f}s, E2E "
+          f"p50/p95/p99 = {pct[50]:.2f}/{pct[95]:.2f}/{pct[99]:.2f}s, "
+          f"{stats.carried_requests} carried requests")
     for line in format_group_report(stats, placement):
         print(line)
     print(format_pod_allocation_report(stats))

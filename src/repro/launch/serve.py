@@ -6,6 +6,19 @@ per-tick throughput / batching stats. ``--backend jax`` runs the real
 detector ladder on rendered frames; the default oracle backend is the
 calibrated fast path.
 
+``--policy {sync,deadline,async}`` picks the drain policy of the
+event-clock serving runtime (``repro.serving.runtime``):
+
+  * ``sync``     — the tick barrier (default; pre-runtime behaviour,
+    bit-identical);
+  * ``deadline`` — earliest-deadline / weighted-shortest-first
+    cross-variant dispatch ordering over the streams' budgets;
+  * ``async``    — residual sub-bucket chunks carry to the next tick
+    while their replica group is busy, priced by the overlap model:
+
+    PYTHONPATH=src python -m repro.launch.serve --streams 8 --devices 8 \
+        --policy async
+
 ``--devices D`` partitions D VIRTUAL device slots into per-variant
 replica groups (``repro.serving.placement``): the V per-variant
 forwards are scheduled concurrently and the tick model switches to the
@@ -14,14 +27,16 @@ no accelerators consulted:
 
     PYTHONPATH=src python -m repro.launch.serve --streams 8 --devices 8
 
-``--pod-allocate`` switches the control plane to the pod-level
-allocator (``repro.serving.pod_allocation``): each tick the per-stream
-knapsacks are coupled through amortized batched costs and per-group
-queue depth/utilisation by a fixed-point loop, so streams stop
-planning as if they had the edge to themselves:
+``--pod-allocate`` switches admission to the pod-level allocator
+(``repro.serving.pod_allocation``): each tick the per-stream knapsacks
+are coupled through amortized batched costs and per-group queue
+depth/utilisation by a fixed-point loop.  Since the runtime refactor
+this is a property of the POLICY (``SchedulePolicy(pod_allocate=True)``)
+— passing ``--pod-allocate`` without ``--policy`` still works but emits
+a ``DeprecationWarning`` (never a silent remap):
 
     PYTHONPATH=src python -m repro.launch.serve --streams 8 --devices 8 \
-        --pod-allocate
+        --policy sync --pod-allocate
 
 The REAL shard_map-sharded detector path is exercised by
 ``benchmarks/serving_bench.py --devices 8`` and the `multidevice` test
@@ -32,6 +47,7 @@ lane (both force fake host devices via
 from __future__ import annotations
 
 import argparse
+import warnings
 
 import numpy as np
 
@@ -39,6 +55,7 @@ from repro.core.omnisense import OmniSenseLoop
 from repro.data.synthetic import make_video
 from repro.serving import profiles
 from repro.serving.network import NetworkModel
+from repro.serving.runtime import make_policy
 from repro.serving.scheduler import OmniSenseLatencyModel, OracleBackend
 from repro.serving.server import PodServer
 
@@ -53,11 +70,28 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=0,
                     help="partition this many device slots into per-variant "
                          "replica groups (0 = single-device pod)")
+    ap.add_argument("--policy", choices=("sync", "deadline", "async"),
+                    default=None,
+                    help="drain policy of the serving runtime "
+                         "(repro.serving.runtime; default sync — the "
+                         "pre-runtime tick barrier, bit-identical)")
     ap.add_argument("--pod-allocate", action="store_true",
                     help="couple the per-stream knapsacks through batched "
                          "costs and group utilisation (the fixed-point "
-                         "pod-level allocator, repro.serving.pod_allocation)")
+                         "pod-level allocator; an admission property of "
+                         "the --policy object since the runtime refactor)")
     args = ap.parse_args()
+    if args.pod_allocate and args.policy is None:
+        # explicit, never a silent remap: the flag now configures the
+        # policy object's admission half
+        warnings.warn(
+            "--pod-allocate without --policy is deprecated: pod-level "
+            "allocation is an admission property of the schedule policy "
+            "(defaulting to --policy sync). Pass --policy explicitly; "
+            "the bare flag will be removed two PRs after the runtime "
+            "refactor.", DeprecationWarning, stacklevel=1)
+    policy = make_policy(args.policy or "sync",
+                         pod_allocate=args.pod_allocate)
 
     variants = profiles.make_ladder()
     lat = OmniSenseLatencyModel(profiles.paper_profile(),
@@ -82,12 +116,13 @@ def main() -> None:
                                              cost_fn=lat._inf)
 
     server = PodServer(loops, backends, max_batch=args.max_batch,
-                       placement=placement, pod_allocate=args.pod_allocate)
+                       placement=placement, policy=policy)
     stats = server.run(range(args.frames))
-    print(f"served {stats.frames} frames across {args.streams} streams")
+    print(f"served {stats.frames} frames across {args.streams} streams "
+          f"[{stats.policy} policy]")
     print(f"detections: {stats.total_detections}  "
           f"mean plan latency: {stats.mean_e2e:.2f}s (budget {args.budget}s)")
-    if args.pod_allocate:
+    if policy.pod_allocate:
         from repro.serving.server import format_pod_allocation_report
 
         print(format_pod_allocation_report(stats))
@@ -100,6 +135,10 @@ def main() -> None:
           f"inference gain: {stats.batching_gain:.2f}x "
           f"({stats.sum_batched_inf_s:.1f}s batched vs "
           f"{stats.sum_per_request_inf_s:.1f}s per-request)")
+    pct = stats.event_e2e_percentiles()
+    print(f"event-clock tick: mean={stats.mean_tick:.3f}s  "
+          f"E2E p50/p95/p99={pct[50]:.2f}/{pct[95]:.2f}/{pct[99]:.2f}s  "
+          f"carried requests: {stats.carried_requests}")
     if placement is not None:
         from repro.serving.server import format_group_report
 

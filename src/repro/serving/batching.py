@@ -119,12 +119,30 @@ class ShapeBuckets:
 
 @dataclasses.dataclass
 class QueuedRequest:
-    """One SRoI inference request parked in a variant queue."""
+    """One SRoI inference request parked in a variant queue.
+
+    ``deadline`` is the owning stream's latency budget (seconds) —
+    the cross-variant ordering key of
+    ``repro.serving.runtime.DeadlineOrderPolicy``; ``emitted_s`` is
+    the event-clock time the request was emitted (no dispatch may
+    launch before it); ``age`` counts whole ticks the request has
+    waited in the queue (bumped by every drain that leaves it behind —
+    the async carry-over staleness bound).
+    """
 
     request: Any                  # repro.core.omnisense.InferenceRequest
     owner: Any                    # opaque scatter key (the pending frame)
     backend: Any                  # executes the batched forward
     latency_model: Any = None     # prices the dispatch (may be None)
+    deadline: float | None = None
+    emitted_s: float = 0.0
+    age: int = 0
+    # the stream frame index the request was emitted for.  Simulation
+    # backends (``set_frame``) sample ground truth by CURRENT frame, so
+    # a request carried across ticks must be replayed at its emission
+    # frame or it would observe the future (real pixel backends are
+    # immune: the pixels travel inside the request).
+    frame_idx: int | None = None
 
 
 class VariantQueues:
@@ -149,9 +167,48 @@ class VariantQueues:
     def put(self, item: QueuedRequest) -> None:
         self._queues[item.request.variant.name].append(item)
 
+    def counts(self) -> dict[str, int]:
+        """Live queue depth per variant (zero-depth variants included
+        once seen, so drain planners observe a stable key set)."""
+        return {name: len(q) for name, q in self._queues.items()}
+
+    def peek(self, name: str) -> tuple[QueuedRequest, ...]:
+        """The queue's items in FIFO (pop) order, without popping —
+        drain policies read deadlines/ages from here."""
+        return tuple(self._queues.get(name, ()))
+
+    def head(self, name: str) -> QueuedRequest | None:
+        """The queue's next-to-pop item without the O(n) copy of
+        :meth:`peek` (per-chunk pricing only needs the variant and
+        latency model, which every item of a queue shares)."""
+        q = self._queues.get(name)
+        return q[0] if q else None
+
+    def full_drain_ops(self) -> list[tuple[str, int]]:
+        """The plan covering EVERY queued request: variants in
+        sorted-name order, one op per bucket-capped chunk
+        (``ShapeBuckets.split``) — the pre-runtime schedule.  The
+        single source of the full-drain chunking, shared by
+        :meth:`drain`, the sync policy and ``PodServer.flush`` so the
+        three can never disagree on it."""
+        return [(name, take) for name in sorted(self._queues)
+                for take in self.buckets.split(len(self._queues[name]))]
+
     def drain(self, placement=None
               ) -> tuple[list[tuple[QueuedRequest, list]], list[dict]]:
-        """Empty all queues; returns (results, dispatch records).
+        """Empty all queues; returns (results, dispatch records) —
+        :meth:`drain_ops` over :meth:`full_drain_ops`."""
+        return self.drain_ops(self.full_drain_ops(), placement)
+
+    def drain_ops(self, ops, placement=None
+                  ) -> tuple[list[tuple[QueuedRequest, list]], list[dict]]:
+        """Execute an explicit dispatch plan; returns (results, records).
+
+        ``ops``: ordered ``(variant_name, take)`` pairs (or objects
+        with ``.variant``/``.take`` — ``repro.serving.runtime.DrainOp``)
+        each popping ``take`` requests FIFO into ONE batched forward.
+        Requests not covered by any op stay queued (the async
+        carry-over) and age by one tick.
 
         ``results``: (queued_request, detections) per drained request,
         in dispatch order.  ``dispatches``: one record per batched
@@ -163,23 +220,35 @@ class VariantQueues:
         forward is LAUNCHED before any result is resolved: backends
         exposing the non-blocking ``launch_srois_batched`` entry
         overlap the per-variant forwards across their disjoint device
-        groups instead of serialising in sorted-name order.
+        groups instead of serialising in plan order.
         """
         resolvers: list[tuple[list[QueuedRequest], Any]] = []
         dispatches: list[dict] = []
-        for name in sorted(self._queues):
+        for op in ops:
+            name, take = (op.variant, op.take) if hasattr(op, "variant") \
+                else op
             q = self._queues[name]
-            group = placement.group_for(name) if placement is not None else None
-            while q:
-                chunk = [q.popleft()
-                         for _ in range(min(len(q), self.buckets.max_batch))]
-                resolvers.extend(
-                    self._launch_chunk(name, chunk, dispatches, group))
+            if not 0 < take <= len(q):
+                raise ValueError(
+                    f"drain op wants {take} of variant {name!r} but the "
+                    f"queue holds {len(q)}")
+            if take > self.buckets.max_batch:
+                raise ValueError(
+                    f"drain op of {take} exceeds the top bucket "
+                    f"{self.buckets.max_batch}")
+            group = placement.group_for(name) if placement is not None \
+                else None
+            chunk = [q.popleft() for _ in range(take)]
+            resolvers.extend(
+                self._launch_chunk(name, chunk, dispatches, group))
         results: list[tuple[QueuedRequest, list]] = []
         for items, resolve in resolvers:
             dets = resolve()
             assert len(dets) == len(items)
             results.extend(zip(items, dets))
+        for q in self._queues.values():  # carried requests wait a tick
+            for item in q:
+                item.age += 1
         return results, dispatches
 
     def _launch_chunk(self, name: str, chunk: Sequence[QueuedRequest],
@@ -190,22 +259,29 @@ class VariantQueues:
         so the whole chunk is a single ``infer_srois_batched`` call;
         per-stream oracle backends sub-group by identity (an execution
         detail of the simulation — the chunk remains ONE dispatch in
-        the tick schedule the server prices).  Returns
-        ``(items, resolver)`` pairs; backends without a non-blocking
-        entry execute inline and resolve trivially.
+        the tick schedule the server prices).  ``set_frame`` backends
+        additionally sub-group by the requests' emission frame and are
+        replayed at it, so a request carried across ticks still
+        samples the ground truth of the frame that emitted it.
+        Returns ``(items, resolver)`` pairs; backends without a
+        non-blocking entry execute inline and resolve trivially.
         """
         variant = chunk[0].request.variant
-        groups: dict[int, list[QueuedRequest]] = {}
+        groups: dict[tuple, list[QueuedRequest]] = {}
         for item in chunk:
-            groups.setdefault(id(item.backend), []).append(item)
+            frame_key = item.frame_idx \
+                if hasattr(item.backend, "set_frame") else None
+            groups.setdefault((id(item.backend), frame_key), []).append(item)
         out = []
         # virtual-slot groups price the tick model but cannot host a
         # sharded forward — execution falls back to the plain batched
         # path while the dispatch record keeps the group for pricing
         exec_group = group if group is not None and not group.is_virtual \
             else None
-        for items in groups.values():
+        for (_, frame_key), items in groups.items():
             backend = items[0].backend
+            if frame_key is not None:
+                backend.set_frame(frame_key)
             pairs = [(it.request.frame, it.request.region) for it in items]
             if hasattr(backend, "launch_srois_batched"):
                 out.append((items, backend.launch_srois_batched(

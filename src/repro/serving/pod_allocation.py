@@ -131,6 +131,12 @@ class PodSolution:
     coupled: bool          # False when a degenerate pod short-circuited
     tick_cap: float        # capacity envelope (uncoupled projected tick)
     projected_tick: float  # projected tick of the returned plans
+    # per replica group, the projected chunked-drain seconds of the
+    # returned plans (projected_tick is its max).  Exported so the
+    # serving runtime's drain policies price admission/carry-over from
+    # the SAME curve as the envelope instead of recomputing it
+    # (ROADMAP: "share projected_tick when they land").
+    projected_load: dict = dataclasses.field(default_factory=dict)
 
 
 def _plan_counts(plan, variants) -> dict[str, int]:
@@ -159,15 +165,16 @@ def _group_of(placement, name):
     return g.index, g.n_devices
 
 
-def projected_tick(counts: dict, variants: Sequence, latency_model,
-                   buckets: ShapeBuckets, placement=None) -> float:
-    """Device-aware tick cost of serving ``counts`` requests/variant.
-
-    Max over replica groups of the summed chunked drain costs
-    (``variant_queue_cost``) — the projection of what ``PodServer``
-    will charge via ``tick_inference_delay`` when these counts hit the
-    queues, so the solver's capacity envelope and the served tick can
-    never disagree on the curve.
+def projected_group_load(counts: dict, variants: Sequence, latency_model,
+                         buckets: ShapeBuckets,
+                         placement=None) -> dict[int, float]:
+    """Per replica group, the chunked drain seconds of serving
+    ``counts`` requests/variant (``variant_queue_cost`` — the same
+    curve ``tick_schedule_delay`` prices).  The shared load projection:
+    :func:`projected_tick` takes its max for the capacity envelope, and
+    the serving runtime's drain policies consume it for carry-over
+    decisions (``solve_pod`` exports it per tick so neither recomputes
+    the other's numbers).
     """
     group_load: dict[int, float] = {}
     for v in variants:
@@ -175,7 +182,22 @@ def projected_tick(counts: dict, variants: Sequence, latency_model,
         group_load[gidx] = group_load.get(gidx, 0.0) + \
             latency_model.variant_queue_cost(
                 v, counts.get(v.name, 0), buckets, n_dev)
-    return max(group_load.values(), default=0.0)
+    return group_load
+
+
+def projected_tick(counts: dict, variants: Sequence, latency_model,
+                   buckets: ShapeBuckets, placement=None) -> float:
+    """Device-aware tick cost of serving ``counts`` requests/variant.
+
+    Max over replica groups of :func:`projected_group_load` — the
+    projection of what ``PodServer`` will charge via
+    ``tick_inference_delay`` when these counts hit the queues, so the
+    solver's capacity envelope and the served tick can never disagree
+    on the curve.
+    """
+    return max(projected_group_load(counts, variants, latency_model,
+                                    buckets, placement).values(),
+               default=0.0)
 
 
 def stream_prices(
@@ -371,15 +393,17 @@ def solve_pod(
         if p.acc is not None and p.acc.shape[1] > 0 else None
         for p in problems]
     counts = _total_counts(plans, variants)
-    tick_cap = projected_tick(counts, variants, latency_model, buckets,
-                              placement)
+    cap_load = projected_group_load(counts, variants, latency_model, buckets,
+                                    placement)
+    tick_cap = max(cap_load.values(), default=0.0)
     if len(problems) <= 1 or len(variants) <= 1:
         # one stream has no co-streams to share a batch with; one
         # variant has no cross-variant choice to arbitrate — both keep
         # the calibrated per-stream plans byte-identical.
         return PodSolution(plans, rounds=0, converged=True, counts=counts,
                            coupled=False, tick_cap=tick_cap,
-                           projected_tick=tick_cap)
+                           projected_tick=tick_cap,
+                           projected_load=cap_load)
     max_switches = max(1, math.ceil(damping * len(problems)))
     converged = False
     rounds = 0
@@ -393,11 +417,13 @@ def solve_pod(
             converged = True
             break
     counts = _total_counts(plans, variants)
+    load = projected_group_load(counts, variants, latency_model, buckets,
+                                placement)
     return PodSolution(
         plans, rounds=rounds, converged=converged, counts=counts,
         coupled=True, tick_cap=tick_cap,
-        projected_tick=projected_tick(counts, variants, latency_model,
-                                      buckets, placement))
+        projected_tick=max(load.values(), default=0.0),
+        projected_load=load)
 
 
 def solve_pod_bruteforce(

@@ -127,6 +127,26 @@ class OmniSenseLatencyModel:
         """
         return max(group_costs, default=0.0)
 
+    def tick_overlap_delay(self, group_costs: dict,
+                           carry_in: dict | None = None) -> float:
+        """:meth:`tick_inference_delay` generalised to overlapping
+        dispatches (the event-clock runtime, ``repro.serving.runtime``).
+
+        ``group_costs`` maps replica-group index to the summed delays
+        of the dispatches the tick ADDED to that group; ``carry_in``
+        maps group index to the busy seconds the group still owed past
+        the tick start (work launched in an earlier tick under an
+        async drain policy).  Each group completes at carry-in plus
+        its serialised new work and the tick pays the max — with no
+        carry-in this is exactly :meth:`tick_inference_delay`, which
+        is what pins the sync policy's bit-identity.  ``PodServer``'s
+        flush prices the carried tail through this closed form (with
+        the event horizon as the floor for untouched busy groups).
+        """
+        carry = carry_in or {}
+        return max((carry.get(g, 0.0) + c for g, c in group_costs.items()),
+                   default=0.0)
+
     def variant_queue_cost(self, variant: acc_mod.ModelProfile,
                            n_requests: int, buckets=None,
                            n_devices: int = 1) -> float:

@@ -6,36 +6,41 @@ NMS) runs for hundreds of streams, and the interesting systems problem
 becomes *variant batching*: PI requests from many streams that chose the
 same model variant are batched into one accelerator dispatch.
 
-``PodServer`` runs that loop against a virtual clock:
+``PodServer`` drives that loop over the event-clock serving runtime
+(``repro.serving.runtime``):
 
   * each stream runs its own ``OmniSenseLoop`` state (history,
     discovery, allocator) against the shared latency model; per tick
     every loop EMITS its planned inference requests
     (``begin_frame``) instead of executing them inline;
   * the requests park in real per-variant queues
-    (``repro.serving.batching.VariantQueues``) and drain into chunks of
-    at most ``max_batch``, each chunk zero-padded up to a batch-size
-    bucket and executed as ONE batched detector forward
-    (``infer_srois_batched``) — S streams choosing V distinct variants
-    issue exactly V batched forwards when V queues fit their buckets;
-  * the decoded detections scatter back to their owning loops
-    (``finish_frame``), which run discovery and defer suppression;
-  * spherical NMS is NOT run per stream: every stream finishing in
-    the tick defers suppression, the raw detections are padded into one
+    (``repro.serving.batching.VariantQueues``); a pluggable
+    ``SchedulePolicy`` owns admission (per-stream knapsacks vs the
+    pod-level fixed point), drain ordering and carry-over, and the
+    queues drain into chunks of at most ``max_batch``, each chunk
+    zero-padded up to a batch-size bucket and executed as ONE batched
+    detector forward (``infer_srois_batched``);
+  * every dispatch is booked on the ``GroupClock``: it launches when
+    its replica group frees (groups serialise internally, run
+    concurrently across each other) and the per-tick ``TickTimeline``
+    records launch/complete stamps — the sync policy's tick charge is
+    bit-identical to the old barrier model
+    (``OmniSenseLatencyModel.tick_inference_delay``), and async
+    carry-over is priced by the overlap generalisation;
+  * the decoded detections scatter back to their owning frames; a
+    frame finishes (``finish_frame``) in the tick its LAST request
+    resolves — immediately under the sync barrier, possibly a tick
+    later under ``AsyncDrainPolicy``, whose residual sub-bucket
+    chunks merge into the next tick's fuller batches;
+  * spherical NMS is NOT run per stream: every frame finishing in the
+    tick defers suppression, the raw detections are padded into one
     ``(B, N, 4)`` stack, and a single ``sph_nms_batch`` dispatch
-    suppresses all rows at once — the inference dispatch and the NMS
-    dispatch share one tick schedule;
-  * the tick's inference time is charged per DISPATCH via
-    ``OmniSenseLatencyModel.batched_inference_delay`` (per-batch fixed
-    cost + per-item marginal), not as a per-request ``_inf`` sum;
-    utilisation, queue depths and per-stream E2E are reported;
+    suppresses all rows at once;
   * with a ``VariantPlacement`` (``repro.serving.placement``), each
     variant's forward routes to its own replica group — sharded over
     the group's ``data`` axis and launched before any result is
     resolved, so V variants execute concurrently on disjoint device
-    groups — and the tick model switches from the dispatch SUM to the
-    device-aware MAX over per-group sums
-    (``OmniSenseLatencyModel.tick_inference_delay``).
+    groups.
 
 This is the runnable stand-in for the 256-chip serving mesh (the
 dry-run proves the detector steps compile on that mesh; this loop
@@ -46,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable
 
 import numpy as np
@@ -54,6 +60,8 @@ from repro.core.omnisense import OmniSenseLoop
 from repro.core.sphere import (nms_auto_backend, pad_detection_rows,
                                sph_nms_batch)
 from repro.serving.batching import QueuedRequest, ShapeBuckets, VariantQueues
+from repro.serving.runtime import (DispatchEvent, GroupClock, SyncTickPolicy,
+                                   TickTimeline, make_policy)
 
 
 @dataclasses.dataclass
@@ -69,7 +77,8 @@ class ServeStats:
     sum_batched_inf_s: float = 0.0      # aggregate device-busy seconds
     sum_per_request_inf_s: float = 0.0  # what B per-request forwards would
     # device-aware tick accounting: replica groups run concurrently, so
-    # the tick pays max-over-groups, not the dispatch sum
+    # the tick pays max-over-groups (sync barrier) or the event-clock
+    # elapsed time (async overlap) — the policy's close_tick rule
     sum_tick_inf_s: float = 0.0
     group_busy_s: dict = dataclasses.field(default_factory=dict)
     # device count per group index as last seen at dispatch time, so
@@ -80,10 +89,20 @@ class ServeStats:
     # bench's accuracy proxy, comparable coupled vs uncoupled because
     # values come from the acc matrices, never from prices)
     sum_plan_value: float = 0.0
-    # pod-level allocation accounting (zero when pod_allocate is off)
+    # pod-level allocation accounting (zero when the policy does not
+    # pod-allocate)
     pod_rounds: int = 0
     pod_ticks: int = 0
     pod_converged_ticks: int = 0
+    # event-clock accounting (repro.serving.runtime)
+    policy: str = "sync"
+    # per finished frame: completion of its last dispatch minus its
+    # emission time on the event clock (the policy-sensitive E2E the
+    # bench's policy_grid reports as p50/p95/p99)
+    event_e2e: list = dataclasses.field(default_factory=list)
+    # request-ticks spent waiting in a queue past the tick that
+    # emitted them (async carry-over volume; 0 under sync/deadline)
+    carried_requests: int = 0
 
     @property
     def mean_e2e(self) -> float:
@@ -93,6 +112,13 @@ class ServeStats:
     def accuracy_proxy(self) -> float:
         """Mean allocator plan value per stream-frame."""
         return self.sum_plan_value / max(self.frames, 1)
+
+    @property
+    def mean_tick(self) -> float:
+        """Mean per-tick inference seconds (flush charges included in
+        the numerator but not the tick count, so async pods pay their
+        carried tail instead of hiding it)."""
+        return self.sum_tick_inf_s / max(self.ticks, 1)
 
     @property
     def mean_batch(self) -> float:
@@ -122,6 +148,13 @@ class ServeStats:
         return {g: busy / self.sum_tick_inf_s
                 for g, busy in sorted(self.group_busy_s.items())}
 
+    def event_e2e_percentiles(self, qs=(50, 95, 99)) -> dict[int, float]:
+        """Event-clock E2E percentiles over the finished frames."""
+        if not self.event_e2e:
+            return {q: 0.0 for q in qs}
+        arr = np.asarray(self.event_e2e)
+        return {q: float(np.percentile(arr, q)) for q in qs}
+
 
 def format_group_report(stats: ServeStats, placement) -> list[str]:
     """Human-readable replica-group summary lines (shared by the
@@ -132,7 +165,8 @@ def format_group_report(stats: ServeStats, placement) -> list[str]:
         f"g{g}[{stats.group_devices.get(g, '?')}dev]={u:.0%}"
         for g, u in stats.group_utilisation().items())
     return [
-        f"replica groups over {placement.n_devices} devices: "
+        f"replica groups over {placement.n_devices} devices "
+        f"[{stats.policy} policy]: "
         f"device-aware tick inference {stats.sum_tick_inf_s:.1f}s "
         f"(sharding gain {stats.sharding_gain:.2f}x, "
         f"{placement.rebalances} rebalances)",
@@ -152,36 +186,72 @@ def format_pod_allocation_report(stats: ServeStats) -> str:
             f"{stats.accuracy_proxy:.3f}/stream-frame")
 
 
+@dataclasses.dataclass
+class _InFlightFrame:
+    """A frame emitted but not yet finished (its requests may span
+    ticks under a carry-over policy)."""
+
+    loop: OmniSenseLoop
+    pending: object               # omnisense.PendingFrame
+    emitted_s: float              # event-clock emission time
+    done_s: float                 # latest completion among its dispatches
+    frame_idx: int | None = None  # stream frame index it was emitted for
+    slots: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def complete(self) -> bool:
+        return len(self.slots) == len(self.pending.requests)
+
+
 class PodServer:
-    """Variant-batched tick scheduler over per-stream OmniSense loops.
+    """Thin driver over the event-clock serving runtime.
 
     ``frame_source(stream_idx, frame_idx)`` optionally supplies real
     frame pixels per stream (the Jax detector path); oracle backends
     sample ground truth and take ``None``.
+
+    ``policy`` is a :class:`repro.serving.runtime.SchedulePolicy`
+    instance or registered name (``"sync"``/``"deadline"``/``"async"``)
+    and owns admission, drain ordering and carry-over; the default
+    ``SyncTickPolicy`` reproduces the pre-runtime tick barrier
+    bit-identically.  The old boolean opt-ins are deprecation shims:
+    ``pod_allocate=True`` maps to ``SyncTickPolicy(pod_allocate=True)``
+    with a ``DeprecationWarning`` and will be removed two PRs after
+    this refactor (see README "Migration").
     """
 
     def __init__(self, loops: list[OmniSenseLoop], backends: list,
                  max_batch: int = 8, marginal_batch_cost: float | None = None,
                  buckets: ShapeBuckets | None = None,
                  frame_source: Callable[[int, int], np.ndarray] | None = None,
-                 placement=None, pod_allocate: bool = False):
+                 placement=None, policy=None,
+                 pod_allocate: bool | None = None):
         assert len(loops) == len(backends)
         self.loops = loops
         self.backends = backends
         self.max_batch = max_batch
-        # opt-in pod-level allocation: each tick, every stream's
-        # knapsack is coupled through batched costs + group utilisation
-        # by the fixed-point solver (repro.serving.pod_allocation)
-        # instead of planning as if it had the edge to itself.  Off by
-        # default: the uncoupled path stays byte-identical.
-        self.pod_allocate = pod_allocate
-        if pod_allocate:
+        if pod_allocate is not None:
+            if policy is not None:
+                raise ValueError(
+                    "pass pod allocation on the policy "
+                    "(SchedulePolicy(pod_allocate=...)), not both policy= "
+                    "and the deprecated pod_allocate=")
+            warnings.warn(
+                "PodServer(pod_allocate=...) is deprecated; pass "
+                "policy=SyncTickPolicy(pod_allocate=...) (or a policy "
+                "name plus pod_allocate on the policy object). The shim "
+                "will be removed two PRs after the runtime refactor.",
+                DeprecationWarning, stacklevel=2)
+            policy = SyncTickPolicy(pod_allocate=bool(pod_allocate))
+        self.policy = make_policy(policy) if policy is not None \
+            else SyncTickPolicy()
+        if self.policy.pod_allocate:
             ladder = tuple(v.name for v in loops[0].variants)
             for loop in loops:
                 if tuple(v.name for v in loop.variants) != ladder:
                     raise ValueError(
-                        "pod_allocate=True needs every stream on the same "
-                        f"variant ladder; got {ladder} vs "
+                        "pod-level allocation needs every stream on the "
+                        f"same variant ladder; got {ladder} vs "
                         f"{tuple(v.name for v in loop.variants)}")
         # repro.serving.placement.VariantPlacement: routes each drained
         # chunk to its variant's replica group and switches the tick
@@ -217,7 +287,43 @@ class PodServer:
                     "ShapeBuckets with the server's")
         self.frame_source = frame_source
         self.queues = VariantQueues(self.buckets)
-        self.stats = ServeStats()
+        self.stats = ServeStats(policy=self.policy.name)
+        self.clock = GroupClock()
+        # per-tick event records (runs in this repo are short; a
+        # long-lived deployment would cap/rotate these)
+        self.timelines: list[TickTimeline] = []
+        self._inflight: list[_InFlightFrame] = []
+        self._by_owner: dict[int, _InFlightFrame] = {}
+        # the pod-level allocator's per-group load projection for the
+        # CURRENT tick (solve_pod exports it; None -> the policy
+        # rebuilds it from the live queues on the same curve)
+        self._projected_load: dict | None = None
+
+    @property
+    def pod_allocate(self) -> bool:
+        """Whether admission runs the pod-level fixed point (lives on
+        the policy since the runtime refactor)."""
+        return self.policy.pod_allocate
+
+    def _price_curve(self, variant, lat, n_dev: int):
+        """(curve, single) — the dispatch pricing curve of one variant
+        on one latency model, shared by dispatch billing and the
+        policies' pre-dispatch chunk estimates so they cannot drift."""
+        blat = getattr(lat, "batched_inference_delay", None)
+        single = blat(variant, 1) if blat is not None else variant.infer_s
+
+        def curve(n: int) -> float:
+            n_eff = -(-n // n_dev)  # largest per-device shard
+            if self.marginal is not None:  # explicit override
+                return single * (1.0 + (n_eff - 1) * self.marginal)
+            shard = getattr(lat, "sharded_inference_delay", None)
+            if shard is not None:
+                return shard(variant, n, n_dev)
+            if blat is not None:
+                return blat(variant, n_eff)
+            return single * (1.0 + (n_eff - 1) * 0.15)
+
+        return curve, single
 
     def _dispatch_cost(self, dispatch: dict) -> tuple[float, float]:
         """(batched, per-request-sum) inference seconds of one dispatch.
@@ -236,26 +342,27 @@ class PodServer:
         lat = dispatch["items"][0].latency_model
         group = dispatch.get("group")
         n_dev = group.n_devices if group is not None else 1
-        blat = getattr(lat, "batched_inference_delay", None)
-        single = blat(variant, 1) if blat is not None else variant.infer_s
-
-        def curve(n: int) -> float:
-            n_eff = -(-n // n_dev)  # largest per-device shard
-            if self.marginal is not None:  # explicit override
-                return single * (1.0 + (n_eff - 1) * self.marginal)
-            shard = getattr(lat, "sharded_inference_delay", None)
-            if shard is not None:
-                return shard(variant, n, n_dev)
-            if blat is not None:
-                return blat(variant, n_eff)
-            return single * (1.0 + (n_eff - 1) * 0.15)
-
+        curve, single = self._price_curve(variant, lat, n_dev)
         b = dispatch["b"]
         if dispatch["semantic"]:
             batched = curve(b)
         else:
             batched = sum(curve(g) for g in dispatch["group_sizes"])
         return batched, single * b
+
+    def _chunk_cost(self, name: str, b: int) -> float:
+        """Pre-dispatch estimate of one queued chunk's batched cost
+        (the policies' planning signal; the executed dispatch is
+        billed by :meth:`_dispatch_cost` on the same curve)."""
+        item = self.queues.head(name)
+        if item is None:
+            return 0.0
+        group = self.placement.group_for(name) if self.placement is not None \
+            else None
+        curve, _ = self._price_curve(
+            item.request.variant, item.latency_model,
+            group.n_devices if group is not None else 1)
+        return curve(b)
 
     def _pod_plan(self, frames: list) -> list:
         """Coupled emission: collect every stream's planning context,
@@ -287,6 +394,10 @@ class PodServer:
         self.stats.pod_ticks += 1
         self.stats.pod_rounds += sol.rounds
         self.stats.pod_converged_ticks += int(sol.converged)
+        # the solver already projected this tick's per-group load on
+        # the shared curve — hand it to the drain policy instead of
+        # letting it recompute the same sums from the queues
+        self._projected_load = dict(sol.projected_load)
         # re-stamp each context immediately before ITS emission so
         # emit_pending bills the stream its own planning time plus a
         # fair share of the shared solve — never the sequential wall
@@ -308,40 +419,58 @@ class PodServer:
                 backend.set_frame(frame_idx)
             frames.append(self.frame_source(s, frame_idx)
                           if self.frame_source is not None else None)
-        if self.pod_allocate:
+        self._projected_load = None
+        if self.policy.pod_allocate:
             emitted = self._pod_plan(frames)
         else:
             emitted = [loop.begin_frame(frame)
                        for loop, frame in zip(self.loops, frames)]
-        pendings = []
         for loop, backend, pending in zip(self.loops, self.backends, emitted):
-            pendings.append((loop, pending))
+            entry = _InFlightFrame(loop=loop, pending=pending,
+                                   emitted_s=self.clock.now,
+                                   done_s=self.clock.now,
+                                   frame_idx=frame_idx)
+            self._inflight.append(entry)
+            self._by_owner[id(pending)] = entry
             if pending.plan is not None:
                 self.stats.sum_plan_value += pending.plan.value
             for req in pending.requests:
                 self.queues.put(QueuedRequest(
                     request=req, owner=pending, backend=backend,
-                    latency_model=loop.latency_model))
+                    latency_model=loop.latency_model,
+                    deadline=loop.budget_s, emitted_s=self.clock.now,
+                    frame_idx=frame_idx))
 
         # ---- placement feedback: fold this tick's variant mix into the
         # popularity EMA and re-balance replica groups if the allocator
         # shifted load (atomic swap: queued requests keep a group) ----
         if self.placement is not None:
             counts: dict[str, int] = {}
-            for _, pending in pendings:
+            for pending in emitted:
                 for req in pending.requests:
                     counts[req.variant.name] = counts.get(req.variant.name, 0) + 1
             self.placement.observe(counts)
             self.placement.maybe_rebalance()
 
-        # ---- drain: bucketed batched forwards, one per variant chunk,
-        # each routed to (and sharded over) its variant's replica group ----
-        results, dispatches = self.queues.drain(self.placement)
-        scatter: dict[int, dict[int, list]] = {}
-        for item, dets in results:
-            scatter.setdefault(id(item.owner), {})[item.request.slot] = dets
-        tick_lat = None
-        group_costs: dict[int, float] = {}
+        # ---- drain: the policy picks order and carry-over; every
+        # admitted chunk is one batched forward routed to (and sharded
+        # over) its variant's replica group ----
+        timeline = TickTimeline(len(self.timelines), self.clock.now)
+        ops = self.policy.plan_drain(
+            self.queues, self.buckets, self.placement, self.clock,
+            chunk_cost=self._chunk_cost, projected_load=self._projected_load)
+        self._execute(ops, timeline, self.policy.close_tick)
+        self.stats.ticks += 1
+        self.stats.carried_requests += len(self.queues)
+
+        # ---- ingestion: frames whose last request resolved finish now ----
+        self._ingest()
+
+    def _execute(self, ops, timeline: TickTimeline, close) -> None:
+        """Dispatch a drain plan, book it on the event clock, charge
+        the tick per the policy's close rule."""
+        results, dispatches = self.queues.drain_ops(ops, self.placement)
+        tick_lat = overlap_lat = None
         for d in dispatches:
             self.stats.dispatches += 1
             self.stats.batch_sizes.append(d["b"])
@@ -350,45 +479,73 @@ class PodServer:
             self.stats.sum_per_request_inf_s += per_request
             group = d.get("group")
             gidx = group.index if group is not None else 0
-            group_costs[gidx] = group_costs.get(gidx, 0.0) + batched
+            n_dev = group.n_devices if group is not None else 1
+            timeline.open_group(gidx, self.clock.free_at(gidx))
+            launch, complete = self.clock.dispatch(gidx, batched)
+            event = DispatchEvent(
+                variant=d["variant"], b=d["b"], padded=d["padded"],
+                group=gidx, n_devices=n_dev, cost_s=batched,
+                launch_s=launch, complete_s=complete,
+                emitted_s=max(it.emitted_s for it in d["items"]),
+                tick=timeline.tick,
+                carried=sum(1 for it in d["items"] if it.age > 0))
+            timeline.record(event)
+            d["event"] = event
             self.stats.group_busy_s[gidx] = (
                 self.stats.group_busy_s.get(gidx, 0.0) + batched)
-            self.stats.group_devices[gidx] = (
-                group.n_devices if group is not None else 1)
+            self.stats.group_devices[gidx] = n_dev
             tick_lat = tick_lat or getattr(
                 d["items"][0].latency_model, "tick_inference_delay", None)
-        # device-aware tick cost: groups run concurrently on disjoint
-        # devices, so the tick pays the max over per-group sums (the
-        # single-group pod degenerates to the old dispatch sum)
-        self.stats.ticks += 1
-        self.stats.sum_tick_inf_s += (
-            tick_lat(group_costs.values()) if tick_lat is not None
-            else max(group_costs.values(), default=0.0))
+            overlap_lat = overlap_lat or getattr(
+                d["items"][0].latency_model, "tick_overlap_delay", None)
+            for it in d["items"]:
+                owner = self._by_owner[id(it.owner)]
+                owner.done_s = max(owner.done_s, complete)
+        for item, dets in results:
+            self._by_owner[id(item.owner)].slots[item.request.slot] = dets
+        self.timelines.append(timeline)
+        charge, next_start = close(self.clock, timeline, tick_lat, overlap_lat)
+        self.stats.sum_tick_inf_s += charge
+        self.clock.advance(next_start)
 
-        # ---- ingestion: scatter detections back, defer suppression ----
+    def _ingest(self) -> None:
+        """Finish every in-flight frame whose requests all resolved
+        (in emission order, so per-stream history stays in frame
+        order), with one batched NMS dispatch across them."""
+        finishing = [e for e in self._inflight if e.complete]
+        if not finishing:
+            return
+        self._inflight = [e for e in self._inflight if not e.complete]
         plans = []
-        for loop, pending in pendings:
-            slots = scatter.get(id(pending), {})
-            request_detections = [slots.get(i, [])
-                                  for i in range(len(pending.requests))]
-            result = loop.finish_frame(pending, request_detections,
-                                       defer_nms=True)
-            plans.append((loop, result))
+        for e in finishing:
+            del self._by_owner[id(e.pending)]
+            request_detections = [e.slots.get(i, [])
+                                  for i in range(len(e.pending.requests))]
+            # a frame finishing a tick late (carried requests) must run
+            # its discovery pass against ITS OWN frame's ground truth,
+            # not whatever frame the tick advanced the simulation to
+            backend = e.loop.backend
+            if e.frame_idx is not None and hasattr(backend, "set_frame"):
+                backend.set_frame(e.frame_idx)
+            result = e.loop.finish_frame(e.pending, request_detections,
+                                         defer_nms=True)
+            plans.append((e.loop, result))
 
-        # one batched spherical-NMS dispatch for every stream that
-        # produced detections this tick (instead of B Python loops)
+        # one batched spherical-NMS dispatch for every frame that
+        # finished this tick (instead of B Python loops)
         self.stats.sum_overhead += self._suppress_tick(plans)
 
-        for _, result in plans:
+        for e, (_, result) in zip(finishing, plans):
             self.stats.frames += 1
             self.stats.total_detections += len(result.detections)
             self.stats.sum_e2e += result.planned_latency
             self.stats.sum_overhead += result.overhead_s
+            self.stats.event_e2e.append(max(0.0, e.done_s - e.emitted_s))
 
     def _suppress_tick(self, plans: list) -> float:
         """Batched spherical NMS across the tick; returns wall time.
 
-        Streams with detections are padded to a common N and suppressed
+        Frames with detections are padded to a common N and suppressed
         in one ``sph_nms_batch`` call; every loop (including empty ones)
         then gets its keep-mask back via ``finalize_detections`` so the
         per-stream detection feedback matches the inline path exactly.
@@ -425,7 +582,44 @@ class PodServer:
             loop.finalize_detections(res, keeps.get(id(res)))
         return time.perf_counter() - t0
 
+    def flush(self) -> None:
+        """Settle carried work: dispatch every still-queued request in
+        one full sorted drain (priced on the overlap model — carried
+        work launches when its group frees) and finish the frames left
+        in flight.  A strict no-op under policies without carry-over,
+        so ``run`` keeps the sync path bit-identical.  Flush charges
+        accrue to ``sum_tick_inf_s`` without growing ``ticks``: the
+        async mean tick pays its tail instead of hiding it."""
+        for _ in range(2):
+            if not len(self.queues):
+                break
+            timeline = TickTimeline(len(self.timelines), self.clock.now)
+            self._execute(self.queues.full_drain_ops(), timeline,
+                          self._flush_close)
+            self._ingest()
+        assert not len(self.queues) and not self._inflight, \
+            "flush failed to settle the pod"
+
+    @staticmethod
+    def _flush_close(clock: GroupClock, timeline: TickTimeline,
+                     tick_lat=None, overlap_lat=None) -> tuple[float, float]:
+        """Flush charge: the overlap-generalised barrier — each touched
+        group pays its carry-in plus its serialised drain, max over
+        groups, via the latency model's closed form
+        (``tick_overlap_delay``) when it provides one.  The event
+        horizon is kept as the floor: it additionally covers busy
+        groups the flush had nothing left to drain on, so the carried
+        tail can never go unbilled."""
+        del tick_lat
+        horizon = clock.horizon()
+        charge = max(0.0, horizon - timeline.start)
+        if overlap_lat is not None:
+            charge = max(charge,
+                         overlap_lat(timeline.group_costs, timeline.carry_in))
+        return charge, horizon
+
     def run(self, frames: range) -> ServeStats:
         for f in frames:
             self.step(f)
+        self.flush()
         return self.stats

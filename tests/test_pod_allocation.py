@@ -42,6 +42,7 @@ from repro.serving import profiles
 from repro.serving.batching import ShapeBuckets
 from repro.serving.network import NetworkModel
 from repro.serving.placement import VariantPlacement
+from repro.serving.runtime import SyncTickPolicy
 from repro.serving.scheduler import OmniSenseLatencyModel, OracleBackend
 from repro.serving.server import PodServer
 
@@ -423,7 +424,7 @@ def _oracle_pod(n_streams, pod_allocate, frames=8, seed0=100, budget=1.8):
                                    explore_costs=costs))
     placement = VariantPlacement.virtual(variants, 8, cost_fn=lat._inf)
     return PodServer(loops, backends, max_batch=8, placement=placement,
-                     pod_allocate=pod_allocate)
+                     policy=SyncTickPolicy(pod_allocate=pod_allocate))
 
 
 class TestPodServerCoupling:
@@ -441,7 +442,8 @@ class TestPodServerCoupling:
                                        budget_s=1.8))
         backends = [loop.backend for loop in loops]
         with pytest.raises(ValueError):
-            PodServer(loops, backends, pod_allocate=True)
+            PodServer(loops, backends,
+                      policy=SyncTickPolicy(pod_allocate=True))
         PodServer(loops, backends)  # uncoupled pods may mix ladders
 
     def test_coupled_pod_serves_and_converges(self):
@@ -511,7 +513,7 @@ class TestTraceRegression:
         server = PodServer(loops, [backend] * n_streams, max_batch=4,
                            buckets=ShapeBuckets((1, 2, 4)),
                            frame_source=lambda s, f: frames[(s, f)],
-                           pod_allocate=True)
+                           policy=SyncTickPolicy(pod_allocate=True))
         nms_traces = nms_device_trace_count()
         server.run(range(n_frames))
         n_buckets = len(backend.buckets.batch_sizes)

@@ -1,0 +1,873 @@
+"""Event-driven serving runtime (PR 5).
+
+Pins the runtime/policy refactor of the pod serving plane:
+
+  * ``GroupClock.free_at`` is monotone per group and no dispatch ever
+    launches before the tick that emitted its inputs (causality on the
+    event clock), property-tested with fixed-seed twins;
+  * ``SyncTickPolicy`` reproduces the pre-refactor ``PodServer.step``
+    BIT-IDENTICALLY on a seeded 8-stream corpus — detections, stats
+    and jit/NMS trace counts all equal a hand-rolled reference of the
+    old tick loop — and its per-tick timelines price exactly
+    ``OmniSenseLatencyModel.tick_inference_delay``;
+  * ``DeadlineOrderPolicy`` orders dispatches by (deadline, cost per
+    request served) without perturbing results, cutting mean
+    event-clock E2E at identical tick cost;
+  * ``AsyncDrainPolicy`` carries residual sub-bucket chunks (bounded
+    staleness, conservation of frames) and strictly undercuts the sync
+    barrier's mean tick at 8 streams / 2 variants — the test-scale
+    twin of the ``serving_bench --policy`` nightly gate;
+  * the old ``PodServer(pod_allocate=...)`` boolean maps through a
+    ``DeprecationWarning`` shim onto the policy object;
+  * ``solve_pod`` exports its per-group ``projected_load`` and the
+    policies consume it instead of recomputing the curve.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import sroi as sroi_mod
+from repro.core.omnisense import InferenceRequest, OmniSenseLoop
+from repro.core.sphere import (nms_auto_backend, nms_device_trace_count,
+                               pad_detection_rows, sph_nms_batch)
+from repro.data.synthetic import make_video
+from repro.serving import profiles
+from repro.serving.batching import QueuedRequest, ShapeBuckets, VariantQueues
+from repro.serving.network import NetworkModel
+from repro.serving.runtime import (AsyncDrainPolicy, DeadlineOrderPolicy,
+                                   DispatchEvent, GroupClock, SyncTickPolicy,
+                                   TickTimeline, make_policy)
+from repro.serving.scheduler import OmniSenseLatencyModel, OracleBackend
+from repro.serving.server import PodServer
+
+# ---------------------------------------------------------------------------
+# event clock
+# ---------------------------------------------------------------------------
+
+
+def _clock_trace(seed: int):
+    """Random dispatch/advance trace; returns per-group free_at
+    observations in operation order plus the (launch, emit-tick-start)
+    pairs of every dispatch."""
+    rng = np.random.default_rng(seed)
+    clock = GroupClock()
+    observed: dict[int, list[float]] = {}
+    launches = []
+    for _ in range(int(rng.integers(1, 40))):
+        if rng.random() < 0.3:  # close the tick like a policy would
+            clock.advance(clock.now + float(rng.uniform(0.0, 1.0)))
+        g = int(rng.integers(0, 4))
+        start = clock.now
+        launch, complete = clock.dispatch(g, float(rng.uniform(0.0, 2.0)))
+        launches.append((launch, start))
+        assert complete == clock.free_at(g)
+        observed.setdefault(g, []).append(clock.free_at(g))
+    return observed, launches
+
+
+class TestGroupClock:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=50, deadline=None)
+    def test_free_at_monotone_property(self, seed):
+        self._check_monotone(seed)
+
+    def test_free_at_monotone_fixed(self):
+        for seed in (0, 1, 2, 7, 1234):
+            self._check_monotone(seed)
+
+    @staticmethod
+    def _check_monotone(seed):
+        observed, launches = _clock_trace(seed)
+        for g, series in observed.items():
+            assert all(a <= b for a, b in zip(series, series[1:])), g
+        # causality: a dispatch can never launch before the tick that
+        # admitted it started
+        for launch, start in launches:
+            assert launch >= start
+
+    def test_unseen_group_free_at_start(self):
+        clock = GroupClock(start=3.0)
+        assert clock.free_at(42) == 3.0
+        assert not clock.busy(42)
+        assert clock.next_free() is None
+        assert clock.horizon() == 3.0
+
+    def test_dispatch_serialises_within_group(self):
+        clock = GroupClock()
+        l1, c1 = clock.dispatch(0, 1.0)
+        l2, c2 = clock.dispatch(0, 0.5)
+        assert (l1, c1) == (0.0, 1.0)
+        assert (l2, c2) == (1.0, 1.5)  # waits for the group, not the tick
+        l3, c3 = clock.dispatch(1, 0.25)
+        assert (l3, c3) == (0.0, 0.25)  # other groups run concurrently
+        assert clock.next_free() == 0.25
+        assert clock.horizon() == 1.5
+
+    def test_advance_never_rewinds(self):
+        clock = GroupClock()
+        clock.advance(2.0)
+        clock.advance(1.0)
+        assert clock.now == 2.0
+
+    def test_negative_cost_rejected(self):
+        with pytest.raises(ValueError):
+            GroupClock().dispatch(0, -1.0)
+
+
+class TestTickTimeline:
+    def _event(self, g, cost, launch, tick=0):
+        return DispatchEvent(variant="v", b=1, padded=1, group=g,
+                             n_devices=1, cost_s=cost, launch_s=launch,
+                             complete_s=launch + cost, emitted_s=0.0,
+                             tick=tick)
+
+    def test_barrier_equals_tick_inference_delay(self):
+        """The no-carry timeline charge IS the old device-aware tick
+        model, on the exact same accumulation."""
+        lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+        rng = np.random.default_rng(0)
+        for _ in range(20):
+            tl = TickTimeline(0, start=float(rng.uniform(0, 5)))
+            group_costs: dict[int, float] = {}
+            t = {}
+            for _ in range(int(rng.integers(0, 12))):
+                g = int(rng.integers(0, 3))
+                c = float(rng.uniform(0.0, 1.0))
+                launch = tl.start + t.get(g, 0.0)
+                t[g] = t.get(g, 0.0) + c
+                tl.record(self._event(g, c, launch))
+                group_costs[g] = group_costs.get(g, 0.0) + c
+            assert tl.barrier_delay(lat.tick_inference_delay) == \
+                lat.tick_inference_delay(group_costs.values())
+            assert tl.barrier_delay() == \
+                max(group_costs.values(), default=0.0)
+
+    def test_overlap_generalises_barrier(self):
+        """tick_overlap_delay with zero carry-in == tick_inference_delay;
+        carry-in pushes exactly the busy group's completion out."""
+        lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+        costs = {0: 1.0, 1: 0.4}
+        assert lat.tick_overlap_delay(costs) == \
+            lat.tick_inference_delay(costs.values())
+        assert lat.tick_overlap_delay(costs, carry_in={1: 0.9}) == 1.3
+        assert lat.tick_overlap_delay(costs, carry_in={0: 0.1}) == 1.1
+        assert lat.tick_overlap_delay({}) == 0.0
+
+    def test_overlap_delay_tracks_event_horizon(self):
+        tl = TickTimeline(0, start=1.0)
+        assert tl.overlap_delay() == 0.0
+        tl.record(self._event(0, 0.5, launch=1.0))
+        tl.record(self._event(1, 0.25, launch=2.0))  # carried-in group
+        assert tl.overlap_delay() == pytest.approx(1.25)
+        assert tl.horizon() == pytest.approx(2.25)
+
+
+# ---------------------------------------------------------------------------
+# policy construction / the PodServer API
+# ---------------------------------------------------------------------------
+
+
+def _oracle_pod(n_streams, frames=8, seed0=100, budget=1.8, policy=None,
+                variants=None, devices=0, budget_fn=None):
+    variants = variants or profiles.make_ladder()[3:5]
+    lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+    costs = [lat._pre(v) + lat._inf(v) for v in variants]
+    loops, backends = [], []
+    for s in range(n_streams):
+        video = make_video(n_frames=frames + 8, n_objects=30 + 5 * (s % 4),
+                           seed=seed0 + s)
+        backend = OracleBackend(video)
+        backends.append(backend)
+        b = budget_fn(s) if budget_fn is not None else budget
+        loops.append(OmniSenseLoop(variants, lat, backend, budget_s=b,
+                                   explore_costs=costs))
+    placement = None
+    if devices:
+        from repro.serving.placement import VariantPlacement
+
+        placement = VariantPlacement.virtual(variants, devices,
+                                             cost_fn=lat._inf)
+    return PodServer(loops, backends, max_batch=8, placement=placement,
+                     policy=policy)
+
+
+class TestPolicyAPI:
+    def test_make_policy_names(self):
+        assert isinstance(make_policy("sync"), SyncTickPolicy)
+        assert isinstance(make_policy("deadline"), DeadlineOrderPolicy)
+        assert isinstance(make_policy("async"), AsyncDrainPolicy)
+        assert make_policy("sync", pod_allocate=True).pod_allocate
+
+    def test_make_policy_instance_passthrough(self):
+        p = AsyncDrainPolicy(max_carry=2)
+        assert make_policy(p) is p
+
+    def test_make_policy_unknown_rejected(self):
+        with pytest.raises(ValueError):
+            make_policy("fifo")
+
+    def test_default_policy_is_sync(self):
+        server = _oracle_pod(2)
+        assert isinstance(server.policy, SyncTickPolicy)
+        assert server.stats.policy == "sync"
+        assert server.pod_allocate is False
+
+    def test_pod_allocate_shim_warns_and_maps(self):
+        variants = profiles.make_ladder()[3:5]
+        lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+        loops, backends = [], []
+        for s in range(2):
+            backend = OracleBackend(make_video(n_frames=8, n_objects=20,
+                                               seed=s))
+            backends.append(backend)
+            loops.append(OmniSenseLoop(variants, lat, backend, budget_s=1.8))
+        with pytest.warns(DeprecationWarning, match="pod_allocate"):
+            server = PodServer(loops, backends, pod_allocate=True)
+        assert server.pod_allocate is True
+        assert isinstance(server.policy, SyncTickPolicy)
+        with pytest.warns(DeprecationWarning):
+            server = PodServer(loops, backends, pod_allocate=False)
+        assert server.pod_allocate is False
+        with pytest.raises(ValueError):
+            PodServer(loops, backends, policy="sync", pod_allocate=True)
+
+    def test_policy_name_accepted_by_server(self):
+        server = _oracle_pod(2, policy="async")
+        assert isinstance(server.policy, AsyncDrainPolicy)
+        assert server.stats.policy == "async"
+
+
+# ---------------------------------------------------------------------------
+# sync equivalence: the runtime reproduces the pre-refactor tick loop
+# ---------------------------------------------------------------------------
+
+
+def _reference_tick_loop(n_streams, frames, seed0=100, budget=1.8,
+                         variants=None, devices=0, max_batch=8):
+    """The PRE-RUNTIME ``PodServer.step``, hand-rolled from its public
+    pieces: full sorted-variant drain, scatter, per-tick batched NMS,
+    barrier tick charge.  The seeded corpus oracle for the
+    ``SyncTickPolicy`` bit-identity acceptance test."""
+    variants = variants or profiles.make_ladder()[3:5]
+    lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+    costs = [lat._pre(v) + lat._inf(v) for v in variants]
+    loops, backends = [], []
+    for s in range(n_streams):
+        video = make_video(n_frames=frames + 8, n_objects=30 + 5 * (s % 4),
+                           seed=seed0 + s)
+        backend = OracleBackend(video)
+        backends.append(backend)
+        loops.append(OmniSenseLoop(variants, lat, backend, budget_s=budget,
+                                   explore_costs=costs))
+    placement = None
+    if devices:
+        from repro.serving.placement import VariantPlacement
+
+        placement = VariantPlacement.virtual(variants, devices,
+                                             cost_fn=lat._inf)
+    buckets = ShapeBuckets.for_max_batch(max_batch)
+    queues = VariantQueues(buckets)
+    stats = dict(frames=0, detections=0, batch_sizes=[], dispatches=0,
+                 sum_batched=0.0, sum_per_request=0.0, sum_tick=0.0,
+                 sum_e2e=0.0, sum_plan_value=0.0)
+    histories = []
+    for f in range(frames):
+        pendings = []
+        for loop, backend in zip(loops, backends):
+            backend.set_frame(f)
+            pending = loop.begin_frame(None)
+            pendings.append((loop, pending))
+            if pending.plan is not None:
+                stats["sum_plan_value"] += pending.plan.value
+            for req in pending.requests:
+                queues.put(QueuedRequest(request=req, owner=pending,
+                                         backend=backend,
+                                         latency_model=loop.latency_model))
+        if placement is not None:
+            counts = {}
+            for _, pending in pendings:
+                for req in pending.requests:
+                    counts[req.variant.name] = counts.get(req.variant.name,
+                                                          0) + 1
+            placement.observe(counts)
+            placement.maybe_rebalance()
+        results, dispatches = queues.drain(placement)
+        scatter = {}
+        for item, dets in results:
+            scatter.setdefault(id(item.owner), {})[item.request.slot] = dets
+        group_costs = {}
+        for d in dispatches:
+            stats["dispatches"] += 1
+            stats["batch_sizes"].append(d["b"])
+            variant = d["items"][0].request.variant
+            group = d.get("group")
+            n_dev = group.n_devices if group is not None else 1
+            if d["semantic"]:
+                batched = lat.sharded_inference_delay(variant, d["b"], n_dev)
+            else:
+                batched = sum(lat.sharded_inference_delay(variant, g, n_dev)
+                              for g in d["group_sizes"])
+            stats["sum_batched"] += batched
+            stats["sum_per_request"] += lat.batched_inference_delay(
+                variant, 1) * d["b"]
+            gidx = group.index if group is not None else 0
+            group_costs[gidx] = group_costs.get(gidx, 0.0) + batched
+        stats["sum_tick"] += lat.tick_inference_delay(group_costs.values())
+        plans = []
+        for loop, pending in pendings:
+            slots = scatter.get(id(pending), {})
+            request_detections = [slots.get(i, [])
+                                  for i in range(len(pending.requests))]
+            plans.append((loop, loop.finish_frame(pending, request_detections,
+                                                  defer_nms=True)))
+        rows = [(loop, res) for loop, res in plans if res.detections]
+        keeps = {}
+        if rows:
+            row_dets = [res.detections for _, res in rows]
+            n_pad = buckets.pad_nms_rows(max(len(d) for d in row_dets))
+            if nms_auto_backend(len(plans), n_pad) == "device":
+                boxes, scores, mask = pad_detection_rows(
+                    row_dets, pad_n=buckets.pad_nms_rows,
+                    total_rows=len(plans))
+            else:
+                boxes, scores, mask = pad_detection_rows(row_dets)
+            keep = sph_nms_batch(boxes, scores, mask, iou_threshold=0.6)
+            for r, (_, res) in enumerate(rows):
+                keeps[id(res)] = keep[r, : len(res.detections)]
+        for loop, res in plans:
+            loop.finalize_detections(res, keeps.get(id(res)))
+            stats["frames"] += 1
+            stats["detections"] += len(res.detections)
+            stats["sum_e2e"] += res.planned_latency
+        histories.append([list(loop._history[-1]) for loop in loops])
+    return stats, histories
+
+
+class TestSyncEquivalence:
+    @pytest.mark.parametrize("devices", [0, 8])
+    def test_sync_policy_bit_identical_on_seeded_corpus(self, devices):
+        """The acceptance pin: PodServer(policy=sync) on the seeded
+        8-stream corpus equals the pre-refactor tick loop — stats,
+        detections and NMS trace counts all bit-equal."""
+        n_streams, frames = 8, 8
+        nms_traces = nms_device_trace_count()
+        ref, ref_hist = _reference_tick_loop(n_streams, frames,
+                                             devices=devices)
+        server = _oracle_pod(n_streams, frames=frames, devices=devices,
+                             policy="sync")
+        got_hist = []
+        for f in range(frames):
+            server.step(f)
+            got_hist.append([list(loop._history[-1])
+                             for loop in server.loops])
+        server.flush()  # must be a no-op under sync
+        st = server.stats
+        assert st.frames == ref["frames"] == n_streams * frames
+        assert st.total_detections == ref["detections"]
+        assert st.batch_sizes == ref["batch_sizes"]
+        assert st.dispatches == ref["dispatches"]
+        assert st.sum_batched_inf_s == ref["sum_batched"]
+        assert st.sum_per_request_inf_s == ref["sum_per_request"]
+        assert st.sum_tick_inf_s == ref["sum_tick"]
+        assert st.sum_e2e == ref["sum_e2e"]
+        assert st.sum_plan_value == ref["sum_plan_value"]
+        assert st.carried_requests == 0
+        for fa, fb in zip(ref_hist, got_hist):
+            for da, db in zip(fa, fb):
+                assert len(da) == len(db)
+                for a, b in zip(da, db):
+                    np.testing.assert_array_equal(a.box, b.box)
+                    assert a.category == b.category
+                    assert a.score == b.score
+        # the host-path NMS must not have compiled anything new
+        assert nms_device_trace_count() == nms_traces
+
+    def test_sync_timelines_price_tick_inference_delay_exactly(self):
+        """Per tick, the timeline's barrier charge equals the latency
+        model's tick_inference_delay on the recorded group sums, and
+        the charges sum to the serve stats; no sync dispatch overlaps
+        a tick boundary."""
+        server = _oracle_pod(6, frames=6, devices=8, policy="sync")
+        lat = server.loops[0].latency_model
+        server.run(range(6))
+        total = 0.0
+        for tl in server.timelines:
+            charge = tl.barrier_delay(lat.tick_inference_delay)
+            assert charge == lat.tick_inference_delay(tl.group_costs.values())
+            total += charge
+            for e in tl.events:
+                assert e.launch_s >= tl.start  # no pre-tick launches
+                assert e.carried == 0
+        assert total == server.stats.sum_tick_inf_s
+
+    def test_sync_pod_allocate_stats_unchanged(self):
+        """The pod-allocation path through the policy object matches
+        the old boolean path (same fixed point, same stats)."""
+        a = _oracle_pod(4, frames=4, devices=8,
+                        policy=SyncTickPolicy(pod_allocate=True))
+        sa = a.run(range(4))
+        variants = profiles.make_ladder()[3:5]
+        lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+        costs = [lat._pre(v) + lat._inf(v) for v in variants]
+        loops, backends = [], []
+        for s in range(4):
+            backend = OracleBackend(make_video(n_frames=12,
+                                               n_objects=30 + 5 * (s % 4),
+                                               seed=100 + s))
+            backends.append(backend)
+            loops.append(OmniSenseLoop(variants, lat, backend, budget_s=1.8,
+                                       explore_costs=costs))
+        from repro.serving.placement import VariantPlacement
+
+        placement = VariantPlacement.virtual(variants, 8, cost_fn=lat._inf)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            b = PodServer(loops, backends, max_batch=8, placement=placement,
+                          pod_allocate=True)
+        sb = b.run(range(4))
+        assert sa.pod_ticks == sb.pod_ticks
+        assert sa.pod_rounds == sb.pod_rounds
+        assert sa.sum_plan_value == sb.sum_plan_value
+        assert sa.sum_tick_inf_s == sb.sum_tick_inf_s
+        assert sa.total_detections == sb.total_detections
+
+
+# ---------------------------------------------------------------------------
+# causality: no dispatch before its inputs exist
+# ---------------------------------------------------------------------------
+
+
+class TestCausality:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_launch_after_emission_property(self, seed):
+        self._check_causality(seed)
+
+    def test_launch_after_emission_fixed(self):
+        for seed in (0, 3, 11):
+            self._check_causality(seed)
+
+    @staticmethod
+    def _check_causality(seed):
+        rng = np.random.default_rng(seed)
+        policy = ["sync", "deadline", "async"][seed % 3]
+        frames = int(rng.integers(2, 6))
+        server = _oracle_pod(int(rng.integers(2, 7)), frames=frames,
+                             seed0=int(rng.integers(0, 1000)),
+                             devices=int(rng.choice([0, 8])),
+                             policy=policy)
+        server.run(range(frames))
+        for tl in server.timelines:
+            for e in tl.events:
+                # inputs exist before the dispatch launches, and the
+                # launch respects the group serialisation
+                assert e.launch_s >= e.emitted_s
+                assert e.complete_s == e.launch_s + e.cost_s
+        assert not len(server.queues) and not server._inflight
+
+
+# ---------------------------------------------------------------------------
+# deadline ordering
+# ---------------------------------------------------------------------------
+
+
+def _queued(variant, deadline, slot=0, age=0):
+    return QueuedRequest(
+        request=InferenceRequest(
+            region=sroi_mod.SRoI(center=(0.0, 0.0), fov=(1.0, 1.0)),
+            variant=variant, slot=slot, special=False),
+        owner=None, backend=None, deadline=deadline, age=age)
+
+
+class TestDeadlineOrder:
+    def test_tightest_deadline_first_then_weighted_sjf(self):
+        variants = profiles.make_ladder(seed=0)
+        tiny, csp = variants[0], variants[2]
+        q = VariantQueues(ShapeBuckets((1, 2, 4, 8)))
+        for i in range(3):
+            q.put(_queued(csp, 1.8, slot=i))
+        for i in range(2):
+            q.put(_queued(tiny, 0.5, slot=3 + i))
+        ops = DeadlineOrderPolicy().plan_drain(
+            q, q.buckets, None, GroupClock(),
+            chunk_cost=lambda name, b: (0.5 if "csp" in name else 0.05) * b)
+        assert [(o.variant, o.take) for o in ops] == [
+            (tiny.name, 2), (csp.name, 3)]
+        # equal deadlines: cost PER REQUEST decides (a cheap b=1 chunk
+        # must not jump a b=8 batch serving eight frames)
+        q2 = VariantQueues(ShapeBuckets((1, 2, 4, 8)))
+        for i in range(8):
+            q2.put(_queued(csp, 1.0, slot=i))
+        q2.put(_queued(tiny, 1.0, slot=8))
+        ops = DeadlineOrderPolicy().plan_drain(
+            q2, q2.buckets, None, GroupClock(),
+            chunk_cost=lambda name, b:
+                (0.1 * (1 + (b - 1) * 0.15)) if "csp" in name else 0.09)
+        # csp batch of 8: 0.205/8 = 0.026 per request < tiny's 0.09
+        assert [(o.variant, o.take) for o in ops] == [
+            (csp.name, 8), (tiny.name, 1)]
+
+    def test_same_variant_chunks_stay_fifo(self):
+        """A variant's own chunks never reorder (FIFO pops would hand
+        the sorted keys the wrong items)."""
+        variants = profiles.make_ladder(seed=0)
+        csp = variants[2]
+        q = VariantQueues(ShapeBuckets((1, 2, 4, 8)))
+        for i in range(8):  # first chunk: loose deadlines
+            q.put(_queued(csp, 2.0, slot=i))
+        q.put(_queued(csp, 0.1, slot=8))  # residual chunk: tight
+        ops = DeadlineOrderPolicy().plan_drain(
+            q, q.buckets, None, GroupClock(),
+            chunk_cost=lambda name, b: 0.1 * b)
+        assert [(o.variant, o.take) for o in ops] == [
+            (csp.name, 8), (csp.name, 1)]
+
+    def test_blocking_chunk_inherits_blocked_deadline(self):
+        """EDF with precedence: a loose chunk standing (FIFO) in front
+        of a tight chunk of the same variant must sort with the TIGHT
+        key — a re-slotting scheme that lets the loose chunk squat on
+        the tight chunk's won position would run a deadline-2.0 chunk
+        before another variant's deadline-1.6 one."""
+        variants = profiles.make_ladder(seed=0)
+        v, w = variants[2], variants[3]
+        q = VariantQueues(ShapeBuckets((1, 2, 4, 8)))
+        for i in range(8):
+            q.put(_queued(v, 2.0, slot=i))      # v chunk 1: loose
+        q.put(_queued(v, 1.2, slot=8))          # v chunk 2: tight
+        q.put(_queued(w, 1.6, slot=9))          # w: in between
+        ops = DeadlineOrderPolicy().plan_drain(
+            q, q.buckets, None, GroupClock(),
+            chunk_cost=lambda name, b: 0.1 * b)
+        # v's whole FIFO chain inherits the 1.2 deadline it blocks, so
+        # BOTH v chunks precede w — never v(2.0), w(1.6), v(1.2)
+        assert [(o.variant, o.take) for o in ops] == [
+            (v.name, 8), (v.name, 1), (w.name, 1)]
+
+    def test_deadline_run_same_results_lower_event_e2e(self):
+        """On the cheap-sorts-last ladder the deadline order keeps the
+        exact detections and tick cost of sync but completes frames
+        earlier on the event clock."""
+        ladder = profiles.make_ladder()
+        variants = [ladder[0], ladder[4]]  # tiny sorts AFTER p6
+
+        def budget_fn(s):
+            return 1.2 + 0.4 * (s % 3)
+
+        runs = {}
+        for policy in ("sync", "deadline"):
+            server = _oracle_pod(8, frames=8, policy=policy,
+                                 variants=variants, budget_fn=budget_fn)
+            runs[policy] = server.run(range(8))
+        sync, dl = runs["sync"], runs["deadline"]
+        assert dl.total_detections == sync.total_detections
+        assert dl.sum_tick_inf_s == sync.sum_tick_inf_s
+        assert sorted(dl.batch_sizes) == sorted(sync.batch_sizes)
+        assert float(np.mean(dl.event_e2e)) < float(np.mean(sync.event_e2e))
+
+
+# ---------------------------------------------------------------------------
+# async drain: carry-over + overlap pricing
+# ---------------------------------------------------------------------------
+
+
+class TestAsyncDrain:
+    def test_residual_withheld_only_when_busy_or_critical(self):
+        variants = profiles.make_ladder(seed=0)
+        tiny, csp = variants[0], variants[2]
+        buckets = ShapeBuckets((1, 2, 4, 8))
+
+        def fill(q):
+            for i in range(9):  # csp: chunks [8, 1] — 1 is residual
+                q.put(_queued(csp, 1.8, slot=i))
+            for i in range(2):  # tiny: single sub-bucket chunk [2]
+                q.put(_queued(tiny, 1.8, slot=9 + i))
+
+        cost = {csp.name: 0.5, tiny.name: 0.01}
+
+        def chunk_cost(name, b):
+            return cost[name] * b
+
+        # single implicit group: it is trivially the critical path, so
+        # both residuals carry
+        q = VariantQueues(buckets)
+        fill(q)
+        ops = AsyncDrainPolicy().plan_drain(q, buckets, None, GroupClock(),
+                                            chunk_cost=chunk_cost)
+        assert [(o.variant, o.take) for o in ops] == [(csp.name, 8)]
+
+        # distinct groups: only the critical (expensive) group's
+        # residual carries; the idle cheap group dispatches in full
+        class _Group:
+            def __init__(self, index):
+                self.index = index
+                self.n_devices = 1
+
+        class _Placement:
+            def group_for(self, name):
+                return _Group(0 if "csp" in name else 1)
+
+        q = VariantQueues(buckets)
+        fill(q)
+        ops = AsyncDrainPolicy().plan_drain(q, buckets, _Placement(),
+                                            GroupClock(),
+                                            chunk_cost=chunk_cost)
+        assert [(o.variant, o.take) for o in ops] == [
+            (csp.name, 8), (tiny.name, 2)]
+
+        # a busy group carries its residual regardless of load — and a
+        # heavy enough carry-in shifts the critical path, so the other
+        # group's residual now dispatches in full
+        q = VariantQueues(buckets)
+        fill(q)
+        clock = GroupClock()
+        clock.dispatch(1, 5.0)  # tiny's group still busy, now critical
+        ops = AsyncDrainPolicy().plan_drain(q, buckets, _Placement(), clock,
+                                            chunk_cost=chunk_cost)
+        assert [(o.variant, o.take) for o in ops] == [
+            (csp.name, 8), (csp.name, 1)]
+
+    def test_carry_age_bound_forces_dispatch(self):
+        """A request carried once (age >= max_carry) pins its chunk
+        into the next drain — no starvation."""
+        variants = profiles.make_ladder(seed=0)
+        csp = variants[2]
+        buckets = ShapeBuckets((1, 2, 4, 8))
+        q = VariantQueues(buckets)
+        q.put(_queued(csp, 1.8, slot=0, age=1))
+        ops = AsyncDrainPolicy().plan_drain(q, buckets, None, GroupClock(),
+                                            chunk_cost=lambda n, b: 0.1)
+        assert [(o.variant, o.take) for o in ops] == [(csp.name, 1)]
+
+    def test_carried_requests_replay_their_emission_frame(self):
+        """A ``set_frame`` (simulation) backend must sample the ground
+        truth of the frame that EMITTED each request, not whatever
+        frame the tick advanced to — carried requests would otherwise
+        observe the future (the real pixel backend is immune: the
+        pixels travel inside the request)."""
+        variants = profiles.make_ladder(seed=0)
+        csp = variants[2]
+
+        class _FrameRecorder:
+            def __init__(self):
+                self.frame = None
+                self.calls = []
+
+            def set_frame(self, f):
+                self.frame = f
+
+            def infer_srois_batched(self, items, variant):
+                self.calls.append((self.frame, len(items)))
+                return [[] for _ in items]
+
+        backend = _FrameRecorder()
+        backend.set_frame(7)  # the tick has advanced past emission
+        q = VariantQueues(ShapeBuckets((1, 2, 4, 8)))
+        for i in range(3):  # carried from frame 5
+            item = _queued(csp, 1.8, slot=i, age=1)
+            item.backend, item.frame_idx = backend, 5
+            q.put(item)
+        for i in range(2):  # this tick's emission, frame 7
+            item = _queued(csp, 1.8, slot=3 + i)
+            item.backend, item.frame_idx = backend, 7
+            q.put(item)
+        results, dispatches = q.drain_ops([(csp.name, 5)])
+        assert len(results) == 5
+        assert len(dispatches) == 1  # still ONE dispatch in the schedule
+        # ...executed as two replays, each at its emission frame
+        assert backend.calls == [(5, 3), (7, 2)]
+
+    def test_flush_closed_form_matches_event_charge(self):
+        """The flush charge is the latency model's tick_overlap_delay
+        closed form (carry-in + serialised drain, max over groups) —
+        it must agree with the event clock it generalises."""
+        server = _oracle_pod(8, frames=6, devices=8, policy="async")
+        lat = server.loops[0].latency_model
+        for f in range(6):
+            server.step(f)
+        n_ticks = len(server.timelines)
+        before = server.stats.sum_tick_inf_s
+        start = server.clock.now
+        server.flush()
+        for tl in server.timelines[n_ticks:]:
+            np.testing.assert_allclose(
+                lat.tick_overlap_delay(tl.group_costs, tl.carry_in),
+                max((e.complete_s for e in tl.events), default=tl.start)
+                - tl.start, rtol=1e-12)
+        # the flush billed the whole remaining horizon
+        assert server.stats.sum_tick_inf_s - before == pytest.approx(
+            server.clock.horizon() - start)
+
+    def test_drain_ops_ages_leftovers(self):
+        variants = profiles.make_ladder(seed=0)
+        csp = variants[2]
+        q = VariantQueues(ShapeBuckets((1, 2, 4, 8)))
+        backend = OracleBackend(make_video(n_frames=4, n_objects=5, seed=0))
+        for i in range(3):
+            item = _queued(csp, 1.8, slot=i)
+            item.backend = backend
+            q.put(item)
+        q.drain_ops([(csp.name, 2)])
+        assert [it.age for it in q.peek(csp.name)] == [1]
+        with pytest.raises(ValueError):
+            q.drain_ops([(csp.name, 5)])  # more than queued
+        with pytest.raises(ValueError):
+            q.drain_ops([(csp.name, 0)])
+
+    def test_async_conserves_frames_and_settles(self):
+        server = _oracle_pod(8, frames=8, devices=8, policy="async")
+        stats = server.run(range(8))
+        assert stats.frames == 64  # every emitted frame finishes
+        assert stats.total_detections > 0
+        assert not len(server.queues) and not server._inflight
+        assert stats.carried_requests > 0  # the policy actually carried
+        # carried dispatches really overlapped: some launch strictly
+        # inside a tick (after its start) or before the barrier would
+        # have allowed
+        carried_events = [e for tl in server.timelines for e in tl.events
+                          if e.carried]
+        assert carried_events
+
+    def test_async_strictly_undercuts_sync_mean_tick(self):
+        """The nightly gate's test-scale twin: at 8 streams / 2
+        variants the async policy's mean event-clock tick is strictly
+        below the sync barrier's."""
+        sync = _oracle_pod(8, frames=8, devices=8, policy="sync")
+        asy = _oracle_pod(8, frames=8, devices=8, policy="async")
+        ss, sa = sync.run(range(8)), asy.run(range(8))
+        assert sa.mean_tick < ss.mean_tick
+        # fewer dispatch fixed costs: carried residuals merged
+        assert sa.dispatches < ss.dispatches
+        assert sa.frames == ss.frames
+
+    def test_async_max_carry_validation(self):
+        with pytest.raises(ValueError):
+            AsyncDrainPolicy(max_carry=0)
+
+
+# ---------------------------------------------------------------------------
+# shared projected load (solve_pod export)
+# ---------------------------------------------------------------------------
+
+
+class TestProjectedLoadShared:
+    def test_solve_pod_exports_group_load(self):
+        from repro.serving import pod_allocation
+
+        variants = profiles.make_ladder()[3:5]
+        lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+        rng = np.random.default_rng(0)
+        problems = []
+        for _ in range(3):
+            r = 2
+            acc = np.vstack([np.zeros(r),
+                             rng.uniform(0.2, 0.9, (len(variants), r))])
+            d_pre = np.vstack([np.zeros(r),
+                               rng.uniform(0.01, 0.1, (len(variants), r))])
+            d_inf = np.vstack([np.zeros(r),
+                               rng.uniform(0.1, 0.6, (len(variants), r))])
+            problems.append(pod_allocation.StreamProblem(acc, d_pre, d_inf,
+                                                         budget=1.5))
+        sol = pod_allocation.solve_pod(problems, variants, lat)
+        assert sol.projected_load  # exported
+        assert sol.projected_tick == max(sol.projected_load.values())
+        load = pod_allocation.projected_group_load(
+            sol.counts, variants, lat, ShapeBuckets())
+        assert load == sol.projected_load
+
+    def test_policy_consumes_exported_load_plus_carried(self):
+        """With a projection supplied, the async policy uses it for
+        this tick's emissions instead of recomputing — and adds ONLY
+        the carried (age > 0) queue items the projection cannot know
+        about, on the same chunk curve."""
+        policy = AsyncDrainPolicy()
+        variants = profiles.make_ladder(seed=0)
+        csp = variants[2]
+        empty = VariantQueues(ShapeBuckets((1, 2, 4, 8)))
+        load = policy._group_load(empty, empty.buckets, None,
+                                  lambda n, b: 0.1 * b, {0: 1.25, 1: 0.5})
+        assert load == {0: 1.25, 1: 0.5}  # nothing carried: verbatim
+        q = VariantQueues(ShapeBuckets((1, 2, 4, 8)))
+        q.put(_queued(csp, 1.8, slot=0, age=1))   # carried residual
+        q.put(_queued(csp, 1.8, slot=1, age=0))   # this tick's emission
+        load = policy._group_load(q, q.buckets, None,
+                                  lambda n, b: 0.1 * b, {0: 1.25})
+        assert load == {0: pytest.approx(1.25 + 0.1)}  # + carried only
+        # no projection: the WHOLE queue is priced from the curve
+        load = policy._group_load(q, q.buckets, None,
+                                  lambda n, b: 0.1 * b, None)
+        assert load == {0: pytest.approx(0.2)}
+
+    def test_pod_allocate_feeds_projection_to_drain(self):
+        server = _oracle_pod(4, frames=3, devices=8,
+                             policy=AsyncDrainPolicy(pod_allocate=True))
+        seen = []
+        orig = server.policy.plan_drain
+
+        def spy(*args, **kwargs):
+            seen.append(kwargs.get("projected_load"))
+            return orig(*args, **kwargs)
+
+        server.policy.plan_drain = spy
+        server.run(range(3))
+        assert seen and all(pl is not None for pl in seen)
+
+
+# ---------------------------------------------------------------------------
+# real replica groups: one async-drain tick under the multidevice lane
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.multidevice
+class TestAsyncMultiDevice:
+    def test_async_carry_over_on_real_replica_groups(self):
+        """One async-drain carry cycle on REAL sharded replica groups:
+        residuals carried past a tick still execute through the
+        shard_map path and every frame finishes."""
+        import jax
+
+        if len(jax.devices()) < 8:
+            pytest.skip("needs 8 local devices (XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=8)")
+        import dataclasses as dc
+
+        from repro.models import detector as det_mod
+        from repro.serving.placement import VariantPlacement
+        from repro.serving.scheduler import JaxDetectorBackend
+
+        rng = np.random.default_rng(5)
+        n_streams, n_frames = 4, 3
+        cfgs = [dc.replace(det_mod.PAPER_LADDER[i], input_size=64,
+                           n_classes=8) for i in range(2)]
+        params = [det_mod.init_params(jax.random.PRNGKey(i), c)
+                  for i, c in enumerate(cfgs)]
+        variants = profiles.make_ladder(n_categories=8, seed=0)[:2]
+        backend = JaxDetectorBackend(
+            cfgs, params, conf=0.01, use_kernel=False, max_det=4,
+            buckets=ShapeBuckets((1, 2, 4, 8), resolutions=(64,)))
+        lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+        frames = {(s, f): rng.random((64, 128, 3)).astype(np.float32)
+                  for s in range(n_streams) for f in range(n_frames)}
+        loops = []
+        for s in range(n_streams):
+            loop = OmniSenseLoop(variants, lat, backend, budget_s=4.0,
+                                 n_categories=8, explore_every=0)
+            loop.seed_history([sroi_mod.Detection(
+                box=np.array([rng.uniform(-2, 2), rng.uniform(-0.8, 0.8),
+                              0.5, 0.5]), category=int(rng.integers(8)),
+                score=0.9) for _ in range(2)])
+            loops.append(loop)
+        placement = VariantPlacement(variants, devices=jax.devices()[:8])
+        server = PodServer(loops, [backend] * n_streams, max_batch=8,
+                           frame_source=lambda s, f: frames[(s, f)],
+                           placement=placement, policy="async")
+        stats = server.run(range(n_frames))
+        assert stats.frames == n_streams * n_frames
+        assert not len(server.queues) and not server._inflight
+        # the sharded jit cache stays bounded by the bucket ladder even
+        # with carried chunks changing batch shapes across ticks
+        n_buckets = len(backend.buckets.batch_sizes)
+        assert backend.trace_count <= 2 * n_buckets * len(cfgs)
