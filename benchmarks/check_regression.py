@@ -24,6 +24,12 @@ gated too: at >= ``--pod-min-streams`` streams the async-drain policy's
 mean event-clock tick must STRICTLY undercut the sync barrier's
 (deterministic oracle pod, gated exactly).
 
+When the snapshots carry an ``open_grid`` section (PR 6,
+``serving_bench.py --open-loop``), the open-loop admission floor is
+gated: SLO-aware admission must STRICTLY dominate admit-all on useful
+goodput at every saturated point and match it — shedding nothing — at
+every light point (deterministic seeded traffic, gated exactly).
+
     python benchmarks/check_regression.py \
         --baseline BENCH_SERVE.json --fresh fresh_serve.json
 
@@ -131,6 +137,54 @@ def policy_async_dominates(fresh: dict, min_streams: int = 8,
     return ok
 
 
+def open_slo_dominates(fresh: dict, log=print) -> bool:
+    """The open-loop admission acceptance floor (strict, not a band).
+
+    Every fresh ``open_grid`` entry (``serving_bench.py --open-loop``)
+    compares SLO-aware admission against admit-all on USEFUL goodput
+    (within-SLO frames that did inference work — empty-plan frames
+    complete instantly and must not count):
+
+      * ``saturated`` points: SLO admission must STRICTLY dominate
+        (shedding keeps served frames inside the SLO envelope while
+        admit-all's queue — and its E2E — grow without bound);
+      * ``light`` points: SLO admission must match admit-all exactly
+        on useful goodput while shedding nothing (``rejected == 0``)
+        — a policy that pays for its saturation wins by turning away
+        comfortable load has regressed.
+
+    The sweep is deterministic (seeded arrival clocks, oracle pod,
+    calibrated latency model — no wall clock), so exact gating does
+    not flap.
+    """
+    entries = fresh.get("open_grid", [])
+    if not entries:
+        log("check_regression: no open_grid entries")
+        return False
+    ok = True
+    for e in entries:
+        aa = e["admit_all"]["useful_goodput"]
+        sl = e["slo"]["useful_goodput"]
+        if e["load"] == "saturated":
+            good = sl > aa
+            want = "slo useful goodput must strictly exceed admit-all"
+        else:
+            good = sl >= aa and e["slo"]["rejected"] == 0
+            want = ("slo useful goodput must match admit-all "
+                    "with nothing rejected")
+        log(f"  open streams={e['streams']:>3} {e['load']:>9}  "
+            f"admit-all useful={aa}  slo useful={sl}  "
+            f"slo rejected={e['slo']['rejected']}"
+            f"{'' if good else '  <-- FAILS dominance'}")
+        if not good:
+            log(f"::error::open-loop SLO admission fails at "
+                f"{e['streams']} streams ({e['load']}): {want} "
+                f"(admit-all={aa}, slo={sl}, "
+                f"rejected={e['slo']['rejected']})")
+            ok = False
+    return ok
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", default="BENCH_SERVE.json",
@@ -175,6 +229,16 @@ def main(argv=None) -> int:
     elif fresh.get("policy_grid"):
         # async drain must strictly undercut the sync barrier
         ok = policy_async_dominates(fresh, args.pod_min_streams) and ok
+    if baseline.get("open_grid") and not fresh.get("open_grid"):
+        # armed open-loop gate, missing fresh grid: the --open-loop
+        # bench step did not run (or its merge failed) — fail loudly
+        print("::error::baseline has open_grid but fresh snapshot "
+              "does not; did the --open-loop bench step run?")
+        ok = False
+    elif fresh.get("open_grid"):
+        # SLO admission must dominate admit-all at saturation and
+        # match it (shedding nothing) under light load
+        ok = open_slo_dominates(fresh) and ok
     return 0 if ok else 1
 
 

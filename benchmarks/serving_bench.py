@@ -36,6 +36,18 @@ coupled allocator must be strictly better on the accuracy proxy at
 equal-or-lower tick latency.  Results merge into ``BENCH_SERVE.json``
 under ``pod_grid`` without touching the wall-clock ``grid``.
 
+``--open-loop`` (PR 6) measures the arrival-clocked OPEN-LOOP sweep:
+the same oracle pod fed seeded open-loop traffic
+(``repro.serving.traffic``) at a light and a saturated offered-load
+point per stream count, served under admit-all vs SLO-aware admission
+(``PodServer.run_open_loop``).  The gated metric is useful goodput —
+within-SLO frames that did inference work — plus queueing delay, p99
+E2E and shedding counts.  Deterministic (seeded arrival clocks, oracle
+backend, calibrated model), so ``check_regression.py`` gates exactly:
+SLO admission must strictly dominate admit-all at saturation and match
+it under light load.  Results merge into ``BENCH_SERVE.json`` under
+``open_grid``.
+
 Sweeps stream counts and emits one CSV line per config plus
 ``BENCH_SERVE.json`` so future snapshots track the trajectory (the
 nightly regression gate ``benchmarks/check_regression.py`` compares
@@ -46,6 +58,7 @@ to the measurement.
 
     PYTHONPATH=src:. python benchmarks/serving_bench.py --devices 8
     PYTHONPATH=src:. python benchmarks/serving_bench.py --pod-allocate
+    PYTHONPATH=src:. python benchmarks/serving_bench.py --open-loop
 """
 
 from __future__ import annotations
@@ -73,6 +86,26 @@ POLICY_GRID = (2, 4, 8, 16)     # streams for the drain-policy frontier
 POLICY_FRAMES = 12
 POLICY_DEVICES = 1              # one shared group: ordering + carry both bite
 POLICIES = ("sync", "deadline", "async")
+
+OPEN_GRID = (8, 16, 32)         # streams for the open-loop offered-load sweep
+OPEN_DEVICES = POD_DEVICES
+OPEN_SLO_S = 2.0
+# 0.9s caps a frame's plan at one p5-896 forward (~0.66s), so a solo
+# frame — and even a light-load pair collision — fits the 2.0s SLO;
+# the saturated point then measures offered load, not plan size
+OPEN_BUDGET_S = 0.9
+OPEN_ADMISSIONS = ("admit-all", "slo")
+# saturated: per-stream fps far beyond pod capacity, mild jitter
+OPEN_SAT_FPS = 2.0
+OPEN_SAT_JITTER = 0.1
+OPEN_SAT_HORIZON_S = 40.0
+# light: pod-wide offered rate held constant as streams grow (the pod's
+# capacity does not scale with stream count), long horizon so every
+# stream's predictor warms past its first empty-plan frames, jitter so
+# equal-rate clocks don't collide at every emission
+OPEN_LIGHT_POD_FPS = 0.6
+OPEN_LIGHT_JITTER = 0.3
+OPEN_LIGHT_HORIZON_S = 160.0
 
 
 def _make_backend(n_variants: int = 2):
@@ -275,14 +308,15 @@ def _policy_variants():
     return [ladder[0], ladder[4]]
 
 
-def _pod_serve(n_streams: int, pod_allocate: bool, frames: int,
-               devices: int, policy: str = "sync", variants=None,
-               budget_fn=None):
-    """One oracle pod run, deterministic (no wall clock in any metric).
+def _build_pod(n_streams: int, frames: int, devices: int,
+               policy: str = "sync", pod_allocate: bool = False,
+               variants=None, budget_fn=None, admission=None):
+    """One deterministic oracle pod (no wall clock in any metric).
 
     ``policy`` names a ``repro.serving.runtime`` drain policy;
     ``budget_fn(stream_idx)`` optionally spreads per-stream latency
-    budgets (the deadline policy's ordering signal).
+    budgets (the deadline policy's ordering signal); ``admission``
+    names the policy's admission hook (open-loop runs only).
     """
     from repro.core.omnisense import OmniSenseLoop
     from repro.data.synthetic import make_video
@@ -307,8 +341,17 @@ def _pod_serve(n_streams: int, pod_allocate: bool, frames: int,
                                    budget_s=budget,
                                    explore_costs=costs))
     placement = VariantPlacement.virtual(variants, devices, cost_fn=lat._inf)
-    server = PodServer(loops, backends, max_batch=8, placement=placement,
-                       policy=make_policy(policy, pod_allocate=pod_allocate))
+    return PodServer(loops, backends, max_batch=8, placement=placement,
+                     policy=make_policy(policy, pod_allocate=pod_allocate,
+                                        admission=admission))
+
+
+def _pod_serve(n_streams: int, pod_allocate: bool, frames: int,
+               devices: int, policy: str = "sync", variants=None,
+               budget_fn=None):
+    server = _build_pod(n_streams, frames, devices, policy=policy,
+                        pod_allocate=pod_allocate, variants=variants,
+                        budget_fn=budget_fn)
     return server.run(range(frames))
 
 
@@ -434,6 +477,103 @@ def run_policy_grid(csv=print, grid=POLICY_GRID, json_path=SERVE_JSON_PATH,
     return out
 
 
+def _open_serve(n_streams: int, admission: str, fps: float, jitter: float,
+                horizon_s: float, devices: int = OPEN_DEVICES):
+    """One open-loop run: arrival-clocked traffic into the oracle pod."""
+    from repro.serving.traffic import ArrivalProcess
+
+    frames = max(16, int(horizon_s * fps) + 8)
+    server = _build_pod(n_streams, frames, devices,
+                        budget_fn=lambda s: OPEN_BUDGET_S,
+                        admission=None if admission == "admit-all"
+                        else admission)
+    traffic = ArrivalProcess(n_streams, fps=fps, jitter=jitter, seed=0,
+                             horizon_s=horizon_s)
+    return server.run_open_loop(traffic, slo_s=OPEN_SLO_S)
+
+
+def _open_metrics(stats, horizon_s: float) -> dict:
+    pct = stats.event_e2e_percentiles()
+    return dict(
+        arrivals=stats.arrivals,
+        admitted=stats.admitted,
+        degraded=stats.degraded,
+        rejected=stats.rejected,
+        missed=stats.missed,
+        empty_frames=stats.empty_frames,
+        slo_violations=stats.slo_violations,
+        useful_goodput=stats.useful_goodput_frames,
+        goodput_fps=round(stats.useful_goodput_frames / horizon_s, 4),
+        mean_queue_delay_s=round(stats.mean_queue_delay, 4),
+        p99_e2e_s=round(pct[99], 4),
+    )
+
+
+def run_open_grid(csv=print, grid=OPEN_GRID, json_path=SERVE_JSON_PATH,
+                  devices: int = OPEN_DEVICES) -> dict:
+    """The open-loop offered-load sweep (``--open-loop``): the same
+    arrival-clocked traffic served under admit-all vs SLO-aware
+    admission at every stream count, at a light and a saturated load
+    point.
+
+    The gated metric is USEFUL goodput — within-SLO frames that did
+    inference work.  An admitted frame with an empty plan completes
+    instantly (event E2E 0): under congestion collapse the starved
+    predictor plans nothing for most frames, so raw goodput would
+    REWARD admit-all for collapsing.  Fully deterministic (oracle
+    backend, seeded arrival clocks, calibrated latency model — no wall
+    clock), so ``check_regression.py`` gates exactly: at saturation
+    SLO admission must strictly dominate admit-all on useful goodput;
+    at light load it must match it while shedding nothing.  Merges an
+    ``open_grid`` section into ``json_path`` without touching
+    ``grid``/``pod_grid``/``policy_grid``.
+    """
+    points = (
+        ("light", lambda n: OPEN_LIGHT_POD_FPS / n,
+         OPEN_LIGHT_JITTER, OPEN_LIGHT_HORIZON_S),
+        ("saturated", lambda n: OPEN_SAT_FPS,
+         OPEN_SAT_JITTER, OPEN_SAT_HORIZON_S),
+    )
+    entries = []
+    for n_streams in grid:
+        for load, fps_fn, jitter, horizon_s in points:
+            fps = fps_fn(n_streams)
+            runs = {adm: _open_serve(n_streams, adm, fps, jitter, horizon_s,
+                                     devices)
+                    for adm in OPEN_ADMISSIONS}
+            entry = dict(
+                streams=n_streams, load=load,
+                fps_per_stream=round(fps, 4),
+                offered_fps=round(fps * n_streams, 4),
+                jitter=jitter, horizon_s=horizon_s,
+                admit_all=_open_metrics(runs["admit-all"], horizon_s),
+                slo=_open_metrics(runs["slo"], horizon_s))
+            entry["useful_goodput_ratio"] = round(
+                entry["slo"]["useful_goodput"]
+                / max(entry["admit_all"]["useful_goodput"], 1), 4)
+            entries.append(entry)
+            csv(f"serving,open_s{n_streams}_{load},useful_goodput_ratio,"
+                f"{entry['useful_goodput_ratio']},"
+                f"admit_all={entry['admit_all']['useful_goodput']} "
+                f"slo={entry['slo']['useful_goodput']} "
+                f"rejected={entry['slo']['rejected']} "
+                f"p99={entry['slo']['p99_e2e_s']}")
+    out = {}
+    if json_path and os.path.exists(json_path):
+        with open(json_path) as f:
+            out = json.load(f)
+    out["open_loop"] = {
+        "variants": [v.name for v in _pod_variants()],
+        "devices": devices, "budget_s": OPEN_BUDGET_S,
+        "slo_s": OPEN_SLO_S, "admissions": list(OPEN_ADMISSIONS)}
+    out["open_grid"] = entries
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        csv(f"serving,open_json,path,0,{json_path}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--devices", type=int, default=0,
@@ -454,8 +594,19 @@ def main() -> None:
                          "mean tick + E2E percentiles into a policy_grid "
                          "section (virtual device slots — no jax devices "
                          "needed)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="measure the open-loop offered-load sweep instead: "
+                         "arrival-clocked traffic (light + saturated points "
+                         "per stream count) under admit-all vs SLO-aware "
+                         "admission, recording useful-goodput/queueing/"
+                         "shedding into an open_grid section (virtual "
+                         "device slots — no jax devices needed)")
     ap.add_argument("--json", default=SERVE_JSON_PATH)
     args = ap.parse_args()
+    if args.open_loop:
+        run_open_grid(json_path=args.json,
+                      devices=args.devices or OPEN_DEVICES)
+        return
     if args.policy:
         # the grid always measures all policies — a lone async number
         # could not show dominance over sync

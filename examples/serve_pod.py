@@ -18,6 +18,16 @@ event-clock runtime (``repro.serving.runtime``):
     PYTHONPATH=src python examples/serve_pod.py --policy deadline  # EDF order
     PYTHONPATH=src python examples/serve_pod.py --policy async     # carry-over
 
+Since PR 6 the pod can also be fed OPEN-LOOP, arrival-clocked traffic
+(``repro.serving.traffic``): each stream's camera ticks at its own
+seeded-jittered fps, the event clock advances to each arrival instead
+of a global frame barrier, a frame whose predecessor still occupies
+the depth-1 camera buffer is counted missed, and every arrival passes
+the policy's admission hook against the SLO envelope:
+
+    PYTHONPATH=src python examples/serve_pod.py --open-loop \
+        --fps 0.5 --jitter 0.2 --slo 2.0 --admission slo
+
 The oracle pod prices the device-aware tick model on virtual device
 slots, so this runs anywhere without touching an accelerator.  The
 REAL shard_map-sharded detector path needs actual jax devices; on a
@@ -42,7 +52,9 @@ from repro.serving.placement import VariantPlacement
 from repro.serving.runtime import make_policy
 from repro.serving.scheduler import OmniSenseLatencyModel, OracleBackend
 from repro.serving.server import (PodServer, format_group_report,
+                                  format_open_loop_report,
                                   format_pod_allocation_report)
+from repro.serving.traffic import ArrivalProcess
 
 
 def main():
@@ -53,6 +65,21 @@ def main():
     ap.add_argument("--policy", choices=("sync", "deadline", "async"),
                     default="sync",
                     help="drain policy of the event-clock serving runtime")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="feed arrival-clocked open-loop traffic instead of "
+                         "the closed-loop frame barrier (per-stream fps "
+                         "clocks, admission control, SLO accounting)")
+    ap.add_argument("--fps", type=float, default=0.5,
+                    help="per-stream arrival rate for --open-loop")
+    ap.add_argument("--jitter", type=float, default=0.2,
+                    help="lognormal sigma on open-loop inter-arrival times")
+    ap.add_argument("--slo", type=float, default=2.0,
+                    help="end-to-end SLO for open-loop goodput accounting")
+    ap.add_argument("--admission", choices=("admit-all", "slo"),
+                    default="admit-all",
+                    help="open-loop admission policy: admit everything, or "
+                         "degrade/reject when projected load exceeds the "
+                         "SLO envelope")
     args = ap.parse_args()
 
     variants = profiles.make_ladder()
@@ -74,11 +101,22 @@ def main():
     # each tick by the fixed-point pod-level allocator (amortized
     # batched costs + per-group queue depth/utilisation), so streams
     # prefer variants whose replica groups are idle instead of
-    # planning solo
-    policy = make_policy(args.policy, pod_allocate=True)
+    # planning solo.  The fixed point is tick-batch-synchronous, so
+    # the arrival-driven open loop runs the per-stream allocator with
+    # the admission hook instead.
+    policy = make_policy(args.policy, pod_allocate=not args.open_loop,
+                         admission=args.admission if args.open_loop
+                         else None)
     server = PodServer(loops, backends, max_batch=8, placement=placement,
                        policy=policy)
-    stats = server.run(range(args.frames))
+    if args.open_loop:
+        horizon_s = args.frames / args.fps
+        traffic = ArrivalProcess(args.streams, fps=args.fps,
+                                 jitter=args.jitter, seed=0,
+                                 horizon_s=horizon_s)
+        stats = server.run_open_loop(traffic, slo_s=args.slo)
+    else:
+        stats = server.run(range(args.frames))
 
     print(f"streams: {args.streams}, frames/stream: {args.frames}, "
           f"policy: {stats.policy}")
@@ -102,7 +140,11 @@ def main():
           f"{stats.carried_requests} carried requests")
     for line in format_group_report(stats, placement):
         print(line)
-    print(format_pod_allocation_report(stats))
+    if args.open_loop:
+        for line in format_open_loop_report(stats, horizon_s):
+            print(line)
+    else:
+        print(format_pod_allocation_report(stats))
     print("\npod serving loop OK")
 
 

@@ -38,6 +38,18 @@ a ``DeprecationWarning`` (never a silent remap):
     PYTHONPATH=src python -m repro.launch.serve --streams 8 --devices 8 \
         --policy sync --pod-allocate
 
+``--open-loop`` (PR 6) feeds the pod arrival-clocked OPEN-LOOP traffic
+(``repro.serving.traffic``) instead of the closed-loop frame barrier:
+each stream's camera ticks at ``--fps`` with seeded lognormal
+``--jitter``, a frame whose predecessor still occupies the depth-1
+camera buffer is counted missed (never fabricated), and every arrival
+passes the policy's admission hook against the ``--slo`` envelope —
+``--admission slo`` degrades or rejects when the projected queueing
+load would blow it:
+
+    PYTHONPATH=src python -m repro.launch.serve --streams 8 \
+        --open-loop --fps 0.5 --jitter 0.2 --slo 2.0 --admission slo
+
 The REAL shard_map-sharded detector path is exercised by
 ``benchmarks/serving_bench.py --devices 8`` and the `multidevice` test
 lane (both force fake host devices via
@@ -80,7 +92,27 @@ def main() -> None:
                          "costs and group utilisation (the fixed-point "
                          "pod-level allocator; an admission property of "
                          "the --policy object since the runtime refactor)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="feed arrival-clocked open-loop traffic "
+                         "(repro.serving.traffic) instead of the "
+                         "closed-loop frame barrier: per-stream fps "
+                         "clocks, depth-1 camera buffer, admission "
+                         "control, SLO goodput accounting")
+    ap.add_argument("--fps", type=float, default=0.5,
+                    help="per-stream arrival rate for --open-loop")
+    ap.add_argument("--jitter", type=float, default=0.2,
+                    help="lognormal sigma on open-loop inter-arrival times")
+    ap.add_argument("--slo", type=float, default=2.0,
+                    help="end-to-end SLO for open-loop goodput accounting")
+    ap.add_argument("--admission", choices=("admit-all", "slo"),
+                    default="admit-all",
+                    help="open-loop admission policy: admit everything, or "
+                         "degrade/reject when projected load exceeds the "
+                         "SLO envelope")
     args = ap.parse_args()
+    if args.open_loop and args.pod_allocate:
+        ap.error("--open-loop admits frames per arrival; the pod-level "
+                 "fixed point is tick-batch-synchronous (drop one flag)")
     if args.pod_allocate and args.policy is None:
         # explicit, never a silent remap: the flag now configures the
         # policy object's admission half
@@ -91,7 +123,9 @@ def main() -> None:
             "the bare flag will be removed two PRs after the runtime "
             "refactor.", DeprecationWarning, stacklevel=1)
     policy = make_policy(args.policy or "sync",
-                         pod_allocate=args.pod_allocate)
+                         pod_allocate=args.pod_allocate,
+                         admission=args.admission if args.open_loop
+                         else None)
 
     variants = profiles.make_ladder()
     lat = OmniSenseLatencyModel(profiles.paper_profile(),
@@ -117,7 +151,17 @@ def main() -> None:
 
     server = PodServer(loops, backends, max_batch=args.max_batch,
                        placement=placement, policy=policy)
-    stats = server.run(range(args.frames))
+    horizon_s = None
+    if args.open_loop:
+        from repro.serving.traffic import ArrivalProcess
+
+        horizon_s = args.frames / args.fps
+        traffic = ArrivalProcess(args.streams, fps=args.fps,
+                                 jitter=args.jitter, seed=0,
+                                 horizon_s=horizon_s)
+        stats = server.run_open_loop(traffic, slo_s=args.slo)
+    else:
+        stats = server.run(range(args.frames))
     print(f"served {stats.frames} frames across {args.streams} streams "
           f"[{stats.policy} policy]")
     print(f"detections: {stats.total_detections}  "
@@ -143,6 +187,11 @@ def main() -> None:
         from repro.serving.server import format_group_report
 
         for line in format_group_report(stats, placement):
+            print(line)
+    if horizon_s is not None:
+        from repro.serving.server import format_open_loop_report
+
+        for line in format_open_loop_report(stats, horizon_s):
             print(line)
 
 

@@ -45,9 +45,14 @@ class NetworkModel:
 class PassiveProfiler:
     """Sliding mean of the last omega delivery delays per model."""
 
-    def __init__(self, omega: int = 7, initial_s: float = 0.3):
+    def __init__(self, omega: int = 7, initial_s: float = 0.3,
+                 rtt_s: float = 0.0):
         self.omega = omega
         self.initial_s = initial_s
+        # the link's fixed round-trip floor: observed delays include it,
+        # but it does not scale with payload size, so rescaling an
+        # estimate to a different payload must hold it constant
+        self.rtt_s = rtt_s
         self._window: dict[str, collections.deque] = {}
 
     def observe(self, model_name: str, delay_s: float) -> None:
@@ -63,8 +68,16 @@ class PassiveProfiler:
 
     def scale_estimate(self, model_name: str, ref_bytes: float,
                        new_bytes: float) -> float:
-        """Estimate for a different payload size, linear in bytes."""
+        """Estimate for a different payload size.
+
+        Only the bandwidth term of a delivery delay is linear in bytes;
+        the ``rtt_s`` round-trip floor is payload-invariant.  Scaling
+        the whole mean (the old behaviour) shrank the RTT along with
+        the payload and underpriced small transfers — a zero-byte
+        estimate went to 0 instead of to the RTT floor.
+        """
         base = self.estimate(model_name)
         if ref_bytes <= 0:
             return base
-        return base * new_bytes / ref_bytes
+        bw = max(0.0, base - self.rtt_s)
+        return self.rtt_s + bw * new_bytes / ref_bytes

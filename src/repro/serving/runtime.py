@@ -130,6 +130,13 @@ class GroupClock:
         """When the last booked dispatch completes (>= ``now``)."""
         return max(self.now, max(self._free_at.values(), default=self.now))
 
+    def carry(self) -> dict[int, float]:
+        """Busy seconds past ``now`` per group still executing (empty
+        when every group is free) — the open-loop admission backlog's
+        carry-in term."""
+        return {g: t - self.now for g, t in self._free_at.items()
+                if t > self.now + _EPS}
+
     def next_free(self) -> float | None:
         """Earliest completion among groups still busy past ``now``
         (``None`` when every group is already free) — the async
@@ -205,6 +212,93 @@ class DrainOp:
     take: int
 
 
+# admission verdicts (AdmissionPolicy.decide return values)
+ADMIT = "admit"
+DEGRADE = "degrade"
+REJECT = "reject"
+
+
+class AdmissionPolicy:
+    """Open-loop admission: what to do with one arriving frame.
+
+    Closed-loop ticks admit everything by construction (the clock only
+    advances at pod capacity), so admission is a no-op there.  Under
+    arrival-clocked traffic (``PodServer.run_open_loop``) every arrival
+    consults the schedule policy's ``admission`` hook BEFORE emission:
+
+      * ``ADMIT`` — emit the stream's full allocator plan;
+      * ``DEGRADE`` — re-plan restricted to skip + the P1 variant (the
+        cheapest real model), shedding load while keeping the frame;
+      * ``REJECT`` — drop the frame entirely (counted, never served).
+
+    ``decide`` sees the pod's projected state in seconds: ``backlog_s``
+    (busy carry-in plus queued drain cost, max over replica groups, on
+    the server's shared pricing curve), the candidate plan's cost, the
+    degraded plan's cost, and the run's SLO target (``None`` when the
+    run has no SLO — the default policy admits everything either way).
+    """
+
+    name = "admit-all"
+
+    def decide(self, *, backlog_s: float, plan_cost_s: float,
+               degraded_cost_s: float, slo_s: float | None) -> str:
+        del backlog_s, plan_cost_s, degraded_cost_s, slo_s
+        return ADMIT
+
+
+class SloAdmissionPolicy(AdmissionPolicy):
+    """Admit while the projected completion fits the SLO envelope.
+
+    The envelope is ``slo_s * slack``: a frame whose backlog + full
+    plan cost fits is admitted untouched; one that fits only with the
+    degraded (P1-only) plan is degraded; one that cannot fit even
+    degraded is rejected — graceful degradation before load shedding,
+    the paper's under-pressure behaviour.  With no SLO configured the
+    policy admits everything (same as :class:`AdmissionPolicy`).
+    """
+
+    name = "slo"
+
+    def __init__(self, slack: float = 1.0):
+        if slack <= 0:
+            raise ValueError(f"slack must be > 0, got {slack}")
+        self.slack = slack
+
+    def decide(self, *, backlog_s: float, plan_cost_s: float,
+               degraded_cost_s: float, slo_s: float | None) -> str:
+        if slo_s is None:
+            return ADMIT
+        limit = slo_s * self.slack
+        if backlog_s + plan_cost_s <= limit + _EPS:
+            return ADMIT
+        if backlog_s + degraded_cost_s <= limit + _EPS:
+            return DEGRADE
+        return REJECT
+
+
+ADMISSIONS: dict[str, type[AdmissionPolicy]] = {
+    AdmissionPolicy.name: AdmissionPolicy,
+    SloAdmissionPolicy.name: SloAdmissionPolicy,
+}
+
+
+def make_admission(spec) -> AdmissionPolicy:
+    """Resolve an admission spec: instance passes through, a registered
+    name constructs, ``None`` means admit-all."""
+    if spec is None:
+        return AdmissionPolicy()
+    if isinstance(spec, AdmissionPolicy):
+        return spec
+    try:
+        cls = ADMISSIONS[spec]
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown admission policy {spec!r}; choose from "
+            f"{sorted(ADMISSIONS)} or pass an AdmissionPolicy instance"
+        ) from None
+    return cls()
+
+
 class SchedulePolicy:
     """The serving runtime's decision surface (see module docstring).
 
@@ -214,13 +308,17 @@ class SchedulePolicy:
     admission half the old ``PodServer(pod_allocate=True)`` boolean
     controlled: whether each tick's plans come from the pod-level
     fixed point (``repro.serving.pod_allocation.solve_pod``) or from
-    per-stream knapsacks.
+    per-stream knapsacks.  ``admission`` is the open-loop arrival hook
+    (:class:`AdmissionPolicy` instance or registered name; default
+    admit-all) consulted by ``PodServer.run_open_loop`` — closed-loop
+    ``step``/``run`` never invoke it.
     """
 
     name = "base"
 
-    def __init__(self, pod_allocate: bool = False):
+    def __init__(self, pod_allocate: bool = False, admission=None):
         self.pod_allocate = pod_allocate
+        self.admission = make_admission(admission)
 
     # -- drain -------------------------------------------------------------
 
@@ -290,7 +388,10 @@ class DeadlineOrderPolicy(SchedulePolicy):
     Every queue still drains fully (no carry-over; the tick makespan
     equals sync's), but chunks launch in ``(deadline, cost/b, name)``
     order instead of sorted-variant order: a chunk's deadline is the
-    tightest latency budget among the streams it serves, and equal
+    tightest ABSOLUTE due time (emission time + the stream's latency
+    budget) among the requests it serves — so staggered arrivals sort
+    by when work is actually due and carried requests gain urgency as
+    they age — and equal
     deadlines fall back to shortest-forward-first PER REQUEST SERVED
     (weighted SJF — a cheap b=1 forward must not jump a b=8 batch and
     delay eight frames to advance one).  FIFO precedence within a
@@ -316,7 +417,14 @@ class DeadlineOrderPolicy(SchedulePolicy):
             for b in buckets.split(count):
                 chunk = items[lo:lo + b]
                 lo += b
-                deadline = min((it.deadline for it in chunk
+                # EDF orders by ABSOLUTE due time: a request's deadline
+                # field is the stream's relative latency budget, so the
+                # due time is emission + budget.  (Sorting the bare
+                # budget is only equivalent while every emission shares
+                # one tick boundary — wrong under staggered arrivals,
+                # and it would deny carried/aged requests the urgency
+                # their early emission earned.)
+                deadline = min((it.emitted_s + it.deadline for it in chunk
                                 if it.deadline is not None),
                                default=float("inf"))
                 cost = chunk_cost(name, b) if chunk_cost is not None else 0.0
@@ -367,8 +475,8 @@ class AsyncDrainPolicy(SchedulePolicy):
     name = "async"
 
     def __init__(self, pod_allocate: bool = False,
-                 max_carry: int = DEFAULT_MAX_CARRY):
-        super().__init__(pod_allocate)
+                 max_carry: int = DEFAULT_MAX_CARRY, admission=None):
+        super().__init__(pod_allocate, admission)
         if max_carry < 1:
             raise ValueError(f"max_carry must be >= 1, got {max_carry}")
         self.max_carry = max_carry
@@ -445,9 +553,11 @@ POLICIES: dict[str, type[SchedulePolicy]] = {
 }
 
 
-def make_policy(spec, pod_allocate: bool = False) -> SchedulePolicy:
+def make_policy(spec, pod_allocate: bool = False,
+                admission=None) -> SchedulePolicy:
     """Resolve a policy spec: an instance passes through (its own
-    ``pod_allocate`` wins), a name constructs the registered class."""
+    ``pod_allocate``/``admission`` win), a name constructs the
+    registered class."""
     if isinstance(spec, SchedulePolicy):
         return spec
     try:
@@ -457,4 +567,4 @@ def make_policy(spec, pod_allocate: bool = False) -> SchedulePolicy:
             f"unknown scheduling policy {spec!r}; choose from "
             f"{sorted(POLICIES)} or pass a SchedulePolicy instance"
         ) from None
-    return cls(pod_allocate=pod_allocate)
+    return cls(pod_allocate=pod_allocate, admission=admission)

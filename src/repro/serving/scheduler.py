@@ -46,7 +46,9 @@ class OmniSenseLatencyModel:
                  batch_marginal: float = 0.15):
         self.costs = costs
         self.network = network
-        self.profiler = profiler or PassiveProfiler()
+        # a defaulted profiler inherits the link's RTT floor so its
+        # payload rescaling never shrinks the fixed round-trip term
+        self.profiler = profiler or PassiveProfiler(rtt_s=network.rtt_s)
         # marginal cost of each item beyond the first in a batched
         # forward (the standard sub-linear batching curve)
         self.batch_marginal = batch_marginal

@@ -56,12 +56,13 @@ from typing import Callable
 
 import numpy as np
 
+from repro.core import allocation
 from repro.core.omnisense import OmniSenseLoop
 from repro.core.sphere import (nms_auto_backend, pad_detection_rows,
                                sph_nms_batch)
 from repro.serving.batching import QueuedRequest, ShapeBuckets, VariantQueues
-from repro.serving.runtime import (DispatchEvent, GroupClock, SyncTickPolicy,
-                                   TickTimeline, make_policy)
+from repro.serving.runtime import (DEGRADE, REJECT, DispatchEvent, GroupClock,
+                                   SyncTickPolicy, TickTimeline, make_policy)
 
 
 @dataclasses.dataclass
@@ -103,10 +104,46 @@ class ServeStats:
     # request-ticks spent waiting in a queue past the tick that
     # emitted them (async carry-over volume; 0 under sync/deadline)
     carried_requests: int = 0
+    # open-loop traffic accounting (all zero under closed-loop run():
+    # ticks admit everything and no SLO is configured)
+    slo_s: float | None = None
+    admission: str = "admit-all"
+    arrivals: int = 0       # frames the traffic offered
+    admitted: int = 0       # emitted with a plan (degraded included)
+    degraded: int = 0       # admitted but forced to skip/P1
+    rejected: int = 0       # shed by the admission policy
+    missed: int = 0         # superseded in the depth-1 camera buffer
+    empty_frames: int = 0   # admitted with no requests (nothing planned)
+    slo_violations: int = 0  # finished frames with event E2E > slo_s
+    # per dispatched request: launch minus emission on the event clock
+    # (pure queueing delay, before the forward itself runs)
+    queue_delays: list = dataclasses.field(default_factory=list)
 
     @property
     def mean_e2e(self) -> float:
         return self.sum_e2e / max(self.frames, 1)
+
+    @property
+    def goodput_frames(self) -> int:
+        """Frames that finished within the SLO (all finished frames
+        when no SLO is configured)."""
+        return self.frames - self.slo_violations
+
+    @property
+    def useful_goodput_frames(self) -> int:
+        """Within-SLO frames that did real inference work.
+
+        An admitted frame with an empty plan completes instantly
+        (event E2E 0) and so always lands inside the SLO — but it
+        delivered no detections.  Under congestion collapse a starved
+        predictor plans nothing for most frames, so raw
+        :attr:`goodput_frames` REWARDS the collapse; this is the
+        honest metric the bench's open-loop gate compares."""
+        return self.goodput_frames - self.empty_frames
+
+    @property
+    def mean_queue_delay(self) -> float:
+        return float(np.mean(self.queue_delays)) if self.queue_delays else 0.0
 
     @property
     def accuracy_proxy(self) -> float:
@@ -174,6 +211,32 @@ def format_group_report(stats: ServeStats, placement) -> list[str]:
     ]
 
 
+def format_open_loop_report(stats: ServeStats, horizon_s: float) -> list[str]:
+    """Human-readable open-loop traffic summary lines (shared by the
+    serving drivers so the conservation arithmetic — arrivals =
+    admitted + rejected + missed — renders identically everywhere)."""
+    pct = stats.event_e2e_percentiles()
+    lines = [
+        f"open-loop traffic [{stats.admission} admission]: "
+        f"{stats.arrivals} arrivals over {horizon_s:.1f}s "
+        f"({stats.arrivals / max(horizon_s, 1e-9):.2f} frames/s offered) "
+        f"-> {stats.admitted} admitted ({stats.degraded} degraded, "
+        f"{stats.empty_frames} empty), "
+        f"{stats.rejected} rejected, {stats.missed} missed",
+        f"queueing: mean delay {stats.mean_queue_delay * 1e3:.1f}ms, "
+        f"event E2E p50/p95/p99 "
+        f"{pct[50]:.3f}/{pct[95]:.3f}/{pct[99]:.3f}s",
+    ]
+    if stats.slo_s is not None:
+        useful = stats.useful_goodput_frames
+        lines.append(
+            f"SLO {stats.slo_s:.2f}s: {useful}/{stats.frames} "
+            f"frames served within SLO "
+            f"(goodput {useful / max(horizon_s, 1e-9):.2f} "
+            f"frames/s, {stats.slo_violations} violations)")
+    return lines
+
+
 def format_pod_allocation_report(stats: ServeStats) -> str:
     """Human-readable pod-level allocation summary (shared by the
     serving drivers, like :func:`format_group_report`, so the format —
@@ -196,6 +259,7 @@ class _InFlightFrame:
     emitted_s: float              # event-clock emission time
     done_s: float                 # latest completion among its dispatches
     frame_idx: int | None = None  # stream frame index it was emitted for
+    stream: int | None = None     # stream index (diagnostics/open loop)
     slots: dict = dataclasses.field(default_factory=dict)
 
     @property
@@ -298,6 +362,43 @@ class PodServer:
         # CURRENT tick (solve_pod exports it; None -> the policy
         # rebuilds it from the live queues on the same curve)
         self._projected_load: dict | None = None
+        # the tick-charge curves are POD-level quantities, so they must
+        # come from ONE curve no matter which stream's dispatch happens
+        # first — resolved once here, and conflicting curves across the
+        # streams' latency models are an error instead of a dispatch-
+        # order lottery
+        self._tick_lat = self._resolve_curve_hook("tick_inference_delay")
+        self._overlap_lat = self._resolve_curve_hook("tick_overlap_delay")
+        # open-loop state (run_open_loop): the run's SLO target, the
+        # busy horizon already charged to sum_tick_inf_s, and each
+        # stream's newest in-flight frame (the depth-1 camera buffer)
+        self.slo_s: float | None = None
+        self._open_horizon = 0.0
+        self._stream_frame: dict[int, _InFlightFrame] = {}
+
+    def _resolve_curve_hook(self, attr: str):
+        """One pod-wide tick-charge hook across the streams' latency
+        models.  Models sharing the same underlying function (e.g. many
+        instances of one class) agree by construction; models providing
+        DIFFERENT curves cannot price one pod tick, so that's an error.
+        Streams whose model lacks the hook have no opinion."""
+        hooks: dict = {}
+        for loop in self.loops:
+            h = getattr(loop.latency_model, attr, None)
+            if h is not None:
+                hooks.setdefault(getattr(h, "__func__", h), h)
+        if len(hooks) > 1:
+            models = sorted({type(loop.latency_model).__name__
+                             for loop in self.loops
+                             if getattr(loop.latency_model, attr, None)
+                             is not None})
+            raise ValueError(
+                f"conflicting {attr} curves across the pod's latency "
+                f"models {models}; the tick charge is a pod-level "
+                "quantity and must come from one curve — share a "
+                "latency model (or at least its tick hooks) across "
+                "streams")
+        return next(iter(hooks.values()), None)
 
     @property
     def pod_allocate(self) -> bool:
@@ -425,11 +526,12 @@ class PodServer:
         else:
             emitted = [loop.begin_frame(frame)
                        for loop, frame in zip(self.loops, frames)]
-        for loop, backend, pending in zip(self.loops, self.backends, emitted):
+        for s, (loop, backend, pending) in enumerate(
+                zip(self.loops, self.backends, emitted)):
             entry = _InFlightFrame(loop=loop, pending=pending,
                                    emitted_s=self.clock.now,
                                    done_s=self.clock.now,
-                                   frame_idx=frame_idx)
+                                   frame_idx=frame_idx, stream=s)
             self._inflight.append(entry)
             self._by_owner[id(pending)] = entry
             if pending.plan is not None:
@@ -470,7 +572,6 @@ class PodServer:
         """Dispatch a drain plan, book it on the event clock, charge
         the tick per the policy's close rule."""
         results, dispatches = self.queues.drain_ops(ops, self.placement)
-        tick_lat = overlap_lat = None
         for d in dispatches:
             self.stats.dispatches += 1
             self.stats.batch_sizes.append(d["b"])
@@ -494,17 +595,16 @@ class PodServer:
             self.stats.group_busy_s[gidx] = (
                 self.stats.group_busy_s.get(gidx, 0.0) + batched)
             self.stats.group_devices[gidx] = n_dev
-            tick_lat = tick_lat or getattr(
-                d["items"][0].latency_model, "tick_inference_delay", None)
-            overlap_lat = overlap_lat or getattr(
-                d["items"][0].latency_model, "tick_overlap_delay", None)
             for it in d["items"]:
                 owner = self._by_owner[id(it.owner)]
                 owner.done_s = max(owner.done_s, complete)
+                self.stats.queue_delays.append(
+                    max(0.0, launch - it.emitted_s))
         for item, dets in results:
             self._by_owner[id(item.owner)].slots[item.request.slot] = dets
         self.timelines.append(timeline)
-        charge, next_start = close(self.clock, timeline, tick_lat, overlap_lat)
+        charge, next_start = close(self.clock, timeline,
+                                   self._tick_lat, self._overlap_lat)
         self.stats.sum_tick_inf_s += charge
         self.clock.advance(next_start)
 
@@ -540,7 +640,13 @@ class PodServer:
             self.stats.total_detections += len(result.detections)
             self.stats.sum_e2e += result.planned_latency
             self.stats.sum_overhead += result.overhead_s
-            self.stats.event_e2e.append(max(0.0, e.done_s - e.emitted_s))
+            e2e = max(0.0, e.done_s - e.emitted_s)
+            self.stats.event_e2e.append(e2e)
+            if self.slo_s is not None and e2e > self.slo_s + 1e-12:
+                self.stats.slo_violations += 1
+            if (e.stream is not None
+                    and self._stream_frame.get(e.stream) is e):
+                del self._stream_frame[e.stream]
 
     def _suppress_tick(self, plans: list) -> float:
         """Batched spherical NMS across the tick; returns wall time.
@@ -589,16 +695,46 @@ class PodServer:
         in flight.  A strict no-op under policies without carry-over,
         so ``run`` keeps the sync path bit-identical.  Flush charges
         accrue to ``sum_tick_inf_s`` without growing ``ticks``: the
-        async mean tick pays its tail instead of hiding it."""
-        for _ in range(2):
-            if not len(self.queues):
+        async mean tick pays its tail instead of hiding it.
+
+        The round bound is keyed to what a drain can actually owe: a
+        full drain dispatches every queued request, so one round
+        settles everything a well-behaved pod queued, and extra
+        headroom covers a policy that carried up to ``max_carry``
+        ticks plus the chunked depth of the deepest queue.  A pod
+        still unsettled past the bound is a real invariant break
+        (e.g. a request whose owner never ingests) and raises a
+        diagnostic ``RuntimeError`` naming the unsettled streams."""
+        deepest = max(self.queues.counts().values(), default=0)
+        rounds = (2 + int(getattr(self.policy, "max_carry", 0))
+                  + -(-deepest // self.buckets.max_batch))
+        for _ in range(rounds):
+            if not len(self.queues) and not self._inflight:
                 break
-            timeline = TickTimeline(len(self.timelines), self.clock.now)
-            self._execute(self.queues.full_drain_ops(), timeline,
-                          self._flush_close)
+            if len(self.queues):
+                timeline = TickTimeline(len(self.timelines), self.clock.now)
+                self._execute(self.queues.full_drain_ops(), timeline,
+                              self._flush_close)
             self._ingest()
-        assert not len(self.queues) and not self._inflight, \
-            "flush failed to settle the pod"
+        if len(self.queues) or self._inflight:
+            raise RuntimeError(
+                f"flush failed to settle the pod after {rounds} "
+                f"drain rounds: {self._unsettled_report()}")
+
+    def _unsettled_report(self) -> str:
+        """What flush left behind, by stream — the diagnostic payload
+        of the flush-depth RuntimeError."""
+        queued = {name: c for name, c in self.queues.counts().items() if c}
+        frames = []
+        for e in self._inflight:
+            stream = e.stream if e.stream is not None \
+                else self.loops.index(e.loop)
+            frames.append(
+                f"stream {stream} frame {e.frame_idx} "
+                f"({len(e.slots)}/{len(e.pending.requests)} requests "
+                "resolved)")
+        return (f"queued requests by variant: {queued or '{}'}; "
+                f"in-flight frames: {', '.join(frames) or 'none'}")
 
     @staticmethod
     def _flush_close(clock: GroupClock, timeline: TickTimeline,
@@ -623,3 +759,200 @@ class PodServer:
             self.step(f)
         self.flush()
         return self.stats
+
+    # -- open-loop (arrival-clocked) serving -------------------------------
+
+    def run_open_loop(self, traffic, *, slo_s: float | None = None
+                      ) -> ServeStats:
+        """Arrival-driven serving: the event clock advances to each
+        arrival instead of a global frame barrier.
+
+        ``traffic`` is a :class:`repro.serving.traffic.ArrivalProcess`
+        (or any iterable of time-ordered ``Arrival``s): streams
+        join/leave per its churn trace, each arrival carries its own
+        per-stream ``frame_idx``, and a frame whose predecessor still
+        occupies the stream's depth-1 camera buffer is counted
+        ``missed`` — never fabricated, never queued behind it.  Every
+        surviving arrival consults the policy's
+        :class:`~repro.serving.runtime.AdmissionPolicy` against the
+        SLO envelope (``slo_s``): admit the full allocator plan,
+        degrade to skip+P1, or reject.  The conservation invariant:
+        ``arrivals == admitted + rejected + missed``.
+
+        Unlike closed-loop ticks, drains here never block arrivals —
+        work is booked on the busy groups and the clock keeps tracking
+        arrival time, so queueing delay (launch minus emission) and
+        SLO violations are real, not artifacts of a barrier.
+        """
+        if self.policy.pod_allocate:
+            raise ValueError(
+                "open-loop serving admits frames per arrival; the "
+                "pod-level fixed point is tick-batch-synchronous — "
+                "use a per-stream (pod_allocate=False) policy")
+        arrivals = traffic.arrivals() if hasattr(traffic, "arrivals") \
+            else list(traffic)
+        self.slo_s = slo_s
+        self.stats.slo_s = slo_s
+        self.stats.admission = self.policy.admission.name
+        self._open_horizon = self.clock.now
+        i, n = 0, len(arrivals)
+        while i < n:
+            self.clock.advance(arrivals[i].t_s)
+            # arrivals landing at the same instant share one admission
+            # + drain round, so their requests can batch together
+            batch = []
+            while i < n and arrivals[i].t_s <= self.clock.now + 1e-12:
+                batch.append(arrivals[i])
+                i += 1
+            for a in batch:
+                self._admit_arrival(a)
+            self._open_drain()
+            self._ingest()
+        # every busy second up to the horizon is already charged; jump
+        # the clock there so the settling flush only bills new work
+        self.clock.advance(self.clock.horizon())
+        self.flush()
+        return self.stats
+
+    def _admit_arrival(self, arrival) -> None:
+        """Admission-check one arrival, emitting its requests if the
+        verdict allows (see :meth:`run_open_loop`)."""
+        s = arrival.stream
+        loop, backend = self.loops[s], self.backends[s]
+        self.stats.arrivals += 1
+        prev = self._stream_frame.get(s)
+        if prev is not None and not prev.complete:
+            self.stats.missed += 1
+            return
+        if hasattr(backend, "set_frame"):
+            backend.set_frame(arrival.frame_idx)
+        frame = (self.frame_source(s, arrival.frame_idx)
+                 if self.frame_source is not None else None)
+        ctx = loop.frame_context(frame)
+        plan = dplan = None
+        if ctx.srois:
+            plan = allocation.allocate(ctx.acc, ctx.d_pre, ctx.d_inf,
+                                       ctx.budget)
+            # the degraded alternative: rows 0..1 = skip + the P1
+            # variant only (model indices stay valid on the full
+            # ladder, so emit_pending needs no special casing)
+            dplan = allocation.allocate(ctx.acc[:2], ctx.d_pre[:2],
+                                        ctx.d_inf[:2], ctx.budget)
+        # plan costs are MARGINAL: joint backlog (plan batched with the
+        # queued demand, the way the drain executes) minus the bare one
+        backlog = self._open_backlog()
+        verdict = self.policy.admission.decide(
+            backlog_s=backlog,
+            plan_cost_s=max(
+                0.0,
+                self._open_backlog(self._plan_counts(loop, plan)) - backlog),
+            degraded_cost_s=max(
+                0.0,
+                self._open_backlog(self._plan_counts(loop, dplan)) - backlog),
+            slo_s=self.slo_s)
+        if verdict == REJECT:
+            self.stats.rejected += 1
+            return
+        if verdict == DEGRADE:
+            plan = dplan
+            self.stats.degraded += 1
+        self.stats.admitted += 1
+        pending = loop.emit_pending(ctx, plan)
+        if not pending.requests:
+            self.stats.empty_frames += 1
+        entry = _InFlightFrame(loop=loop, pending=pending,
+                               emitted_s=arrival.t_s, done_s=arrival.t_s,
+                               frame_idx=arrival.frame_idx, stream=s)
+        self._inflight.append(entry)
+        self._by_owner[id(pending)] = entry
+        self._stream_frame[s] = entry
+        if pending.plan is not None:
+            self.stats.sum_plan_value += pending.plan.value
+        for req in pending.requests:
+            self.queues.put(QueuedRequest(
+                request=req, owner=pending, backend=backend,
+                latency_model=loop.latency_model,
+                deadline=loop.budget_s, emitted_s=arrival.t_s,
+                frame_idx=arrival.frame_idx))
+        if self.placement is not None and pending.requests:
+            counts: dict[str, int] = {}
+            for req in pending.requests:
+                counts[req.variant.name] = counts.get(req.variant.name, 0) + 1
+            self.placement.observe(counts)
+            self.placement.maybe_rebalance()
+
+    def _open_backlog(self, extra: dict | None = None) -> float:
+        """The admission policy's load signal: per replica group, busy
+        carry-in past ``now`` plus the queued demand's chunked drain
+        cost on the server's pricing curve — max over groups (groups
+        run concurrently, so the slowest one bounds any new frame's
+        wait).
+
+        ``extra`` (``{variant_name: (variant, latency_model, count)}``,
+        see :meth:`_plan_counts`) folds a candidate plan's requests
+        into the queued counts BEFORE pricing, so the plan batches
+        with the queued demand exactly like the drain will execute it
+        — the admission cost of a plan is the joint backlog minus the
+        bare one (its true marginal), not a standalone serial price.
+        """
+        counts = {name: c for name, c in self.queues.counts().items() if c}
+        pricing: dict[str, tuple] = {}
+        for name in counts:
+            item = self.queues.head(name)
+            pricing[name] = (item.request.variant, item.latency_model)
+        for name, (variant, lat, n) in (extra or {}).items():
+            counts[name] = counts.get(name, 0) + n
+            pricing.setdefault(name, (variant, lat))
+        load: dict[int, float] = {}
+        for name, count in counts.items():
+            variant, lat = pricing[name]
+            group = self.placement.group_for(name) \
+                if self.placement is not None else None
+            g = group.index if group is not None else 0
+            curve, _ = self._price_curve(
+                variant, lat, group.n_devices if group is not None else 1)
+            load[g] = load.get(g, 0.0) + sum(
+                curve(b) for b in self.buckets.split(count))
+        carry = self.clock.carry()
+        return max((carry.get(g, 0.0) + load.get(g, 0.0)
+                    for g in set(load) | set(carry)), default=0.0)
+
+    @staticmethod
+    def _plan_counts(loop, plan) -> dict:
+        """A plan's demand as :meth:`_open_backlog` ``extra`` input:
+        per variant name, ``(variant, latency_model, request_count)``."""
+        out: dict = {}
+        if plan is None:
+            return out
+        for model_idx in plan.models:
+            if model_idx == 0:
+                continue
+            v = loop.variants[model_idx - 1]
+            _, _, n = out.get(v.name, (v, loop.latency_model, 0))
+            out[v.name] = (v, loop.latency_model, n + 1)
+        return out
+
+    def _open_drain(self) -> None:
+        """One arrival-round drain: the policy picks order/carry as in
+        closed loop, but the close rule never jumps the arrival clock —
+        work books onto the busy groups and the charge is the busy-
+        horizon extension (so overlapping rounds never double-bill)."""
+        if not len(self.queues):
+            return
+        self._projected_load = None
+        timeline = TickTimeline(len(self.timelines), self.clock.now)
+        ops = self.policy.plan_drain(
+            self.queues, self.buckets, self.placement, self.clock,
+            chunk_cost=self._chunk_cost, projected_load=None)
+        self._execute(ops, timeline, self._open_close)
+        if timeline.events:
+            self.stats.ticks += 1
+        self.stats.carried_requests += len(self.queues)
+
+    def _open_close(self, clock: GroupClock, timeline: TickTimeline,
+                    tick_lat=None, overlap_lat=None) -> tuple[float, float]:
+        del tick_lat, overlap_lat
+        horizon = clock.horizon()
+        charge = max(0.0, horizon - max(self._open_horizon, timeline.start))
+        self._open_horizon = max(self._open_horizon, horizon)
+        return charge, clock.now

@@ -475,12 +475,13 @@ class TestCausality:
 # ---------------------------------------------------------------------------
 
 
-def _queued(variant, deadline, slot=0, age=0):
+def _queued(variant, deadline, slot=0, age=0, emitted=0.0):
     return QueuedRequest(
         request=InferenceRequest(
             region=sroi_mod.SRoI(center=(0.0, 0.0), fov=(1.0, 1.0)),
             variant=variant, slot=slot, special=False),
-        owner=None, backend=None, deadline=deadline, age=age)
+        owner=None, backend=None, deadline=deadline, age=age,
+        emitted_s=emitted)
 
 
 class TestDeadlineOrder:
@@ -546,6 +547,50 @@ class TestDeadlineOrder:
         # BOTH v chunks precede w — never v(2.0), w(1.6), v(1.2)
         assert [(o.variant, o.take) for o in ops] == [
             (v.name, 8), (v.name, 1), (w.name, 1)]
+
+    def test_absolute_due_time_under_staggered_arrivals(self):
+        """EDF orders by ABSOLUTE due time (emitted_s + budget), not
+        the bare relative budget.  Stream A's request (emitted 0.0,
+        budget 1.0) is due at 1.0; stream B's (emitted 0.9, budget
+        0.5) is due at 1.4 — A must dispatch first even though B's
+        relative budget is tighter.  The old relative-budget key
+        sorted B (0.5 < 1.0) first; harmless while every emission
+        shared a tick boundary (emitted_s identical), wrong the
+        moment arrivals stagger."""
+        variants = profiles.make_ladder(seed=0)
+        a, b = variants[2], variants[3]
+        q = VariantQueues(ShapeBuckets((1, 2, 4, 8)))
+        q.put(_queued(a, 1.0, slot=0, emitted=0.0))   # due 1.0
+        q.put(_queued(b, 0.5, slot=1, emitted=0.9))   # due 1.4
+        ops = DeadlineOrderPolicy().plan_drain(
+            q, q.buckets, None, GroupClock(),
+            chunk_cost=lambda name, n: 0.1 * n)
+        assert [o.variant for o in ops] == [a.name, b.name]
+        # same budgets, staggered emissions: earlier emission is due
+        # earlier (the relative key was blind to this — a pure tie)
+        q2 = VariantQueues(ShapeBuckets((1, 2, 4, 8)))
+        q2.put(_queued(b, 1.0, slot=0, emitted=0.7))  # due 1.7
+        q2.put(_queued(a, 1.0, slot=1, emitted=0.2))  # due 1.2
+        ops = DeadlineOrderPolicy().plan_drain(
+            q2, q2.buckets, None, GroupClock(),
+            chunk_cost=lambda name, n: 0.1 * n)
+        assert [o.variant for o in ops] == [a.name, b.name]
+
+    def test_carried_request_gains_urgency(self):
+        """A request carried across ticks keeps its original emission
+        time, so under the absolute key it eventually precedes every
+        fresher request — even one with a tighter relative budget.
+        (Old key: the carried 1.5-budget request lost to the fresh
+        0.5-budget one forever, no matter how long it waited.)"""
+        variants = profiles.make_ladder(seed=0)
+        a, b = variants[2], variants[3]
+        q = VariantQueues(ShapeBuckets((1, 2, 4, 8)))
+        q.put(_queued(a, 1.5, slot=0, emitted=0.0, age=2))  # due 1.5
+        q.put(_queued(b, 0.5, slot=1, emitted=2.0))         # due 2.5
+        ops = DeadlineOrderPolicy().plan_drain(
+            q, q.buckets, None, GroupClock(),
+            chunk_cost=lambda name, n: 0.1 * n)
+        assert [o.variant for o in ops] == [a.name, b.name]
 
     def test_deadline_run_same_results_lower_event_e2e(self):
         """On the cheap-sorts-last ladder the deadline order keeps the
@@ -814,6 +859,133 @@ class TestProjectedLoadShared:
         server.policy.plan_drain = spy
         server.run(range(3))
         assert seen and all(pl is not None for pl in seen)
+
+
+# ---------------------------------------------------------------------------
+# pod-level tick-charge hooks: resolved once, conflicts are errors
+# ---------------------------------------------------------------------------
+
+
+class _HalfTickLat(OmniSenseLatencyModel):
+    """A latency model whose pod-tick charge is half the barrier max
+    (a distinctive curve, so charging through the wrong model shows)."""
+
+    def tick_inference_delay(self, group_costs) -> float:
+        return 0.5 * max(group_costs, default=0.0)
+
+    def tick_overlap_delay(self, group_costs, carry_in=None) -> float:
+        carry = carry_in or {}
+        return 0.5 * max((carry.get(g, 0.0) + c
+                          for g, c in group_costs.items()), default=0.0)
+
+
+class _HookFreeLat:
+    """Wraps a latency model, exposing only the per-dispatch surface —
+    no pod-level tick hooks (a stream with "no opinion")."""
+
+    def __init__(self, inner):
+        self._inner = inner
+
+    def delays(self, srois, variants):
+        return self._inner.delays(srois, variants)
+
+    def batched_inference_delay(self, variant, b):
+        return self._inner.batched_inference_delay(variant, b)
+
+
+class TestTickHookResolution:
+    @staticmethod
+    def _pod(lat_fn, n_streams=2, policy=None):
+        variants = profiles.make_ladder()[3:5]
+        loops, backends = [], []
+        for s in range(n_streams):
+            backend = OracleBackend(make_video(n_frames=12, n_objects=30,
+                                               seed=200 + s))
+            backends.append(backend)
+            loops.append(OmniSenseLoop(variants, lat_fn(s), backend,
+                                       budget_s=1.8))
+        return PodServer(loops, backends, max_batch=8, policy=policy)
+
+    def test_conflicting_tick_curves_rejected_at_construction(self):
+        """A pod mixing latency models with DIFFERENT tick curves has
+        no well-defined tick charge; the old per-dispatch ``or
+        getattr`` silently charged whichever stream dispatched first."""
+        base = OmniSenseLatencyModel(profiles.paper_profile(),
+                                     NetworkModel())
+        half = _HalfTickLat(profiles.paper_profile(), NetworkModel())
+        with pytest.raises(ValueError, match="conflicting"):
+            self._pod(lambda s: base if s == 0 else half)
+
+    def test_same_class_instances_do_not_conflict(self):
+        """Many instances of one latency-model class share the curve
+        function — that's agreement, not a conflict."""
+        server = self._pod(lambda s: OmniSenseLatencyModel(
+            profiles.paper_profile(), NetworkModel()))
+        stats = server.run(range(3))
+        assert stats.frames == 2 * 3
+
+    def test_charge_independent_of_stream_order(self):
+        """One stream's model provides the (distinctive) tick curve,
+        the other has no opinion: the charge must come from the
+        providing model no matter which position it sits in — the old
+        first-dispatch resolution made it an ordering lottery."""
+        half = _HalfTickLat(profiles.paper_profile(), NetworkModel())
+        runs = {}
+        for order in ("half-first", "half-last"):
+            server = self._pod(
+                lambda s, o=order: half if (s == 0) == (o == "half-first")
+                else _HookFreeLat(half))
+            assert server._tick_lat is not None
+            runs[order] = server.run(range(4)).sum_tick_inf_s
+        assert runs["half-first"] == pytest.approx(runs["half-last"])
+        # and it is genuinely the half curve, not the barrier fallback
+        barrier = self._pod(lambda s: OmniSenseLatencyModel(
+            profiles.paper_profile(), NetworkModel())).run(range(4))
+        assert runs["half-first"] == pytest.approx(
+            0.5 * barrier.sum_tick_inf_s)
+
+
+# ---------------------------------------------------------------------------
+# flush: bounded settling + diagnostic failure
+# ---------------------------------------------------------------------------
+
+
+class TestFlushDepth:
+    def test_deep_async_carry_settles_within_bound(self):
+        """A pod with carried work and deep queues settles without
+        tripping the round bound (the bound keys to max_carry and the
+        deepest queue, so legitimate tails always fit)."""
+        server = _oracle_pod(6, frames=6,
+                             policy=AsyncDrainPolicy(max_carry=3))
+        stats = server.run(range(6))
+        assert stats.frames == 6 * 6
+        assert not len(server.queues) and not server._inflight
+
+    def test_unsettleable_pod_raises_diagnostic(self):
+        """An in-flight frame whose requests were never queued can
+        never complete; flush must raise a RuntimeError naming the
+        stream instead of tripping a bare assert."""
+        from repro.serving.server import _InFlightFrame
+
+        server = _oracle_pod(2, frames=6)
+        for f in range(3):
+            server.step(f)
+        loop, backend = server.loops[0], server.backends[0]
+        pending = None
+        for f in range(3, 6):  # first frame that actually plans work
+            backend.set_frame(f)
+            pending = loop.begin_frame(None)
+            if pending.requests:
+                break
+        assert pending is not None and pending.requests
+        entry = _InFlightFrame(loop=loop, pending=pending,
+                               emitted_s=server.clock.now,
+                               done_s=server.clock.now,
+                               frame_idx=3, stream=0)
+        server._inflight.append(entry)
+        server._by_owner[id(pending)] = entry
+        with pytest.raises(RuntimeError, match="stream 0"):
+            server.flush()
 
 
 # ---------------------------------------------------------------------------

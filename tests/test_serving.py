@@ -51,6 +51,30 @@ class TestLatencyModel:
             p.observe("m", d)
         assert np.isclose(p.estimate("m"), 3.0)  # last 3 of 4
 
+    def test_scale_estimate_preserves_rtt_floor(self):
+        """Rescaling an estimate to a new payload size scales only the
+        bandwidth term; the RTT floor is payload-invariant.  (The old
+        code scaled the whole mean — a half-size payload halved the
+        RTT too, and a zero-byte estimate went to 0 instead of RTT.)"""
+        p = PassiveProfiler(omega=4, rtt_s=0.2)
+        for _ in range(4):  # observed: 0.2 RTT + 0.4 bandwidth @ 1 MB
+            p.observe("m", 0.6)
+        assert np.isclose(p.scale_estimate("m", 1e6, 5e5), 0.2 + 0.2)
+        assert np.isclose(p.scale_estimate("m", 1e6, 2e6), 0.2 + 0.8)
+        assert np.isclose(p.scale_estimate("m", 1e6, 0.0), 0.2)
+        # same-size rescale is exact regardless of the floor split
+        assert np.isclose(p.scale_estimate("m", 1e6, 1e6), 0.6)
+        # an RTT-free profiler keeps the pure-linear behaviour
+        p0 = PassiveProfiler(omega=4)
+        p0.observe("m", 0.6)
+        assert np.isclose(p0.scale_estimate("m", 1e6, 5e5), 0.3)
+        # the latency model's defaulted profiler inherits the link RTT
+        from repro.serving import profiles as prof_mod
+        from repro.serving.scheduler import OmniSenseLatencyModel
+        net = NetworkModel(rtt_s=0.05)
+        lat = OmniSenseLatencyModel(prof_mod.paper_profile(), net)
+        assert lat.profiler.rtt_s == net.rtt_s
+
 
 class TestSyntheticData:
     def test_noa_distribution_matches_paper_shape(self):

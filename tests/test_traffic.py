@@ -1,0 +1,317 @@
+"""Open-loop traffic: arrival clocks, churn, admission, conservation.
+
+Property tests (hypothesis, optional) pin the arrival process's
+invariants — strictly monotone per-stream clocks, seeded
+reproducibility, time-ordered merges — and the open-loop serving
+conservation law: every arrival is exactly one of admitted / rejected /
+missed, and every admitted frame finishes.  Fixed-seed twins keep the
+same pins when hypothesis is absent.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.omnisense import OmniSenseLoop
+from repro.data.synthetic import make_video
+from repro.serving import profiles
+from repro.serving.network import NetworkModel
+from repro.serving.runtime import (ADMIT, DEGRADE, REJECT, AdmissionPolicy,
+                                   AsyncDrainPolicy, SloAdmissionPolicy,
+                                   SyncTickPolicy, make_admission)
+from repro.serving.scheduler import OmniSenseLatencyModel, OracleBackend
+from repro.serving.server import PodServer, format_open_loop_report
+from repro.serving.traffic import Arrival, ArrivalProcess, ChurnEvent, \
+    StreamClock
+
+# ---------------------------------------------------------------------------
+# stream clocks
+# ---------------------------------------------------------------------------
+
+
+class TestStreamClock:
+    def test_unjittered_clock_ticks_at_fps(self):
+        clock = StreamClock(stream=0, fps=2.0)
+        times = [clock.next_arrival() for _ in range(5)]
+        np.testing.assert_allclose(times, [0.5, 1.0, 1.5, 2.0, 2.5])
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 1000), stream=st.integers(0, 64),
+           fps=st.floats(0.1, 30.0), jitter=st.floats(0.0, 1.0))
+    def test_clock_strictly_monotone(self, seed, stream, fps, jitter):
+        """Multiplicative lognormal jitter on a positive interval can
+        never stall or reverse the clock."""
+        clock = StreamClock(stream, fps, jitter, seed)
+        times = [clock.next_arrival() for _ in range(50)]
+        assert all(b > a for a, b in zip(times, times[1:]))
+        assert times[0] > 0
+
+    def test_seeded_reproducibility_and_stream_independence(self):
+        a1 = [StreamClock(0, 1.0, 0.3, seed=7).next_arrival()
+              for _ in range(1)]
+        runs = [[StreamClock(0, 1.0, 0.3, seed=7).next_arrival()
+                 for _ in range(20)] for _ in range(2)]
+        assert runs[0] == runs[1]  # same (seed, stream) -> same draws
+        del a1
+        other_stream = [StreamClock(1, 1.0, 0.3, seed=7).next_arrival()
+                        for _ in range(20)]
+        other_seed = [StreamClock(0, 1.0, 0.3, seed=8).next_arrival()
+                      for _ in range(20)]
+        assert runs[0] != other_stream  # streams never share sequences
+        assert runs[0] != other_seed
+
+    def test_rate_trace_scales_intervals(self):
+        """A 2x burst segment halves the inter-arrival interval for
+        exactly the emissions falling inside it."""
+        clock = StreamClock(0, fps=1.0, rate_trace=((3.0, 2.0),))
+        times = [clock.next_arrival() for _ in range(7)]
+        np.testing.assert_allclose(
+            times, [1.0, 2.0, 3.0, 3.5, 4.0, 4.5, 5.0])
+
+    def test_invalid_args_rejected(self):
+        with pytest.raises(ValueError):
+            StreamClock(0, fps=0.0)
+        with pytest.raises(ValueError):
+            StreamClock(0, fps=1.0, jitter=-0.1)
+        with pytest.raises(ValueError):
+            StreamClock(0, fps=1.0, rate_trace=((0.0, -1.0),))
+
+
+# ---------------------------------------------------------------------------
+# the merged arrival process
+# ---------------------------------------------------------------------------
+
+
+class TestArrivalProcess:
+    def test_merge_is_time_ordered_with_contiguous_frame_indices(self):
+        proc = ArrivalProcess(n_streams=3, fps=1.5, jitter=0.2, seed=3,
+                              horizon_s=12.0)
+        arr = proc.arrivals()
+        assert arr == sorted(arr, key=lambda a: (a.t_s, a.stream))
+        for s in range(3):
+            idxs = [a.frame_idx for a in arr if a.stream == s]
+            assert idxs == list(range(len(idxs)))  # 0,1,2,... per stream
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 500), n=st.integers(1, 6),
+           jitter=st.floats(0.0, 0.5))
+    def test_seeded_process_reproducible(self, seed, n, jitter):
+        mk = lambda: ArrivalProcess(n, fps=1.0, jitter=jitter, seed=seed,
+                                    horizon_s=8.0).arrivals()
+        assert mk() == mk()
+
+    def test_churn_gates_emissions_without_fabricating(self):
+        """Disconnect windows emit nothing; the camera timeline keeps
+        running, so reconnect resumes the SAME clock (no burst of
+        fabricated catch-up frames) and frame indices stay contiguous."""
+        churn = (ChurnEvent(4.0, 0, False), ChurnEvent(8.0, 0, True))
+        gated = ArrivalProcess(2, fps=1.0, seed=0, horizon_s=12.0,
+                               churn=churn).arrivals()
+        free = ArrivalProcess(2, fps=1.0, seed=0, horizon_s=12.0).arrivals()
+        s0 = [a for a in gated if a.stream == 0]
+        assert all(not (4.0 <= a.t_s < 8.0) for a in s0)
+        # stream 1 is untouched by stream 0's churn
+        assert [a.t_s for a in gated if a.stream == 1] == \
+            [a.t_s for a in free if a.stream == 1]
+        # emissions outside the gap share the free-run clock times
+        free_s0 = {a.t_s for a in free if a.stream == 0}
+        assert all(a.t_s in free_s0 for a in s0)
+        assert [a.frame_idx for a in s0] == list(range(len(s0)))
+
+    def test_late_joiner_starts_disconnected(self):
+        churn = (ChurnEvent(6.0, 1, True),)
+        arr = ArrivalProcess(2, fps=1.0, seed=0, horizon_s=10.0,
+                             churn=churn).arrivals()
+        s1 = [a.t_s for a in arr if a.stream == 1]
+        assert s1 and min(s1) >= 6.0
+
+    def test_offered_rate_tracks_fps(self):
+        proc = ArrivalProcess(4, fps=2.0, seed=1, horizon_s=50.0)
+        assert proc.offered_rate() == pytest.approx(8.0, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# admission policies
+# ---------------------------------------------------------------------------
+
+
+class TestAdmissionPolicy:
+    def test_registry_and_defaults(self):
+        assert isinstance(make_admission(None), AdmissionPolicy)
+        assert isinstance(make_admission("slo"), SloAdmissionPolicy)
+        p = SloAdmissionPolicy(slack=2.0)
+        assert make_admission(p) is p
+        with pytest.raises(ValueError):
+            make_admission("drop-everything")
+        # every schedule policy carries the hook; default admits all
+        assert SyncTickPolicy().admission.name == "admit-all"
+        assert AsyncDrainPolicy(admission="slo").admission.name == "slo"
+
+    def test_slo_verdict_ladder(self):
+        p = SloAdmissionPolicy()
+        kw = dict(plan_cost_s=0.5, degraded_cost_s=0.1, slo_s=1.0)
+        assert p.decide(backlog_s=0.2, **kw) == ADMIT       # 0.7 <= 1
+        assert p.decide(backlog_s=0.7, **kw) == DEGRADE     # 1.2 > 1 > 0.8
+        assert p.decide(backlog_s=1.5, **kw) == REJECT      # even degraded
+        assert p.decide(backlog_s=9.9, plan_cost_s=1.0, degraded_cost_s=1.0,
+                        slo_s=None) == ADMIT                # no SLO -> admit
+
+
+# ---------------------------------------------------------------------------
+# open-loop serving: conservation + SLO behaviour
+# ---------------------------------------------------------------------------
+
+
+def _open_pod(n_streams, policy=None, seed0=300, budget=1.8, variants=None):
+    variants = variants if variants is not None \
+        else profiles.make_ladder()[3:5]
+    lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+    loops, backends = [], []
+    for s in range(n_streams):
+        backend = OracleBackend(make_video(n_frames=64, n_objects=30,
+                                           seed=seed0 + s))
+        backends.append(backend)
+        loops.append(OmniSenseLoop(variants, lat, backend, budget_s=budget))
+    return PodServer(loops, backends, max_batch=8, policy=policy)
+
+
+class TestOpenLoopServing:
+    def _conservation(self, stats):
+        assert stats.arrivals == (stats.admitted + stats.rejected
+                                  + stats.missed)
+        assert stats.frames == stats.admitted  # every admitted finishes
+        assert stats.degraded <= stats.admitted
+
+    def test_conservation_across_policies(self):
+        for policy in (None, "deadline", AsyncDrainPolicy(),
+                       SyncTickPolicy(admission="slo")):
+            server = _open_pod(3, policy=policy)
+            traffic = ArrivalProcess(3, fps=0.8, jitter=0.2, seed=5,
+                                     horizon_s=15.0)
+            stats = server.run_open_loop(traffic, slo_s=2.5)
+            assert stats.arrivals == len(traffic.arrivals())
+            self._conservation(stats)
+            assert not len(server.queues) and not server._inflight
+
+    def test_missed_frames_counted_under_carry(self):
+        """With async carry a stream's previous frame can still be in
+        flight when the next arrival fires; the depth-1 camera buffer
+        drops (and counts) the newcomer instead of fabricating a queue
+        behind it."""
+        server = _open_pod(3, policy=AsyncDrainPolicy(max_carry=3))
+        stats = server.run_open_loop(
+            ArrivalProcess(3, fps=3.0, jitter=0.1, seed=2, horizon_s=8.0))
+        self._conservation(stats)
+        assert stats.missed > 0
+
+    def test_churned_stream_serves_both_sessions(self):
+        server = _open_pod(2)
+        churn = (ChurnEvent(4.0, 1, False), ChurnEvent(9.0, 1, True))
+        traffic = ArrivalProcess(2, fps=0.6, seed=4, horizon_s=14.0,
+                                 churn=churn)
+        stats = server.run_open_loop(traffic)
+        self._conservation(stats)
+        s1 = [a.t_s for a in traffic.arrivals() if a.stream == 1]
+        assert any(t < 4.0 for t in s1) and any(t >= 9.0 for t in s1)
+
+    def test_queue_delay_and_violations_grow_with_offered_load(self):
+        out = {}
+        for fps in (0.2, 3.0):
+            server = _open_pod(3)
+            stats = server.run_open_loop(
+                ArrivalProcess(3, fps=fps, seed=6, horizon_s=10.0),
+                slo_s=2.0)
+            out[fps] = stats
+        assert out[3.0].mean_queue_delay > out[0.2].mean_queue_delay
+        assert out[3.0].slo_violations > out[0.2].slo_violations
+        assert out[0.2].slo_violations == 0
+
+    def test_slo_admission_degrades_before_rejecting(self):
+        """Under pressure the SLO policy first forces the P1 variant;
+        the degraded plans emit only skip/P1 requests.  (Full ladder:
+        P1 is the cheap on-device variant, so the degrade band —
+        backlogs where only the degraded plan fits the envelope — is
+        wide enough to be exercised.)"""
+        server = _open_pod(4, policy=SyncTickPolicy(admission="slo"),
+                           variants=profiles.make_ladder())
+        p1_name = server.loops[0].variants[0].name
+        degraded_variants = set()
+        orig = server._admit_arrival
+
+        def spy(arrival):
+            before = server.stats.degraded
+            orig(arrival)
+            if server.stats.degraded > before:
+                e = server._stream_frame.get(arrival.stream)
+                if e is not None:
+                    degraded_variants.update(
+                        r.variant.name for r in e.pending.requests)
+
+        server._admit_arrival = spy
+        stats = server.run_open_loop(
+            ArrivalProcess(4, fps=2.5, seed=8, horizon_s=8.0), slo_s=1.0)
+        self._conservation(stats)
+        assert stats.degraded > 0
+        assert degraded_variants <= {p1_name}
+
+    def test_slo_admission_noop_under_light_load(self):
+        """At light load admission must not interfere: identical
+        service to admit-all (the bench gate's 'matching' half).
+        Light means service time genuinely under the arrival spacing
+        (cheap variants here) — equal-fps unjittered streams collide
+        at every emission, so jitter keeps the clocks staggered."""
+        runs = {}
+        for admission in (None, "slo"):
+            server = _open_pod(2, policy=SyncTickPolicy(admission=admission),
+                               variants=profiles.make_ladder()[:2])
+            runs[admission] = server.run_open_loop(
+                ArrivalProcess(2, fps=0.15, jitter=0.3, seed=9,
+                               horizon_s=20.0),
+                slo_s=2.5)
+        assert runs["slo"].rejected == 0 and runs["slo"].degraded == 0
+        assert runs["slo"].frames == runs[None].frames
+        assert runs["slo"].goodput_frames == runs[None].goodput_frames
+        assert runs["slo"].event_e2e == runs[None].event_e2e
+
+    def test_slo_admission_beats_admit_all_at_saturation(self):
+        """The bench gate's other half: at saturation, shedding load
+        keeps served frames inside the SLO — strictly more goodput.
+        Gated on USEFUL goodput (frames that did inference work):
+        under congestion collapse the starved predictor plans nothing
+        for most frames, and those instant empty completions must not
+        count in admit-all's favour."""
+        runs = {}
+        for admission in (None, "slo"):
+            server = _open_pod(4, policy=SyncTickPolicy(admission=admission))
+            runs[admission] = server.run_open_loop(
+                ArrivalProcess(4, fps=2.0, seed=10, horizon_s=10.0),
+                slo_s=1.5)
+        assert (runs["slo"].useful_goodput_frames
+                > runs[None].useful_goodput_frames)
+
+    def test_pod_allocate_policy_rejected(self):
+        server = _open_pod(2, policy=SyncTickPolicy(pod_allocate=True))
+        with pytest.raises(ValueError, match="open-loop"):
+            server.run_open_loop(
+                ArrivalProcess(2, fps=1.0, seed=0, horizon_s=2.0))
+
+    def test_causality_and_report(self):
+        server = _open_pod(3, policy=AsyncDrainPolicy())
+        traffic = ArrivalProcess(3, fps=1.0, jitter=0.3, seed=11,
+                                 horizon_s=10.0)
+        stats = server.run_open_loop(traffic, slo_s=2.0)
+        for tl in server.timelines:
+            for e in tl.events:
+                assert e.launch_s >= e.emitted_s - 1e-9
+                assert e.complete_s == pytest.approx(e.launch_s + e.cost_s)
+        lines = format_open_loop_report(stats, traffic.horizon_s)
+        assert any("arrivals" in ln for ln in lines)
+        assert any("SLO" in ln for ln in lines)
+
+    def test_arrivals_accepted_as_plain_iterable(self):
+        server = _open_pod(1)
+        stats = server.run_open_loop(
+            [Arrival(0.5, 0, 0), Arrival(1.0, 0, 1), Arrival(2.0, 0, 2)])
+        assert stats.arrivals == 3
+        self._conservation(stats)
