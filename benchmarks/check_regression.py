@@ -30,8 +30,15 @@ gated: SLO-aware admission must STRICTLY dominate admit-all on useful
 goodput at every saturated point and match it — shedding nothing — at
 every light point (deterministic seeded traffic, gated exactly).
 
+Both snapshots are validated against an EXPLICIT schema first
+(required keys per grid section, per nested policy/admission arm), so
+a malformed snapshot fails with a named error instead of a KeyError
+traceback; ``--schema-only PATH...`` runs just that validation (the
+nightly's BENCH_NMS.json check, which has no ratio gate):
+
     python benchmarks/check_regression.py \
         --baseline BENCH_SERVE.json --fresh fresh_serve.json
+    python benchmarks/check_regression.py --schema-only BENCH_NMS.json
 
 Invoked from .github/workflows/ci.yml's nightly job after the bench
 writes the fresh snapshot next to the checked-out baseline.
@@ -42,6 +49,104 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+
+# explicit snapshot schemas: per section, the required keys of every
+# grid entry plus the required keys of each nested per-arm dict.  The
+# gates below index these keys directly; validating HERE turns a
+# malformed snapshot (bench crashed mid-merge, grid renamed, arm
+# dropped) into a named error instead of a bare KeyError traceback.
+SERVE_SCHEMAS: dict[str, tuple[frozenset, dict[str, frozenset]]] = {
+    "grid": (frozenset({"streams", "per_request_us", "batched_us",
+                        "speedup"}), {}),
+    "pod_grid": (frozenset({"streams", "accuracy_ratio", "tick_ratio"}),
+                 {}),
+    "policy_grid": (frozenset({"streams", "async_tick_ratio"}),
+                    {"sync": frozenset({"mean_tick_s"}),
+                     "deadline": frozenset({"mean_tick_s"}),
+                     "async": frozenset({"mean_tick_s"})}),
+    "open_grid": (frozenset({"streams", "load"}),
+                  {"admit_all": frozenset({"useful_goodput", "rejected"}),
+                   "slo": frozenset({"useful_goodput", "rejected"})}),
+}
+
+NMS_ENTRY_KEYS = frozenset({"b", "n", "host_us", "batch_us", "speedup"})
+
+
+def _check_entry(entry, required: frozenset, where: str, log) -> bool:
+    if not isinstance(entry, dict):
+        log(f"::error::{where}: grid entry is {type(entry).__name__}, "
+            "not an object")
+        return False
+    missing = required - entry.keys()
+    if missing:
+        log(f"::error::{where}: entry missing required keys "
+            f"{sorted(missing)} (has {sorted(entry)})")
+        return False
+    return True
+
+
+def validate_serve(snapshot: dict, label: str, log=print) -> bool:
+    """Validate a BENCH_SERVE.json snapshot against the explicit
+    per-grid schemas; True when every PRESENT section conforms (absent
+    sections are the armed-baseline checks' concern, not a schema
+    error)."""
+    ok = True
+    present = [s for s in SERVE_SCHEMAS if snapshot.get(s)]
+    if not present:
+        log(f"::error::{label}: no known grid sections "
+            f"({sorted(SERVE_SCHEMAS)}) in snapshot")
+        return False
+    for section in present:
+        required, subs = SERVE_SCHEMAS[section]
+        entries = snapshot[section]
+        if not isinstance(entries, list):
+            log(f"::error::{label}: {section} is "
+                f"{type(entries).__name__}, not a list")
+            ok = False
+            continue
+        for i, entry in enumerate(entries):
+            where = f"{label}: {section}[{i}]"
+            if not _check_entry(entry, required, where, log):
+                ok = False
+                continue
+            for arm, arm_keys in subs.items():
+                if arm not in entry:
+                    log(f"::error::{where}: missing the {arm!r} arm "
+                        f"(policy/admission run absent from the merge)")
+                    ok = False
+                elif not _check_entry(entry[arm], arm_keys,
+                                      f"{where}.{arm}", log):
+                    ok = False
+    if ok:
+        log(f"schema ok [{label}]: " + ", ".join(
+            f"{s}({len(snapshot[s])})" for s in present))
+    return ok
+
+
+def validate_nms(snapshot: dict, label: str, log=print) -> bool:
+    """Validate a BENCH_NMS.json snapshot (no ratio gate exists for
+    NMS, so this schema check is its whole nightly validation)."""
+    entries = snapshot.get("grid")
+    if not isinstance(entries, list) or not entries:
+        log(f"::error::{label}: NMS snapshot has no grid entries")
+        return False
+    ok = all(_check_entry(e, NMS_ENTRY_KEYS, f"{label}: grid[{i}]", log)
+             for i, e in enumerate(entries))
+    if ok:
+        log(f"schema ok [{label}]: grid({len(entries)})")
+    return ok
+
+
+def validate_snapshot(snapshot: dict, label: str, log=print) -> bool:
+    """Dispatch on the snapshot's ``bench`` tag (serve vs NMS)."""
+    bench = snapshot.get("bench")
+    if bench == "spherical_nms":
+        return validate_nms(snapshot, label, log)
+    if bench == "variant_batched_serving":
+        return validate_serve(snapshot, label, log)
+    log(f"::error::{label}: unknown bench tag {bench!r} "
+        "(expected 'variant_batched_serving' or 'spherical_nms')")
+    return False
 
 
 def compare(baseline: dict, fresh: dict, max_regression: float,
@@ -189,8 +294,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", default="BENCH_SERVE.json",
                     help="committed snapshot (the repo checkout's copy)")
-    ap.add_argument("--fresh", required=True,
-                    help="just-measured snapshot to gate")
+    ap.add_argument("--fresh", default=None,
+                    help="just-measured snapshot to gate (required "
+                         "unless --schema-only)")
     ap.add_argument("--max-regression", type=float, default=0.25,
                     help="tolerated relative drop of the mean ratio")
     ap.add_argument("--key", default="speedup",
@@ -199,11 +305,30 @@ def main(argv=None) -> int:
     ap.add_argument("--pod-min-streams", type=int, default=8,
                     help="stream floor above which the pod-allocation "
                          "dominance invariant is enforced")
+    ap.add_argument("--schema-only", nargs="+", default=None,
+                    metavar="PATH",
+                    help="just validate these snapshots against the "
+                         "explicit schemas (bench kind auto-detected "
+                         "from the 'bench' tag) and exit; no baseline "
+                         "comparison")
     args = ap.parse_args(argv)
+    if args.schema_only:
+        ok = True
+        for path in args.schema_only:
+            with open(path) as f:
+                ok = validate_snapshot(json.load(f), path) and ok
+        return 0 if ok else 1
+    if args.fresh is None:
+        ap.error("--fresh is required (or use --schema-only)")
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
+    # schema first: the gates below index these keys directly, so a
+    # malformed snapshot fails with a named error, not a KeyError
+    if not (validate_serve(baseline, args.baseline)
+            and validate_serve(fresh, args.fresh)):
+        return 1
     ok = compare(baseline, fresh, args.max_regression, key=args.key)
     if baseline.get("pod_grid") and not fresh.get("pod_grid"):
         # a baseline with a pod_grid means the pod gate is armed; a

@@ -76,6 +76,11 @@ import numpy as np
 SERVE_GRID = (1, 2, 4, 8, 16)   # streams per tick
 SROIS_PER_STREAM = 2
 SERVE_JSON_PATH = os.environ.get("BENCH_SERVE_JSON", "BENCH_SERVE.json")
+# when set (env or --events-dir), every deterministic serving run also
+# writes its structured JSONL telemetry log here
+# (repro.serving.telemetry) — the nightly CI uploads the directory as
+# an artifact next to the bench JSONs
+EVENTS_DIR = os.environ.get("BENCH_EVENTS_DIR") or None
 
 POD_GRID = (2, 4, 8, 16)        # streams for the pod-allocation frontier
 POD_FRAMES = 12
@@ -308,9 +313,21 @@ def _policy_variants():
     return [ladder[0], ladder[4]]
 
 
+def _events_sink(tag: str):
+    """A JSONL telemetry sink under ``EVENTS_DIR`` (None when event
+    logging is off)."""
+    if EVENTS_DIR is None:
+        return None
+    from repro.serving.telemetry import JsonlSink
+
+    os.makedirs(EVENTS_DIR, exist_ok=True)
+    return JsonlSink(os.path.join(EVENTS_DIR, f"{tag}.jsonl"))
+
+
 def _build_pod(n_streams: int, frames: int, devices: int,
                policy: str = "sync", pod_allocate: bool = False,
-               variants=None, budget_fn=None, admission=None):
+               variants=None, budget_fn=None, admission=None,
+               telemetry=None):
     """One deterministic oracle pod (no wall clock in any metric).
 
     ``policy`` names a ``repro.serving.runtime`` drain policy;
@@ -343,16 +360,21 @@ def _build_pod(n_streams: int, frames: int, devices: int,
     placement = VariantPlacement.virtual(variants, devices, cost_fn=lat._inf)
     return PodServer(loops, backends, max_batch=8, placement=placement,
                      policy=make_policy(policy, pod_allocate=pod_allocate,
-                                        admission=admission))
+                                        admission=admission),
+                     telemetry=telemetry)
 
 
 def _pod_serve(n_streams: int, pod_allocate: bool, frames: int,
                devices: int, policy: str = "sync", variants=None,
-               budget_fn=None):
+               budget_fn=None, events_tag: str | None = None):
+    telemetry = _events_sink(events_tag) if events_tag else None
     server = _build_pod(n_streams, frames, devices, policy=policy,
                         pod_allocate=pod_allocate, variants=variants,
-                        budget_fn=budget_fn)
-    return server.run(range(frames))
+                        budget_fn=budget_fn, telemetry=telemetry)
+    stats = server.run(range(frames))
+    if telemetry is not None:
+        telemetry.close()
+    return stats
 
 
 def run_pod_allocation(csv=print, grid=POD_GRID, json_path=SERVE_JSON_PATH,
@@ -367,8 +389,10 @@ def run_pod_allocation(csv=print, grid=POD_GRID, json_path=SERVE_JSON_PATH,
     """
     entries = []
     for n_streams in grid:
-        base = _pod_serve(n_streams, False, frames, devices)
-        coup = _pod_serve(n_streams, True, frames, devices)
+        base = _pod_serve(n_streams, False, frames, devices,
+                          events_tag=f"pod_s{n_streams}_uncoupled")
+        coup = _pod_serve(n_streams, True, frames, devices,
+                          events_tag=f"pod_s{n_streams}_coupled")
         base_tick = base.sum_tick_inf_s / max(base.ticks, 1)
         coup_tick = coup.sum_tick_inf_s / max(coup.ticks, 1)
         entry = dict(
@@ -448,7 +472,8 @@ def run_policy_grid(csv=print, grid=POLICY_GRID, json_path=SERVE_JSON_PATH,
         for policy in POLICIES:
             stats = _pod_serve(n_streams, False, frames, devices,
                                policy=policy, variants=variants,
-                               budget_fn=budget_fn)
+                               budget_fn=budget_fn,
+                               events_tag=f"policy_s{n_streams}_{policy}")
             entry[policy] = _policy_metrics(stats)
         entry["async_tick_ratio"] = round(
             entry["async"]["mean_tick_s"]
@@ -478,18 +503,23 @@ def run_policy_grid(csv=print, grid=POLICY_GRID, json_path=SERVE_JSON_PATH,
 
 
 def _open_serve(n_streams: int, admission: str, fps: float, jitter: float,
-                horizon_s: float, devices: int = OPEN_DEVICES):
+                horizon_s: float, devices: int = OPEN_DEVICES,
+                events_tag: str | None = None):
     """One open-loop run: arrival-clocked traffic into the oracle pod."""
     from repro.serving.traffic import ArrivalProcess
 
     frames = max(16, int(horizon_s * fps) + 8)
+    telemetry = _events_sink(events_tag) if events_tag else None
     server = _build_pod(n_streams, frames, devices,
                         budget_fn=lambda s: OPEN_BUDGET_S,
                         admission=None if admission == "admit-all"
-                        else admission)
+                        else admission, telemetry=telemetry)
     traffic = ArrivalProcess(n_streams, fps=fps, jitter=jitter, seed=0,
                              horizon_s=horizon_s)
-    return server.run_open_loop(traffic, slo_s=OPEN_SLO_S)
+    stats = server.run_open_loop(traffic, slo_s=OPEN_SLO_S)
+    if telemetry is not None:
+        telemetry.close()
+    return stats
 
 
 def _open_metrics(stats, horizon_s: float) -> dict:
@@ -538,8 +568,9 @@ def run_open_grid(csv=print, grid=OPEN_GRID, json_path=SERVE_JSON_PATH,
     for n_streams in grid:
         for load, fps_fn, jitter, horizon_s in points:
             fps = fps_fn(n_streams)
-            runs = {adm: _open_serve(n_streams, adm, fps, jitter, horizon_s,
-                                     devices)
+            runs = {adm: _open_serve(
+                        n_streams, adm, fps, jitter, horizon_s, devices,
+                        events_tag=f"open_s{n_streams}_{load}_{adm}")
                     for adm in OPEN_ADMISSIONS}
             entry = dict(
                 streams=n_streams, load=load,
@@ -602,7 +633,15 @@ def main() -> None:
                          "shedding into an open_grid section (virtual "
                          "device slots — no jax devices needed)")
     ap.add_argument("--json", default=SERVE_JSON_PATH)
+    ap.add_argument("--events-dir", default=None, metavar="DIR",
+                    help="also write one JSONL telemetry event log per "
+                         "deterministic serving run under DIR "
+                         "(default: $BENCH_EVENTS_DIR; the nightly CI "
+                         "uploads these next to the bench JSONs)")
     args = ap.parse_args()
+    if args.events_dir:
+        global EVENTS_DIR
+        EVENTS_DIR = args.events_dir
     if args.open_loop:
         run_open_grid(json_path=args.json,
                       devices=args.devices or OPEN_DEVICES)

@@ -31,9 +31,8 @@ no accelerators consulted:
 (``repro.serving.pod_allocation``): each tick the per-stream knapsacks
 are coupled through amortized batched costs and per-group queue
 depth/utilisation by a fixed-point loop.  Since the runtime refactor
-this is a property of the POLICY (``SchedulePolicy(pod_allocate=True)``)
-— passing ``--pod-allocate`` without ``--policy`` still works but emits
-a ``DeprecationWarning`` (never a silent remap):
+this is a property of the POLICY (``SchedulePolicy(pod_allocate=True)``;
+the transitional bare-flag DeprecationWarning was removed on schedule):
 
     PYTHONPATH=src python -m repro.launch.serve --streams 8 --devices 8 \
         --policy sync --pod-allocate
@@ -59,7 +58,6 @@ lane (both force fake host devices via
 from __future__ import annotations
 
 import argparse
-import warnings
 
 import numpy as np
 
@@ -109,19 +107,14 @@ def main() -> None:
                     help="open-loop admission policy: admit everything, or "
                          "degrade/reject when projected load exceeds the "
                          "SLO envelope")
+    ap.add_argument("--events", default=None, metavar="PATH",
+                    help="write the structured JSONL telemetry event log "
+                         "here (repro.serving.telemetry; inspect with "
+                         "python -m repro.launch.replay report PATH)")
     args = ap.parse_args()
     if args.open_loop and args.pod_allocate:
         ap.error("--open-loop admits frames per arrival; the pod-level "
                  "fixed point is tick-batch-synchronous (drop one flag)")
-    if args.pod_allocate and args.policy is None:
-        # explicit, never a silent remap: the flag now configures the
-        # policy object's admission half
-        warnings.warn(
-            "--pod-allocate without --policy is deprecated: pod-level "
-            "allocation is an admission property of the schedule policy "
-            "(defaulting to --policy sync). Pass --policy explicitly; "
-            "the bare flag will be removed two PRs after the runtime "
-            "refactor.", DeprecationWarning, stacklevel=1)
     policy = make_policy(args.policy or "sync",
                          pod_allocate=args.pod_allocate,
                          admission=args.admission if args.open_loop
@@ -149,8 +142,14 @@ def main() -> None:
         placement = VariantPlacement.virtual(variants, args.devices,
                                              cost_fn=lat._inf)
 
+    telemetry = None
+    if args.events:
+        from repro.serving.telemetry import JsonlSink
+
+        telemetry = JsonlSink(args.events)
     server = PodServer(loops, backends, max_batch=args.max_batch,
-                       placement=placement, policy=policy)
+                       placement=placement, policy=policy,
+                       telemetry=telemetry)
     horizon_s = None
     if args.open_loop:
         from repro.serving.traffic import ArrivalProcess
@@ -162,6 +161,9 @@ def main() -> None:
         stats = server.run_open_loop(traffic, slo_s=args.slo)
     else:
         stats = server.run(range(args.frames))
+    if telemetry is not None:
+        telemetry.close()
+        print(f"telemetry event log: {args.events}")
     print(f"served {stats.frames} frames across {args.streams} streams "
           f"[{stats.policy} policy]")
     print(f"detections: {stats.total_detections}  "

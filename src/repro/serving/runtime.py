@@ -320,6 +320,13 @@ class SchedulePolicy:
         self.pod_allocate = pod_allocate
         self.admission = make_admission(admission)
 
+    def describe(self) -> dict:
+        """The policy's replayable configuration — what the telemetry
+        ``run_meta`` records and the replay harness reconstructs
+        (subclasses extend with their own knobs, e.g. ``max_carry``)."""
+        return {"name": self.name, "pod_allocate": self.pod_allocate,
+                "admission": self.admission.name}
+
     # -- drain -------------------------------------------------------------
 
     def plan_drain(self, queues, buckets, placement, clock: GroupClock, *,
@@ -480,6 +487,9 @@ class AsyncDrainPolicy(SchedulePolicy):
         if max_carry < 1:
             raise ValueError(f"max_carry must be >= 1, got {max_carry}")
         self.max_carry = max_carry
+
+    def describe(self) -> dict:
+        return {**super().describe(), "max_carry": self.max_carry}
 
     def plan_drain(self, queues, buckets, placement, clock, *,
                    chunk_cost=None, projected_load=None) -> list[DrainOp]:

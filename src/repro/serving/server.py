@@ -51,7 +51,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Callable
 
 import numpy as np
@@ -63,6 +62,8 @@ from repro.core.sphere import (nms_auto_backend, pad_detection_rows,
 from repro.serving.batching import QueuedRequest, ShapeBuckets, VariantQueues
 from repro.serving.runtime import (DEGRADE, REJECT, DispatchEvent, GroupClock,
                                    SyncTickPolicy, TickTimeline, make_policy)
+from repro.serving.telemetry import (SCHEMA_VERSION, TelemetrySink,
+                                     detections_digest)
 
 
 @dataclasses.dataclass
@@ -278,37 +279,32 @@ class PodServer:
     instance or registered name (``"sync"``/``"deadline"``/``"async"``)
     and owns admission, drain ordering and carry-over; the default
     ``SyncTickPolicy`` reproduces the pre-runtime tick barrier
-    bit-identically.  The old boolean opt-ins are deprecation shims:
-    ``pod_allocate=True`` maps to ``SyncTickPolicy(pod_allocate=True)``
-    with a ``DeprecationWarning`` and will be removed two PRs after
-    this refactor (see README "Migration").
+    bit-identically.  (The PR 5 ``pod_allocate=`` DeprecationWarning
+    shim was removed on schedule: pod-level allocation is configured on
+    the policy object only — see README "Migration".)
+
+    ``telemetry`` is a :class:`repro.serving.telemetry.TelemetrySink`
+    (default no-op): every arrival, admission verdict, emission,
+    dispatch launch/complete, carry, rebalance, policy decision, tick
+    close and frame finish emits one structured record — the event log
+    the replay harness (``repro.serving.replay``) re-drives.  Records
+    carry only deterministic quantities (event-clock seconds, model
+    prices, detection digests), never wall-clock time.
     """
 
     def __init__(self, loops: list[OmniSenseLoop], backends: list,
                  max_batch: int = 8, marginal_batch_cost: float | None = None,
                  buckets: ShapeBuckets | None = None,
                  frame_source: Callable[[int, int], np.ndarray] | None = None,
-                 placement=None, policy=None,
-                 pod_allocate: bool | None = None):
+                 placement=None, policy=None, telemetry=None):
         assert len(loops) == len(backends)
         self.loops = loops
         self.backends = backends
         self.max_batch = max_batch
-        if pod_allocate is not None:
-            if policy is not None:
-                raise ValueError(
-                    "pass pod allocation on the policy "
-                    "(SchedulePolicy(pod_allocate=...)), not both policy= "
-                    "and the deprecated pod_allocate=")
-            warnings.warn(
-                "PodServer(pod_allocate=...) is deprecated; pass "
-                "policy=SyncTickPolicy(pod_allocate=...) (or a policy "
-                "name plus pod_allocate on the policy object). The shim "
-                "will be removed two PRs after the runtime refactor.",
-                DeprecationWarning, stacklevel=2)
-            policy = SyncTickPolicy(pod_allocate=bool(pod_allocate))
         self.policy = make_policy(policy) if policy is not None \
             else SyncTickPolicy()
+        self.telemetry = telemetry if telemetry is not None \
+            else TelemetrySink()
         if self.policy.pod_allocate:
             ladder = tuple(v.name for v in loops[0].variants)
             for loop in loops:
@@ -375,6 +371,22 @@ class PodServer:
         self.slo_s: float | None = None
         self._open_horizon = 0.0
         self._stream_frame: dict[int, _InFlightFrame] = {}
+        # monotone dispatch id joining each telemetry launch/complete
+        # record pair across the whole run
+        self._dispatch_seq = 0
+
+    def _emit_run_meta(self, mode: str) -> None:
+        """One ``run_meta`` telemetry record per run entry point."""
+        if not self.telemetry.enabled:
+            return
+        self.telemetry.emit(
+            "run_meta", schema=SCHEMA_VERSION, mode=mode,
+            n_streams=len(self.loops), policy=self.policy.describe(),
+            max_batch=self.max_batch,
+            devices=self.placement.n_devices if self.placement is not None
+            else 0,
+            variants=[v.name for v in self.loops[0].variants],
+            slo_s=self.slo_s)
 
     def _resolve_curve_hook(self, attr: str):
         """One pod-wide tick-charge hook across the streams' latency
@@ -542,6 +554,13 @@ class PodServer:
                     latency_model=loop.latency_model,
                     deadline=loop.budget_s, emitted_s=self.clock.now,
                     frame_idx=frame_idx))
+            if self.telemetry.enabled:
+                self.telemetry.emit(
+                    "emit", t_s=self.clock.now, stream=s,
+                    frame_idx=frame_idx, n_requests=len(pending.requests),
+                    plan_value=pending.plan.value
+                    if pending.plan is not None else 0.0,
+                    variants=[req.variant.name for req in pending.requests])
 
         # ---- placement feedback: fold this tick's variant mix into the
         # popularity EMA and re-balance replica groups if the allocator
@@ -552,7 +571,9 @@ class PodServer:
                 for req in pending.requests:
                     counts[req.variant.name] = counts.get(req.variant.name, 0) + 1
             self.placement.observe(counts)
-            self.placement.maybe_rebalance()
+            if self.placement.maybe_rebalance() and self.telemetry.enabled:
+                self.telemetry.emit("rebalance", t_s=self.clock.now,
+                                    groups=self.placement.device_counts())
 
         # ---- drain: the policy picks order and carry-over; every
         # admitted chunk is one batched forward routed to (and sharded
@@ -561,12 +582,25 @@ class PodServer:
         ops = self.policy.plan_drain(
             self.queues, self.buckets, self.placement, self.clock,
             chunk_cost=self._chunk_cost, projected_load=self._projected_load)
+        self._emit_policy_decision(timeline, ops)
         self._execute(ops, timeline, self.policy.close_tick)
         self.stats.ticks += 1
         self.stats.carried_requests += len(self.queues)
 
         # ---- ingestion: frames whose last request resolved finish now ----
         self._ingest()
+
+    def _emit_policy_decision(self, timeline: TickTimeline, ops) -> None:
+        """One ``policy_decision`` record per planned drain (the plan
+        as the policy returned it, before execution)."""
+        if not self.telemetry.enabled:
+            return
+        self.telemetry.emit(
+            "policy_decision", tick=timeline.tick, t_s=timeline.start,
+            policy=self.policy.name,
+            ops=[{"variant": op.variant, "take": op.take}
+                 if hasattr(op, "variant") else
+                 {"variant": op[0], "take": op[1]} for op in ops])
 
     def _execute(self, ops, timeline: TickTimeline, close) -> None:
         """Dispatch a drain plan, book it on the event clock, charge
@@ -595,18 +629,43 @@ class PodServer:
             self.stats.group_busy_s[gidx] = (
                 self.stats.group_busy_s.get(gidx, 0.0) + batched)
             self.stats.group_devices[gidx] = n_dev
+            delays = []
             for it in d["items"]:
                 owner = self._by_owner[id(it.owner)]
                 owner.done_s = max(owner.done_s, complete)
-                self.stats.queue_delays.append(
-                    max(0.0, launch - it.emitted_s))
+                delays.append(max(0.0, launch - it.emitted_s))
+            self.stats.queue_delays.extend(delays)
+            if self.telemetry.enabled:
+                self._dispatch_seq += 1
+                self.telemetry.emit(
+                    "dispatch_launch", tick=event.tick,
+                    dispatch=self._dispatch_seq, variant=event.variant,
+                    b=event.b, padded=event.padded, group=gidx,
+                    n_devices=n_dev, cost_s=batched, launch_s=launch,
+                    emitted_s=event.emitted_s, carried=event.carried,
+                    queue_delays=delays)
+                self.telemetry.emit(
+                    "dispatch_complete", tick=event.tick,
+                    dispatch=self._dispatch_seq, variant=event.variant,
+                    group=gidx, complete_s=complete, cost_s=batched)
         for item, dets in results:
             self._by_owner[id(item.owner)].slots[item.request.slot] = dets
         self.timelines.append(timeline)
+        if self.telemetry.enabled and len(self.queues):
+            self.telemetry.emit(
+                "carry", tick=timeline.tick, t_s=self.clock.now,
+                queued={name: c for name, c in self.queues.counts().items()
+                        if c},
+                total=len(self.queues))
         charge, next_start = close(self.clock, timeline,
                                    self._tick_lat, self._overlap_lat)
         self.stats.sum_tick_inf_s += charge
         self.clock.advance(next_start)
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "tick_close", tick=timeline.tick, t_s=timeline.start,
+                charge_s=charge, next_start_s=next_start,
+                dispatches=len(timeline.events))
 
     def _ingest(self) -> None:
         """Finish every in-flight frame whose requests all resolved
@@ -642,11 +701,20 @@ class PodServer:
             self.stats.sum_overhead += result.overhead_s
             e2e = max(0.0, e.done_s - e.emitted_s)
             self.stats.event_e2e.append(e2e)
-            if self.slo_s is not None and e2e > self.slo_s + 1e-12:
+            violated = (self.slo_s is not None
+                        and e2e > self.slo_s + 1e-12)
+            if violated:
                 self.stats.slo_violations += 1
             if (e.stream is not None
                     and self._stream_frame.get(e.stream) is e):
                 del self._stream_frame[e.stream]
+            if self.telemetry.enabled:
+                self.telemetry.emit(
+                    "frame_finish", t_s=e.done_s, stream=e.stream,
+                    frame_idx=e.frame_idx, event_e2e_s=e2e,
+                    n_detections=len(result.detections),
+                    det_digest=detections_digest(result.detections),
+                    slo_violation=violated)
 
     def _suppress_tick(self, plans: list) -> float:
         """Batched spherical NMS across the tick; returns wall time.
@@ -755,6 +823,7 @@ class PodServer:
         return charge, horizon
 
     def run(self, frames: range) -> ServeStats:
+        self._emit_run_meta("closed")
         for f in frames:
             self.step(f)
         self.flush()
@@ -794,6 +863,7 @@ class PodServer:
         self.slo_s = slo_s
         self.stats.slo_s = slo_s
         self.stats.admission = self.policy.admission.name
+        self._emit_run_meta("open")
         self._open_horizon = self.clock.now
         i, n = 0, len(arrivals)
         while i < n:
@@ -820,9 +890,14 @@ class PodServer:
         s = arrival.stream
         loop, backend = self.loops[s], self.backends[s]
         self.stats.arrivals += 1
+        if self.telemetry.enabled:
+            self.telemetry.emit("arrival", t_s=arrival.t_s, stream=s,
+                                frame_idx=arrival.frame_idx)
         prev = self._stream_frame.get(s)
         if prev is not None and not prev.complete:
             self.stats.missed += 1
+            if self.telemetry.enabled:
+                self._emit_admission(arrival, "missed", None, None, None)
             return
         if hasattr(backend, "set_frame"):
             backend.set_frame(arrival.frame_idx)
@@ -841,15 +916,16 @@ class PodServer:
         # plan costs are MARGINAL: joint backlog (plan batched with the
         # queued demand, the way the drain executes) minus the bare one
         backlog = self._open_backlog()
+        plan_cost = max(
+            0.0, self._open_backlog(self._plan_counts(loop, plan)) - backlog)
+        degraded_cost = max(
+            0.0, self._open_backlog(self._plan_counts(loop, dplan)) - backlog)
         verdict = self.policy.admission.decide(
-            backlog_s=backlog,
-            plan_cost_s=max(
-                0.0,
-                self._open_backlog(self._plan_counts(loop, plan)) - backlog),
-            degraded_cost_s=max(
-                0.0,
-                self._open_backlog(self._plan_counts(loop, dplan)) - backlog),
-            slo_s=self.slo_s)
+            backlog_s=backlog, plan_cost_s=plan_cost,
+            degraded_cost_s=degraded_cost, slo_s=self.slo_s)
+        if self.telemetry.enabled:
+            self._emit_admission(arrival, verdict, backlog, plan_cost,
+                                 degraded_cost)
         if verdict == REJECT:
             self.stats.rejected += 1
             return
@@ -874,12 +950,32 @@ class PodServer:
                 latency_model=loop.latency_model,
                 deadline=loop.budget_s, emitted_s=arrival.t_s,
                 frame_idx=arrival.frame_idx))
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "emit", t_s=arrival.t_s, stream=s,
+                frame_idx=arrival.frame_idx,
+                n_requests=len(pending.requests),
+                plan_value=pending.plan.value
+                if pending.plan is not None else 0.0,
+                variants=[req.variant.name for req in pending.requests])
         if self.placement is not None and pending.requests:
             counts: dict[str, int] = {}
             for req in pending.requests:
                 counts[req.variant.name] = counts.get(req.variant.name, 0) + 1
             self.placement.observe(counts)
-            self.placement.maybe_rebalance()
+            if self.placement.maybe_rebalance() and self.telemetry.enabled:
+                self.telemetry.emit("rebalance", t_s=arrival.t_s,
+                                    groups=self.placement.device_counts())
+
+    def _emit_admission(self, arrival, verdict: str, backlog_s,
+                        plan_cost_s, degraded_cost_s) -> None:
+        """One ``admission`` record per arrival verdict (``missed``
+        frames never reach the policy, so their cost fields are null)."""
+        self.telemetry.emit(
+            "admission", t_s=arrival.t_s, stream=arrival.stream,
+            frame_idx=arrival.frame_idx, verdict=verdict,
+            backlog_s=backlog_s, plan_cost_s=plan_cost_s,
+            degraded_cost_s=degraded_cost_s, slo_s=self.slo_s)
 
     def _open_backlog(self, extra: dict | None = None) -> float:
         """The admission policy's load signal: per replica group, busy
@@ -944,6 +1040,7 @@ class PodServer:
         ops = self.policy.plan_drain(
             self.queues, self.buckets, self.placement, self.clock,
             chunk_cost=self._chunk_cost, projected_load=None)
+        self._emit_policy_decision(timeline, ops)
         self._execute(ops, timeline, self._open_close)
         if timeline.events:
             self.stats.ticks += 1

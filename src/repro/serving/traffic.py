@@ -193,3 +193,21 @@ class ArrivalProcess:
     def offered_rate(self) -> float:
         """Offered load in frames per second over the horizon."""
         return len(self.arrivals()) / (self.horizon_s - self.start_s)
+
+
+def arrivals_from_records(records) -> list[Arrival]:
+    """Rebuild a time-ordered :class:`Arrival` list from telemetry
+    ``arrival`` records (``repro.serving.telemetry``).
+
+    This is the replay harness's traffic source: instead of
+    regenerating an :class:`ArrivalProcess` from its seed, the replay
+    re-drives the EXACT arrivals a recorded run saw (float64 times
+    round-trip JSON exactly), so churn and rate traces are baked into
+    the trace and never need reconstructing.  Records of other event
+    types are ignored, so a whole event log can be passed verbatim.
+    """
+    out = [Arrival(t_s=r["t_s"], stream=r["stream"],
+                   frame_idx=r["frame_idx"])
+           for r in records if r.get("event", "arrival") == "arrival"]
+    out.sort(key=lambda a: (a.t_s, a.stream))
+    return out

@@ -17,13 +17,12 @@ Pins the runtime/policy refactor of the pod serving plane:
     staleness, conservation of frames) and strictly undercuts the sync
     barrier's mean tick at 8 streams / 2 variants — the test-scale
     twin of the ``serving_bench --policy`` nightly gate;
-  * the old ``PodServer(pod_allocate=...)`` boolean maps through a
-    ``DeprecationWarning`` shim onto the policy object;
+  * the old ``PodServer(pod_allocate=...)`` boolean is GONE (the PR 5
+    shim was removed on schedule): the keyword raises ``TypeError``
+    and the boolean lives on the policy object only;
   * ``solve_pod`` exports its per-group ``projected_load`` and the
     policies consume it instead of recomputing the curve.
 """
-
-import warnings
 
 import numpy as np
 import pytest
@@ -216,7 +215,11 @@ class TestPolicyAPI:
         assert server.stats.policy == "sync"
         assert server.pod_allocate is False
 
-    def test_pod_allocate_shim_warns_and_maps(self):
+    def test_pod_allocate_shim_removed(self):
+        """The PR 5 ``pod_allocate=`` DeprecationWarning shim was
+        scheduled for removal at ~PR 7; pin that it's gone — the
+        keyword now fails like any unknown argument instead of
+        warning-and-mapping."""
         variants = profiles.make_ladder()[3:5]
         lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
         loops, backends = [], []
@@ -225,15 +228,12 @@ class TestPolicyAPI:
                                                seed=s))
             backends.append(backend)
             loops.append(OmniSenseLoop(variants, lat, backend, budget_s=1.8))
-        with pytest.warns(DeprecationWarning, match="pod_allocate"):
-            server = PodServer(loops, backends, pod_allocate=True)
+        with pytest.raises(TypeError, match="pod_allocate"):
+            PodServer(loops, backends, pod_allocate=True)
+        # the replacement spelling: the boolean lives on the policy
+        server = PodServer(loops, backends,
+                           policy=SyncTickPolicy(pod_allocate=True))
         assert server.pod_allocate is True
-        assert isinstance(server.policy, SyncTickPolicy)
-        with pytest.warns(DeprecationWarning):
-            server = PodServer(loops, backends, pod_allocate=False)
-        assert server.pod_allocate is False
-        with pytest.raises(ValueError):
-            PodServer(loops, backends, policy="sync", pod_allocate=True)
 
     def test_policy_name_accepted_by_server(self):
         server = _oracle_pod(2, policy="async")
@@ -405,8 +405,10 @@ class TestSyncEquivalence:
         assert total == server.stats.sum_tick_inf_s
 
     def test_sync_pod_allocate_stats_unchanged(self):
-        """The pod-allocation path through the policy object matches
-        the old boolean path (same fixed point, same stats)."""
+        """The pod-allocation path is stable across server builds:
+        two identically seeded coupled pods (policy-object spelling —
+        the only spelling since the shim removal) agree on every
+        deterministic stat."""
         a = _oracle_pod(4, frames=4, devices=8,
                         policy=SyncTickPolicy(pod_allocate=True))
         sa = a.run(range(4))
@@ -424,10 +426,8 @@ class TestSyncEquivalence:
         from repro.serving.placement import VariantPlacement
 
         placement = VariantPlacement.virtual(variants, 8, cost_fn=lat._inf)
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            b = PodServer(loops, backends, max_batch=8, placement=placement,
-                          pod_allocate=True)
+        b = PodServer(loops, backends, max_batch=8, placement=placement,
+                      policy=SyncTickPolicy(pod_allocate=True))
         sb = b.run(range(4))
         assert sa.pod_ticks == sb.pod_ticks
         assert sa.pod_rounds == sb.pod_rounds

@@ -1,0 +1,249 @@
+"""Structured telemetry + deterministic replay (PR 7).
+
+Pins the event-log/replay substrate:
+
+  * schema enforcement at emit time: every record type a serving run
+    produces is in ``EVENT_FIELDS`` with its required keys present;
+    unknown types and missing keys are rejected at the PRODUCER;
+  * JSONL round-trip: a log written by ``JsonlSink`` reads back
+    (``read_events``) EQUAL to the in-memory record stream of the
+    identical seeded run — floats, dicts, digests and all;
+  * telemetry is a pure observer: a run with a sink attached yields
+    the same deterministic ``ServeStats`` as one without;
+  * replay determinism (the CI lane's in-repo twin): a recorded
+    corpus re-driven under its own policy reproduces the stats
+    fingerprint and every per-frame detection digest BIT-IDENTICALLY
+    — closed loop, open loop with churn, and ``AsyncDrainPolicy``
+    carry-over; tampering with the log is caught as drift;
+  * the policy-diff path replays the same content under a different
+    policy and reports, never claims identity;
+  * ``format_timeline_report`` renders its summary from a log ALONE.
+"""
+
+import json
+
+import pytest
+
+from repro.serving.replay import (CorpusSpec, build_pod, format_policy_diff,
+                                  record, replay, stats_fingerprint)
+from repro.serving.telemetry import (EVENT_FIELDS, JsonlSink, MemorySink,
+                                     TelemetrySink, detections_digest,
+                                     format_timeline_report, read_events,
+                                     validate_event)
+from repro.serving.traffic import Arrival, arrivals_from_records
+
+# small corpora keep the module in the fast tier; churn + async carry
+# exercise the interesting event types (carry, admission, rebalance)
+CLOSED_SPEC = CorpusSpec(mode="closed", n_streams=3, frames=4,
+                         policy="async", devices=4)
+OPEN_SPEC = CorpusSpec(mode="open", n_streams=3, frames=4, budget_s=0.9,
+                       devices=4, admission="slo", slo_s=2.0, fps=0.8,
+                       jitter=0.2, horizon_s=8.0,
+                       churn=((2.0, 1, False), (5.0, 1, True)))
+
+
+@pytest.fixture(scope="module")
+def closed_log():
+    sink = MemorySink()
+    stats = record(CLOSED_SPEC, sink)
+    return sink.events, stats
+
+
+@pytest.fixture(scope="module")
+def open_log():
+    sink = MemorySink()
+    stats = record(OPEN_SPEC, sink)
+    return sink.events, stats
+
+
+# ---------------------------------------------------------------------------
+# schema
+# ---------------------------------------------------------------------------
+
+
+class TestSchema:
+    def test_unknown_event_type_rejected(self):
+        with pytest.raises(ValueError, match="unknown telemetry event"):
+            validate_event({"event": "teleport", "t_s": 0.0})
+        with pytest.raises(ValueError, match="unknown telemetry event"):
+            MemorySink().emit("teleport", t_s=0.0)
+
+    def test_missing_required_key_rejected_at_emit(self):
+        with pytest.raises(ValueError, match="missing required keys"):
+            MemorySink().emit("arrival", t_s=0.0, stream=0)  # no frame_idx
+
+    def test_extra_keys_tolerated(self):
+        sink = MemorySink()
+        sink.emit("arrival", t_s=0.0, stream=0, frame_idx=0,
+                  future_field=1)  # readers must tolerate forward growth
+        assert sink.events[0]["future_field"] == 1
+
+    def test_every_emitted_type_is_schema_complete(self, closed_log,
+                                                   open_log):
+        """Each record carries its type's required keys (enforced at
+        emit), and between them the two corpora exercise every event
+        type in EVENT_FIELDS except ``rebalance`` (placement-shift
+        dependent — covered by validate_event directly)."""
+        seen = set()
+        for events, _ in (closed_log, open_log):
+            for e in events:
+                assert EVENT_FIELDS[e["event"]] <= e.keys()
+                seen.add(e["event"])
+        optional = {"rebalance"}
+        assert set(EVENT_FIELDS) - seen <= optional
+        validate_event({"event": "rebalance", "t_s": 0.0,
+                        "groups": {"v": 2}})
+
+    def test_open_log_has_admission_and_carry_coverage(self, open_log,
+                                                       closed_log):
+        events, _ = open_log
+        verdicts = {e["verdict"] for e in events
+                    if e["event"] == "admission"}
+        assert "admit" in verdicts
+        closed_events, _ = closed_log
+        assert any(e["event"] == "carry" for e in closed_events), \
+            "async closed corpus should carry residual chunks"
+
+    def test_detections_digest_discriminates(self):
+        class Det:
+            def __init__(self, box, category, score):
+                self.box, self.category, self.score = box, category, score
+
+        a = [Det((0.1, 0.2, 0.3, 0.4), 3, 0.9)]
+        b = [Det((0.1, 0.2, 0.3, 0.4), 3, 0.9)]
+        c = [Det((0.1, 0.2, 0.3, 0.40000001), 3, 0.9)]
+        assert detections_digest(a) == detections_digest(b)
+        assert detections_digest(a) != detections_digest(c)
+        assert detections_digest([]) != detections_digest(a)
+
+
+# ---------------------------------------------------------------------------
+# round-trip + observer purity
+# ---------------------------------------------------------------------------
+
+
+class TestRoundTrip:
+    def test_jsonl_round_trips_the_memory_stream(self, tmp_path,
+                                                 closed_log):
+        """Writing the identical seeded run through a JsonlSink and
+        reading it back yields records EQUAL to the in-memory ones."""
+        mem_events, _ = closed_log
+        path = str(tmp_path / "corpus.jsonl")
+        record(CLOSED_SPEC, JsonlSink(path))
+        assert read_events(path) == mem_events
+
+    def test_read_events_rejects_bad_lines(self, tmp_path):
+        path = str(tmp_path / "bad.jsonl")
+        with open(path, "w") as f:
+            f.write(json.dumps({"event": "arrival", "t_s": 0.0,
+                                "stream": 0, "frame_idx": 0}) + "\n")
+            f.write("{not json\n")
+        with pytest.raises(ValueError, match="bad.jsonl:2"):
+            read_events(path)
+
+    def test_default_sink_is_a_pure_observer(self, closed_log):
+        """A run with NO sink (the default no-op) produces the same
+        deterministic stats as the recorded run — telemetry never
+        perturbs scheduling, pricing or detections."""
+        _, recorded_stats = closed_log
+        bare = build_pod(CLOSED_SPEC)
+        assert isinstance(bare.telemetry, TelemetrySink)
+        assert not bare.telemetry.enabled
+        stats = bare.run(range(CLOSED_SPEC.frames))
+        assert stats_fingerprint(stats) == stats_fingerprint(recorded_stats)
+
+    def test_wall_clock_field_excluded_from_fingerprint(self, closed_log):
+        _, stats = closed_log
+        assert "sum_overhead" not in stats_fingerprint(stats)
+
+    def test_arrivals_round_trip_through_records(self, open_log):
+        events, _ = open_log
+        arrivals = arrivals_from_records(events)
+        assert arrivals == sorted(OPEN_SPEC.traffic().arrivals(),
+                                  key=lambda a: (a.t_s, a.stream))
+        assert all(isinstance(a, Arrival) for a in arrivals)
+
+
+# ---------------------------------------------------------------------------
+# replay determinism (the CI lane's twin)
+# ---------------------------------------------------------------------------
+
+
+class TestReplayDeterminism:
+    def test_closed_async_replay_bit_identical(self, tmp_path):
+        """Closed loop under AsyncDrainPolicy carry-over: same policy
+        -> same fingerprint, same digests, through a real file."""
+        path = str(tmp_path / "closed.jsonl")
+        record(CLOSED_SPEC, JsonlSink(path))
+        result = replay(path)
+        assert result.same_policy
+        assert result.identical, "\n".join(result.drift())
+        assert result.recorded_digests  # digests actually compared
+        assert "bit-identical" in format_policy_diff(result)[0]
+
+    def test_open_churn_replay_bit_identical(self, open_log):
+        events, _ = open_log
+        result = replay(events)
+        assert result.identical, "\n".join(result.drift())
+        # churn baked into the trace: stream 1 emitted nothing in its
+        # disconnected window, and the replay saw the same arrivals
+        assert result.replayed_stats["arrivals"] == \
+            result.recorded_stats["arrivals"]
+
+    def test_tampered_log_is_caught_as_drift(self, closed_log):
+        events, _ = closed_log
+        tampered = [dict(e) for e in events]
+        for e in tampered:
+            if e["event"] == "run_stats":
+                e["stats"] = dict(e["stats"],
+                                  total_detections=e["stats"]
+                                  ["total_detections"] + 1)
+        result = replay(tampered)
+        assert not result.identical
+        assert any("total_detections" in line for line in result.drift())
+
+    def test_policy_override_reports_not_identity(self, closed_log):
+        from repro.serving.runtime import SyncTickPolicy
+
+        events, _ = closed_log
+        result = replay(events, policy=SyncTickPolicy())
+        assert not result.same_policy
+        lines = format_policy_diff(result)
+        assert "policy diff" in lines[0]
+        assert result.replayed_stats["policy"] == "sync"
+
+    def test_replay_requires_spec_and_stats(self, closed_log):
+        events, _ = closed_log
+        with pytest.raises(ValueError, match="corpus_spec"):
+            replay([e for e in events if e["event"] != "corpus_spec"])
+        with pytest.raises(ValueError, match="run_stats"):
+            replay([e for e in events if e["event"] != "run_stats"])
+
+    def test_spec_round_trips_and_rejects_unknown_fields(self):
+        assert CorpusSpec.from_dict(OPEN_SPEC.to_dict()) == OPEN_SPEC
+        with pytest.raises(ValueError, match="unknown fields"):
+            CorpusSpec.from_dict({"mode": "closed", "warp": 9})
+
+
+# ---------------------------------------------------------------------------
+# offline report
+# ---------------------------------------------------------------------------
+
+
+class TestTimelineReport:
+    def test_report_from_log_alone(self, open_log):
+        events, stats = open_log
+        lines = format_timeline_report(events)
+        text = "\n".join(lines)
+        assert "open-loop" in lines[0]
+        assert f"{stats.frames} frames finished" in lines[0]
+        assert "group utilisation" in text
+        assert "admission verdicts" in text
+        assert f"admit={stats.admitted}" in text
+        assert "queueing delay" in text
+
+    def test_report_closed_log_omits_admission(self, closed_log):
+        events, _ = closed_log
+        text = "\n".join(format_timeline_report(events))
+        assert "admission verdicts" not in text
+        assert "carry-over" in text  # async corpus carried work
