@@ -30,6 +30,12 @@ gated: SLO-aware admission must STRICTLY dominate admit-all on useful
 goodput at every saturated point and match it — shedding nothing — at
 every light point (deterministic seeded traffic, gated exactly).
 
+When the snapshots carry a ``fleet_grid`` section (PR 8,
+``serving_bench.py --fleet``), the fleet-tier dominance floor is
+gated: on the same fixed device budget the best-routing fleet must
+match the monolithic pod's useful goodput at every grid point and
+STRICTLY beat it at >= 128 streams (deterministic, gated exactly).
+
 Both snapshots are validated against an EXPLICIT schema first
 (required keys per grid section, per nested policy/admission arm), so
 a malformed snapshot fails with a named error instead of a KeyError
@@ -67,6 +73,12 @@ SERVE_SCHEMAS: dict[str, tuple[frozenset, dict[str, frozenset]]] = {
     "open_grid": (frozenset({"streams", "load"}),
                   {"admit_all": frozenset({"useful_goodput", "rejected"}),
                    "slo": frozenset({"useful_goodput", "rejected"})}),
+    "fleet_grid": (frozenset({"streams", "pods", "goodput_ratio"}),
+                   {"mono": frozenset({"useful_goodput", "rejected"}),
+                    "least_loaded": frozenset({"useful_goodput",
+                                               "rejected", "routes"}),
+                    "affinity": frozenset({"useful_goodput", "rejected",
+                                           "routes"})}),
 }
 
 NMS_ENTRY_KEYS = frozenset({"b", "n", "host_us", "batch_us", "speedup"})
@@ -290,6 +302,51 @@ def open_slo_dominates(fresh: dict, log=print) -> bool:
     return ok
 
 
+def fleet_dominates(fresh: dict, strict_min_streams: int = 128,
+                    log=print) -> bool:
+    """The fleet-tier acceptance floor (strict, not a noise band).
+
+    Every fresh ``fleet_grid`` entry (``serving_bench.py --fleet``)
+    compares the BEST routing policy's fleet against the single
+    monolithic pod on the same fixed device budget, on useful goodput:
+
+      * at EVERY grid point the fleet must be >= the monolith (more
+        independent replica-group chains can never serve less);
+      * at >= ``strict_min_streams`` streams it must be STRICTLY
+        greater — the scale regime the fleet tier exists for, where
+        the monolith's pod-global backlog sheds most arrivals.
+
+    The sweep is deterministic (seeded arrival clocks, oracle pods,
+    calibrated latency model — no wall clock), so exact gating does
+    not flap.
+    """
+    entries = fresh.get("fleet_grid", [])
+    if not entries:
+        log("check_regression: no fleet_grid entries")
+        return False
+    ok = True
+    for e in entries:
+        mono = e["mono"]["useful_goodput"]
+        best = max(e["least_loaded"]["useful_goodput"],
+                   e["affinity"]["useful_goodput"])
+        strict = e["streams"] >= strict_min_streams
+        good = best > mono if strict else best >= mono
+        log(f"  fleet streams={e['streams']:>3} pods={e['pods']}  "
+            f"mono useful={mono}  least_loaded="
+            f"{e['least_loaded']['useful_goodput']}  affinity="
+            f"{e['affinity']['useful_goodput']}  "
+            f"ratio={e['goodput_ratio']:.4f}"
+            f"{'' if good else '  <-- FAILS dominance'}")
+        if not good:
+            want = ("strictly exceed" if strict else "be >=")
+            log(f"::error::fleet no longer dominates the monolith at "
+                f"{e['streams']} streams / {e['pods']} pods: best "
+                f"routing useful goodput {best} must {want} mono "
+                f"{mono}")
+            ok = False
+    return ok
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", default="BENCH_SERVE.json",
@@ -364,6 +421,16 @@ def main(argv=None) -> int:
         # SLO admission must dominate admit-all at saturation and
         # match it (shedding nothing) under light load
         ok = open_slo_dominates(fresh) and ok
+    if baseline.get("fleet_grid") and not fresh.get("fleet_grid"):
+        # armed fleet gate, missing fresh grid: the --fleet bench step
+        # did not run (or its merge failed) — fail loudly
+        print("::error::baseline has fleet_grid but fresh snapshot "
+              "does not; did the --fleet bench step run?")
+        ok = False
+    elif fresh.get("fleet_grid"):
+        # the fleet must match the monolith everywhere and beat it in
+        # the >= 128-stream regime it exists for
+        ok = fleet_dominates(fresh) and ok
     return 0 if ok else 1
 
 

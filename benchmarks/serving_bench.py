@@ -48,6 +48,19 @@ SLO admission must strictly dominate admit-all at saturation and match
 it under light load.  Results merge into ``BENCH_SERVE.json`` under
 ``open_grid``.
 
+``--fleet`` (PR 8) measures the FLEET tier (``repro.serving.fleet``):
+64-256 streams of the same seeded open-loop traffic served by 2-8
+virtual pods behind each routing policy (sticky least-loaded vs
+consistent-hash content affinity) against the single monolithic pod,
+all on one fixed 8-slot device budget split per pod by
+``serving_scale_plan``.  The monolith holds one replica group per
+variant regardless of its width, so at saturation its pod-global
+backlog sheds most arrivals; the fleet's independent per-pod group
+chains keep useful goodput up.  Deterministic, so the gate is exact:
+best-routing fleet >= mono everywhere, strictly better at >= 128
+streams.  Results merge into ``BENCH_SERVE.json`` under
+``fleet_grid``.
+
 Sweeps stream counts and emits one CSV line per config plus
 ``BENCH_SERVE.json`` so future snapshots track the trajectory (the
 nightly regression gate ``benchmarks/check_regression.py`` compares
@@ -111,6 +124,14 @@ OPEN_SAT_HORIZON_S = 40.0
 OPEN_LIGHT_POD_FPS = 0.6
 OPEN_LIGHT_JITTER = 0.3
 OPEN_LIGHT_HORIZON_S = 160.0
+
+FLEET_GRID = (64, 128, 256)     # streams for the fleet-tier sweep
+FLEET_PODS = (2, 4, 8)          # virtual pod counts vs the 1-pod monolith
+FLEET_DEVICES = 8               # FLEET-WIDE device budget (fair split)
+FLEET_ROUTINGS = ("least-loaded", "affinity")
+FLEET_FPS = 0.5                 # per-stream rate: saturates the monolith
+FLEET_JITTER = 0.1
+FLEET_HORIZON_S = 24.0
 
 
 def _make_backend(n_variants: int = 2):
@@ -605,6 +626,124 @@ def run_open_grid(csv=print, grid=OPEN_GRID, json_path=SERVE_JSON_PATH,
     return out
 
 
+def _fleet_serve(n_streams: int, pods: int, routing: str,
+                 events_tag: str | None = None):
+    """One fleet run: the same seeded open-loop traffic served by a
+    ``pods``-pod :class:`~repro.serving.fleet.FleetServer` over a
+    FIXED ``FLEET_DEVICES`` budget (``serving_scale_plan`` splits the
+    slots per pod, so 1 pod x 8 devices and 8 pods x 1 device spend
+    the same hardware — the fair fleet-vs-monolith comparison)."""
+    from repro.core.omnisense import OmniSenseLoop
+    from repro.data.synthetic import make_video
+    from repro.distributed.elastic import serving_scale_plan
+    from repro.serving import profiles
+    from repro.serving.fleet import FleetServer
+    from repro.serving.network import NetworkModel
+    from repro.serving.placement import VariantPlacement
+    from repro.serving.runtime import make_policy
+    from repro.serving.scheduler import OmniSenseLatencyModel, OracleBackend
+    from repro.serving.server import PodServer
+
+    variants = _pod_variants()
+    lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+    costs = [lat._pre(v) + lat._inf(v) for v in variants]
+    frames = max(16, int(FLEET_HORIZON_S * FLEET_FPS) + 8)
+    loops, backends = [], []
+    for s in range(n_streams):
+        video = make_video(n_frames=frames + 8, n_objects=30 + 5 * (s % 4),
+                           seed=100 + s)
+        backend = OracleBackend(video)
+        backends.append(backend)
+        loops.append(OmniSenseLoop(variants, lat, backend,
+                                   budget_s=OPEN_BUDGET_S,
+                                   explore_costs=costs))
+    per_pod = serving_scale_plan(FLEET_DEVICES, pods)["per_pod_devices"]
+
+    def make_pod(pod_id: int) -> PodServer:
+        return PodServer(
+            loops, backends, max_batch=8,
+            placement=VariantPlacement.virtual(variants, per_pod,
+                                               cost_fn=lat._inf),
+            policy=make_policy("async", admission="slo"))
+
+    telemetry = _events_sink(events_tag) if events_tag else None
+    fleet = FleetServer(make_pod, pods, routing=routing,
+                        telemetry=telemetry)
+    from repro.serving.traffic import ArrivalProcess
+
+    traffic = ArrivalProcess(n_streams, fps=FLEET_FPS, jitter=FLEET_JITTER,
+                             seed=0, horizon_s=FLEET_HORIZON_S)
+    stats = fleet.run_open_loop(traffic, slo_s=OPEN_SLO_S)
+    if telemetry is not None:
+        telemetry.close()
+    return stats
+
+
+def _fleet_metrics(stats) -> dict:
+    out = _open_metrics(stats, FLEET_HORIZON_S)
+    out.update(routes=stats.routes, migrations=stats.migrations)
+    return out
+
+
+def run_fleet_grid(csv=print, grid=FLEET_GRID, json_path=SERVE_JSON_PATH
+                   ) -> dict:
+    """The fleet-tier sweep (``--fleet``): 64-256 streams served by
+    2-8 virtual pods behind each routing policy vs the single
+    monolithic pod, all over the SAME ``FLEET_DEVICES``-slot budget.
+
+    The monolith has only one replica group per variant no matter how
+    many device slots it holds, so at saturation its pod-global
+    backlog rejects most arrivals; a P-pod fleet runs P independent
+    group chains per variant and keeps per-pod backlogs under the SLO
+    envelope.  Fully deterministic (seeded arrival clocks, oracle
+    backends, calibrated latency model — no wall clock), so
+    ``check_regression.py`` gates exactly: at EVERY grid point the
+    best-routing fleet useful goodput must be >= the monolith's, and
+    STRICTLY greater at >= 128 streams.  Merges a ``fleet_grid``
+    section into ``json_path`` without touching the other sections.
+    """
+    entries = []
+    for n_streams in grid:
+        mono = _fleet_metrics(_fleet_serve(
+            n_streams, 1, "least-loaded",
+            events_tag=f"fleet_s{n_streams}_mono"))
+        for pods in FLEET_PODS:
+            entry = dict(
+                streams=n_streams, pods=pods,
+                fps_per_stream=FLEET_FPS, jitter=FLEET_JITTER,
+                horizon_s=FLEET_HORIZON_S, mono=mono)
+            for routing in FLEET_ROUTINGS:
+                key = routing.replace("-", "_")
+                entry[key] = _fleet_metrics(_fleet_serve(
+                    n_streams, pods, routing,
+                    events_tag=f"fleet_s{n_streams}_p{pods}_{key}"))
+            best = max(entry["least_loaded"]["useful_goodput"],
+                       entry["affinity"]["useful_goodput"])
+            entry["goodput_ratio"] = round(
+                best / max(mono["useful_goodput"], 1), 4)
+            entries.append(entry)
+            csv(f"serving,fleet_s{n_streams}_p{pods},goodput_ratio,"
+                f"{entry['goodput_ratio']},"
+                f"mono={mono['useful_goodput']} "
+                f"least_loaded={entry['least_loaded']['useful_goodput']} "
+                f"affinity={entry['affinity']['useful_goodput']}")
+    out = {}
+    if json_path and os.path.exists(json_path):
+        with open(json_path) as f:
+            out = json.load(f)
+    out["fleet"] = {
+        "variants": [v.name for v in _pod_variants()],
+        "devices": FLEET_DEVICES, "budget_s": OPEN_BUDGET_S,
+        "slo_s": OPEN_SLO_S, "policy": "async", "admission": "slo",
+        "pods": list(FLEET_PODS), "routings": list(FLEET_ROUTINGS)}
+    out["fleet_grid"] = entries
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        csv(f"serving,fleet_json,path,0,{json_path}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--devices", type=int, default=0,
@@ -632,6 +771,14 @@ def main() -> None:
                          "admission, recording useful-goodput/queueing/"
                          "shedding into an open_grid section (virtual "
                          "device slots — no jax devices needed)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="measure the fleet-tier sweep instead: 64-256 "
+                         "streams over 2-8 virtual pods (both routing "
+                         "policies) vs the single monolithic pod on the "
+                         "same fixed device budget, recording useful-"
+                         "goodput/shedding/routing into a fleet_grid "
+                         "section (virtual device slots — no jax devices "
+                         "needed)")
     ap.add_argument("--json", default=SERVE_JSON_PATH)
     ap.add_argument("--events-dir", default=None, metavar="DIR",
                     help="also write one JSONL telemetry event log per "
@@ -642,6 +789,9 @@ def main() -> None:
     if args.events_dir:
         global EVENTS_DIR
         EVENTS_DIR = args.events_dir
+    if args.fleet:
+        run_fleet_grid(json_path=args.json)
+        return
     if args.open_loop:
         run_open_grid(json_path=args.json,
                       devices=args.devices or OPEN_DEVICES)

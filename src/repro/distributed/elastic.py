@@ -46,6 +46,23 @@ class HealthTracker:
         h.missed = 0
         h.step_time = step_time
 
+    # -- serving hooks (repro.serving.fleet) -------------------------------
+    # training meshes are fixed at launch, but the serving fleet grows
+    # and retires pods mid-run, so its tracker membership is dynamic.
+
+    def ensure_host(self, host: int, now: float = 0.0) -> HostState:
+        """Register ``host`` if unseen (a pod added by the elastic
+        controller mid-run); idempotent for known hosts."""
+        h = self.hosts.get(host)
+        if h is None:
+            h = self.hosts[host] = HostState(last_beat=now)
+        return h
+
+    def remove_host(self, host: int) -> None:
+        """Forget a retired pod entirely — unlike a failure, a drained
+        retirement must not count against health statistics."""
+        self.hosts.pop(host, None)
+
     def tick(self, now: float) -> None:
         for h in self.hosts.values():
             if h.failed:
@@ -103,6 +120,34 @@ def remesh_plan(original_shape: tuple[int, ...],
         "batch_scale": (best_data * best_pod) / (data0 * pod0),
         "checkpoint_compatible": True,
     }
+
+
+def serving_scale_plan(total_devices: int, n_pods: int) -> dict:
+    """Per-pod device split for an ``n_pods`` serving fleet over a
+    fixed ``total_devices`` budget — the fleet tier's consumer of
+    :func:`remesh_plan`.
+
+    The pod count plays the ``model`` axis role: it is the dimension
+    that must be PRESERVED exactly (the elastic controller chose it,
+    and routing state binds streams to pod identities the way TP
+    degree is baked into compiled programs), while each pod's device
+    width is the free ``data`` axis that shrinks to the largest
+    power of two fitting the budget.  Remainder slots idle rather
+    than creating unequal pods — unequal pods would make the
+    router's least-loaded signal lie.
+    """
+    if n_pods < 1:
+        raise ValueError(f"n_pods must be >= 1, got {n_pods}")
+    if total_devices <= 0:
+        # virtual single-device pods (the CI regime): nothing to split
+        return {"n_pods": n_pods, "per_pod_devices": 0,
+                "devices_used": 0, "devices_idle": 0}
+    plan = remesh_plan((1, max(1, total_devices // n_pods), n_pods),
+                       ("pod", "data", "model"), total_devices)
+    per_pod = plan["shape"][plan["axes"].index("data")]
+    return {"n_pods": n_pods, "per_pod_devices": per_pod,
+            "devices_used": plan["devices_used"],
+            "devices_idle": total_devices - plan["devices_used"]}
 
 
 @dataclasses.dataclass

@@ -73,20 +73,32 @@ def _add_record(sub) -> None:
     ap.add_argument("--slo", type=float, default=None)
     ap.add_argument("--admission", choices=("admit-all", "slo"),
                     default=None)
+    ap.add_argument("--pods", type=int, default=0,
+                    help="fleet size (requires --open-loop; 0 = the "
+                         "single-pod server)")
+    ap.add_argument("--routing", choices=("least-loaded", "affinity"),
+                    default="least-loaded",
+                    help="fleet stream-routing policy (with --pods)")
 
 
 def _cmd_record(args) -> int:
+    if args.pods and not args.open_loop:
+        print("--pods requires --open-loop (the fleet tier serves "
+              "arrival-clocked traffic)", file=sys.stderr)
+        return 2
     spec = CorpusSpec(
         mode="open" if args.open_loop else "closed",
         n_streams=args.streams, frames=args.frames, budget_s=args.budget,
         devices=args.devices, max_batch=args.max_batch, policy=args.policy,
         pod_allocate=args.pod_allocate, admission=args.admission,
         slo_s=args.slo, fps=args.fps, jitter=args.jitter,
-        horizon_s=args.horizon)
+        horizon_s=args.horizon, pods=args.pods, routing=args.routing)
     stats = record(spec, JsonlSink(args.out))
+    fleet = f", {spec.pods} pods ({spec.routing} routing)" if spec.pods \
+        else ""
     print(f"recorded {stats.frames} frames / {stats.dispatches} dispatches "
           f"[{spec.policy} policy, {spec.mode}-loop, {spec.n_streams} "
-          f"streams] -> {args.out}")
+          f"streams{fleet}] -> {args.out}")
     return 0
 
 

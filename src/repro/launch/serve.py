@@ -49,6 +49,16 @@ load would blow it:
     PYTHONPATH=src python -m repro.launch.serve --streams 8 \
         --open-loop --fps 0.5 --jitter 0.2 --slo 2.0 --admission slo
 
+``--pods P`` serves the open-loop traffic through the FLEET tier
+(``repro.serving.fleet``): P pods behind a ``--routing`` stream router
+(sticky ``least-loaded`` balance, or ``affinity`` consistent hashing
+so co-variant streams co-locate and batch), with ``--devices`` split
+per pod by ``serving_scale_plan``:
+
+    PYTHONPATH=src python -m repro.launch.serve --streams 32 \
+        --open-loop --fps 0.5 --slo 2.0 --admission slo \
+        --devices 8 --pods 4 --routing affinity
+
 The REAL shard_map-sharded detector path is exercised by
 ``benchmarks/serving_bench.py --devices 8`` and the `multidevice` test
 lane (both force fake host devices via
@@ -111,10 +121,21 @@ def main() -> None:
                     help="write the structured JSONL telemetry event log "
                          "here (repro.serving.telemetry; inspect with "
                          "python -m repro.launch.replay report PATH)")
+    ap.add_argument("--pods", type=int, default=0,
+                    help="serve through a FleetServer of this many pods "
+                         "(repro.serving.fleet; requires --open-loop; "
+                         "--devices is the FLEET-wide budget split per "
+                         "pod; 0 = the single-pod server)")
+    ap.add_argument("--routing", choices=("least-loaded", "affinity"),
+                    default="least-loaded",
+                    help="fleet stream-routing policy (with --pods): "
+                         "sticky least-loaded balance, or consistent "
+                         "hashing on content affinity so co-variant "
+                         "streams batch together")
     args = ap.parse_args()
-    if args.open_loop and args.pod_allocate:
-        ap.error("--open-loop admits frames per arrival; the pod-level "
-                 "fixed point is tick-batch-synchronous (drop one flag)")
+    if args.pods and not args.open_loop:
+        ap.error("--pods requires --open-loop (the fleet tier serves "
+                 "arrival-clocked traffic)")
     policy = make_policy(args.policy or "sync",
                          pod_allocate=args.pod_allocate,
                          admission=args.admission if args.open_loop
@@ -147,6 +168,42 @@ def main() -> None:
         from repro.serving.telemetry import JsonlSink
 
         telemetry = JsonlSink(args.events)
+
+    if args.pods > 0:
+        from repro.distributed.elastic import serving_scale_plan
+        from repro.serving.fleet import FleetServer, format_fleet_report
+        from repro.serving.traffic import ArrivalProcess
+
+        per_pod = serving_scale_plan(args.devices,
+                                     args.pods)["per_pod_devices"]
+
+        def make_pod(pod_id: int) -> PodServer:
+            pod_placement = None
+            if per_pod > 0:
+                from repro.serving.placement import VariantPlacement
+
+                pod_placement = VariantPlacement.virtual(
+                    variants, per_pod, cost_fn=lat._inf)
+            pol = make_policy(args.policy or "sync",
+                              pod_allocate=args.pod_allocate,
+                              admission=args.admission)
+            return PodServer(loops, backends, max_batch=args.max_batch,
+                             placement=pod_placement, policy=pol)
+
+        fleet = FleetServer(make_pod, args.pods, routing=args.routing,
+                            telemetry=telemetry)
+        horizon_s = args.frames / args.fps
+        traffic = ArrivalProcess(args.streams, fps=args.fps,
+                                 jitter=args.jitter, seed=0,
+                                 horizon_s=horizon_s)
+        fstats = fleet.run_open_loop(traffic, slo_s=args.slo)
+        if telemetry is not None:
+            telemetry.close()
+            print(f"telemetry event log: {args.events}")
+        for line in format_fleet_report(fstats, horizon_s):
+            print(line)
+        return
+
     server = PodServer(loops, backends, max_batch=args.max_batch,
                        placement=placement, policy=policy,
                        telemetry=telemetry)

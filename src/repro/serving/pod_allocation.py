@@ -379,6 +379,7 @@ def solve_pod(
     damping: float = DEFAULT_DAMPING,
     queue_weight: float = DEFAULT_QUEUE_WEIGHT,
     util_weight: float = DEFAULT_UTIL_WEIGHT,
+    slo_s: float | None = None,
 ) -> PodSolution:
     """The pod-level fixed point (see the module docstring).
 
@@ -386,6 +387,15 @@ def solve_pod(
     sweep (1.0 = all of them); lower values smooth oscillating pods.
     A no-switch sweep is a fixed point at any damping, so convergence
     semantics do not depend on it.
+
+    ``slo_s`` tightens the capacity envelope to the run's SLO target:
+    ``T_cap = min(uncoupled projected tick, slo_s)``, so the batching
+    discount may upgrade plans only into device time that also fits
+    the service objective — not merely into whatever the uncoupled
+    schedule happened to cost.  ``None`` (the default) keeps the
+    round-0 self-referential envelope bit-identical.  The returned
+    ``tick_cap`` is the effective (possibly clamped) envelope;
+    ``projected_tick`` always reports the returned plans' projection.
     """
     buckets = buckets or ShapeBuckets()
     plans = [
@@ -395,14 +405,16 @@ def solve_pod(
     counts = _total_counts(plans, variants)
     cap_load = projected_group_load(counts, variants, latency_model, buckets,
                                     placement)
-    tick_cap = max(cap_load.values(), default=0.0)
+    uncoupled_tick = max(cap_load.values(), default=0.0)
+    tick_cap = uncoupled_tick if slo_s is None \
+        else min(uncoupled_tick, slo_s)
     if len(problems) <= 1 or len(variants) <= 1:
         # one stream has no co-streams to share a batch with; one
         # variant has no cross-variant choice to arbitrate — both keep
         # the calibrated per-stream plans byte-identical.
         return PodSolution(plans, rounds=0, converged=True, counts=counts,
                            coupled=False, tick_cap=tick_cap,
-                           projected_tick=tick_cap,
+                           projected_tick=uncoupled_tick,
                            projected_load=cap_load)
     max_switches = max(1, math.ceil(damping * len(problems)))
     converged = False

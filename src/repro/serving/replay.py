@@ -62,6 +62,12 @@ class CorpusSpec:
     admission: str | None = None    # None = admit-all
     slo_s: float | None = None      # open-loop SLO target
     seed0: int = 100                # per-stream video seed base
+    # fleet tier (repro.serving.fleet): 0 = single pod (the default,
+    # backward-compatible with pre-fleet logs); > 0 records an
+    # open-loop FleetServer run with a FIXED active set — elastic
+    # scaling is exercised by the fleet tests, not the replay corpora
+    pods: int = 0
+    routing: str = "least-loaded"
     # open-loop traffic (ignored in closed mode)
     fps: float = 0.5
     jitter: float = 0.0
@@ -111,20 +117,16 @@ class CorpusSpec:
             rate_trace=self.rate_trace)
 
 
-def build_pod(spec: CorpusSpec, policy=None, admission=None,
-              telemetry=None):
-    """The standard deterministic oracle pod for ``spec``.
-
-    ``policy``/``admission`` override the spec's (the policy-diff
-    path); ``None`` rebuilds exactly what was recorded.
-    """
+def _build_streams(spec: CorpusSpec):
+    """The spec's shared per-stream state: calibrated variant ladder,
+    latency model, seeded oracle backends and loops.  One build serves
+    a single pod or a whole fleet — every fleet pod must see the SAME
+    lists so global stream indices stay valid on any pod."""
     from repro.core.omnisense import OmniSenseLoop
     from repro.data.synthetic import make_video
     from repro.serving import profiles
     from repro.serving.network import NetworkModel
-    from repro.serving.placement import VariantPlacement
     from repro.serving.scheduler import OmniSenseLatencyModel, OracleBackend
-    from repro.serving.server import PodServer
 
     ladder = {v.name: v for v in profiles.make_ladder()}
     missing = [n for n in spec.variants if n not in ladder]
@@ -147,6 +149,20 @@ def build_pod(spec: CorpusSpec, policy=None, admission=None,
         loops.append(OmniSenseLoop(variants, lat, backend,
                                    budget_s=spec.budget_for(s),
                                    explore_costs=costs))
+    return variants, lat, loops, backends
+
+
+def build_pod(spec: CorpusSpec, policy=None, admission=None,
+              telemetry=None):
+    """The standard deterministic oracle pod for ``spec``.
+
+    ``policy``/``admission`` override the spec's (the policy-diff
+    path); ``None`` rebuilds exactly what was recorded.
+    """
+    from repro.serving.placement import VariantPlacement
+    from repro.serving.server import PodServer
+
+    variants, lat, loops, backends = _build_streams(spec)
     placement = None
     if spec.devices > 0:
         placement = VariantPlacement.virtual(variants, spec.devices,
@@ -159,6 +175,49 @@ def build_pod(spec: CorpusSpec, policy=None, admission=None,
     return PodServer(loops, backends, max_batch=spec.max_batch,
                      placement=placement, policy=policy,
                      telemetry=telemetry)
+
+
+def build_fleet(spec: CorpusSpec, policy=None, admission=None,
+                telemetry=None):
+    """The deterministic ``spec.pods``-pod fleet over the same shared
+    streams as :func:`build_pod`.
+
+    ``spec.devices`` is the fleet-wide budget: each pod gets the
+    per-pod power-of-two width :func:`~repro.distributed.elastic.
+    serving_scale_plan` assigns (0 keeps every pod single-device).
+    Each pod receives its OWN placement and (spec-built) policy
+    instance; a ``policy`` override instance is shared across pods —
+    schedule policies are stateless config objects, so sharing is
+    safe — and overrides work the same as on :func:`build_pod`.
+    """
+    from repro.distributed.elastic import serving_scale_plan
+    from repro.serving.fleet import FleetServer
+    from repro.serving.placement import VariantPlacement
+    from repro.serving.server import PodServer
+
+    if spec.pods < 1:
+        raise ValueError(f"build_fleet needs spec.pods >= 1, got "
+                         f"{spec.pods}")
+    if spec.mode != "open":
+        raise ValueError("fleet corpora are open-loop; set mode='open'")
+    variants, lat, loops, backends = _build_streams(spec)
+    per_pod = serving_scale_plan(spec.devices, spec.pods)["per_pod_devices"]
+    if policy is not None and admission is not None:
+        raise ValueError("pass admission inside the policy instance or "
+                         "leave policy=None")
+
+    def make_pod(pod_id: int) -> PodServer:
+        placement = None
+        if per_pod > 0:
+            placement = VariantPlacement.virtual(variants, per_pod,
+                                                 cost_fn=lat._inf)
+        pol = policy if policy is not None \
+            else _spec_policy(spec, admission)
+        return PodServer(loops, backends, max_batch=spec.max_batch,
+                         placement=placement, policy=pol)
+
+    return FleetServer(make_pod, spec.pods, routing=spec.routing,
+                       telemetry=telemetry)
 
 
 def _spec_policy(spec: CorpusSpec, admission=None):
@@ -176,7 +235,22 @@ def stats_fingerprint(stats) -> dict:
     """``ServeStats`` as a JSON-round-trip-stable dict, wall-clock
     fields excluded.  Dict keys pass through ``str`` (JSON would do it
     anyway), so a fingerprint read back from a log compares equal to a
-    fresh one."""
+    fresh one.
+
+    A :class:`~repro.serving.fleet.FleetStats` (recognised by its
+    ``pod_stats`` attribute) fingerprints recursively: the fleet-only
+    control-plane counters plus one per-pod ``ServeStats`` fingerprint
+    in pod-id order — so a fleet replay must reproduce every pod AND
+    every routing/scaling decision bit-identically."""
+    if hasattr(stats, "pod_stats"):
+        out = {"routing": stats.routing,
+               "pod_ids": list(stats.pod_ids),
+               "routes": stats.routes,
+               "migrations": stats.migrations,
+               "scale_ups": stats.scale_ups,
+               "scale_downs": stats.scale_downs,
+               "pods": [stats_fingerprint(s) for s in stats.pod_stats]}
+        return json.loads(json.dumps(out))
     out = {}
     for f in dataclasses.fields(stats):
         if f.name in _WALL_CLOCK_FIELDS:
@@ -197,11 +271,15 @@ def record(spec: CorpusSpec, sink) -> "object":
     can rebuild the pod) and ends with ``run_stats`` (the fingerprint
     a same-policy replay must reproduce)."""
     sink.emit("corpus_spec", spec=spec.to_dict())
-    server = build_pod(spec, telemetry=sink)
-    if spec.mode == "open":
+    if spec.pods > 0:
+        server = build_fleet(spec, telemetry=sink)
         stats = server.run_open_loop(spec.traffic(), slo_s=spec.slo_s)
     else:
-        stats = server.run(range(spec.frames))
+        server = build_pod(spec, telemetry=sink)
+        if spec.mode == "open":
+            stats = server.run_open_loop(spec.traffic(), slo_s=spec.slo_s)
+        else:
+            stats = server.run(range(spec.frames))
     sink.emit("run_stats", stats=stats_fingerprint(stats))
     sink.close()
     return stats
@@ -274,8 +352,12 @@ def replay(log, policy=None, admission=None) -> ReplayResult:
         raise ValueError("log has no run_stats record (truncated "
                          "recording?)")
     sink = MemorySink()
-    server = build_pod(spec, policy=policy, admission=admission,
-                       telemetry=sink)
+    if spec.pods > 0:
+        server = build_fleet(spec, policy=policy, admission=admission,
+                             telemetry=sink)
+    else:
+        server = build_pod(spec, policy=policy, admission=admission,
+                           telemetry=sink)
     if spec.mode == "open":
         from repro.serving.traffic import arrivals_from_records
 
@@ -302,7 +384,24 @@ _DIFF_FIELDS = (
 
 
 def fingerprint_metrics(fp: dict) -> dict:
-    """The diff-table scalars of one stats fingerprint."""
+    """The diff-table scalars of one stats fingerprint.
+
+    A fleet fingerprint (the ``pods`` key) aggregates: counters sum
+    across pods, the e2e percentile pools every pod's events, and the
+    fleet-only control-plane counters ride along."""
+    if "pods" in fp:
+        out = {}
+        for k in _DIFF_FIELDS:
+            vals = [p.get(k) for p in fp["pods"] if p.get(k) is not None]
+            out[k] = round(sum(vals), 4) if vals else None
+        e2e = [x for p in fp["pods"] for x in (p.get("event_e2e") or [])]
+        if e2e:
+            srt = sorted(e2e)
+            out["p95_e2e_s"] = round(srt[min(len(srt) - 1,
+                                             int(0.95 * len(srt)))], 4)
+        for k in ("routes", "migrations", "scale_ups", "scale_downs"):
+            out[k] = fp.get(k)
+        return out
     out = {}
     for k in _DIFF_FIELDS:
         v = fp.get(k)
@@ -328,9 +427,12 @@ def format_policy_diff(result: ReplayResult) -> list[str]:
     rep = fingerprint_metrics(result.replayed_stats)
     if result.same_policy:
         if result.identical:
+            fleet = (f", {result.spec.pods} pods "
+                     f"({result.spec.routing} routing)"
+                     if result.spec.pods else "")
             return [f"replay [{result.spec.policy} policy, "
                     f"{result.spec.mode}-loop, {result.spec.n_streams} "
-                    f"streams]: bit-identical "
+                    f"streams{fleet}]: bit-identical "
                     f"({rec['frames']} frames, {rec['dispatches']} "
                     f"dispatches, {len(result.recorded_digests)} "
                     f"detection digests)"]

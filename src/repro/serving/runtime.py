@@ -360,6 +360,24 @@ class SchedulePolicy:
         del overlap_lat  # barrier ticks never start with carry-in
         return timeline.barrier_delay(tick_lat), clock.horizon()
 
+    # -- placement ---------------------------------------------------------
+
+    def rebalance_point(self, placement, clock: GroupClock,
+                        queues) -> bool:
+        """Whether NOW is a placement-rebalance opportunity.
+
+        ``PodServer`` consults this hook wherever it used to call
+        ``placement.maybe_rebalance()`` unconditionally (after each
+        closed-loop emission wave and each open-loop admission);
+        returning ``False`` defers the rebalance check entirely, so a
+        policy can pin atomically-moving devices to its own capacity
+        boundaries.  The base rule is every emission — bit-identical
+        to the pre-hook hard-wired timing (pinned by the sync
+        equivalence corpus in ``tests/test_runtime.py``).
+        """
+        del placement, clock, queues
+        return True
+
     # -- helpers shared by the shipped policies ----------------------------
 
     @staticmethod
@@ -554,6 +572,15 @@ class AsyncDrainPolicy(SchedulePolicy):
         if nxt is None:
             nxt = timeline.horizon()
         return max(0.0, nxt - timeline.start), nxt
+
+    def rebalance_point(self, placement, clock, queues) -> bool:
+        """Rebalance only at capacity boundaries: while any replica
+        group is still executing carried work past the tick start,
+        moving devices would invalidate the in-flight dispatch pricing
+        the carry decision was made against — wait until every group is
+        free (the same advance point :meth:`close_tick` targets)."""
+        del placement, queues
+        return clock.next_free() is None
 
 
 POLICIES: dict[str, type[SchedulePolicy]] = {

@@ -412,6 +412,21 @@ class PodServer:
                 "streams")
         return next(iter(hooks.values()), None)
 
+    def _maybe_rebalance(self, t_s: float) -> None:
+        """Placement-rebalance check at one observation point.
+
+        The policy owns the TIMING (``SchedulePolicy.rebalance_point``
+        — the old hard-wired ``maybe_rebalance()`` call sites asked
+        unconditionally, which is exactly what the base hook returns);
+        the placement owns the decision and the atomic device swap.
+        """
+        if not self.policy.rebalance_point(self.placement, self.clock,
+                                           self.queues):
+            return
+        if self.placement.maybe_rebalance() and self.telemetry.enabled:
+            self.telemetry.emit("rebalance", t_s=t_s,
+                                groups=self.placement.device_counts())
+
     @property
     def pod_allocate(self) -> bool:
         """Whether admission runs the pod-level fixed point (lives on
@@ -564,16 +579,17 @@ class PodServer:
 
         # ---- placement feedback: fold this tick's variant mix into the
         # popularity EMA and re-balance replica groups if the allocator
-        # shifted load (atomic swap: queued requests keep a group) ----
+        # shifted load (atomic swap: queued requests keep a group).
+        # WHEN to rebalance is the policy's call (rebalance_point):
+        # sync/deadline check every emission (the pre-hook timing,
+        # bit-identical), async only at capacity boundaries ----
         if self.placement is not None:
             counts: dict[str, int] = {}
             for pending in emitted:
                 for req in pending.requests:
                     counts[req.variant.name] = counts.get(req.variant.name, 0) + 1
             self.placement.observe(counts)
-            if self.placement.maybe_rebalance() and self.telemetry.enabled:
-                self.telemetry.emit("rebalance", t_s=self.clock.now,
-                                    groups=self.placement.device_counts())
+            self._maybe_rebalance(self.clock.now)
 
         # ---- drain: the policy picks order and carry-over; every
         # admitted chunk is one batched forward routed to (and sharded
@@ -852,19 +868,21 @@ class PodServer:
         work is booked on the busy groups and the clock keeps tracking
         arrival time, so queueing delay (launch minus emission) and
         SLO violations are real, not artifacts of a barrier.
+
+        Pod-allocate policies are served too: arrivals landing at the
+        same instant are planned JOINTLY through the pod-level fixed
+        point with ``slo_s`` as its capacity envelope
+        (``solve_pod(..., slo_s=...)``); running one without an SLO is
+        deprecated (see :meth:`open_loop_begin`).
+
+        The loop is a thin driver over :meth:`open_loop_begin` /
+        :meth:`serve_open_batch` / :meth:`open_loop_end` — the fleet
+        tier (``repro.serving.fleet``) drives the same three phases
+        per pod with a router splitting the global arrival stream.
         """
-        if self.policy.pod_allocate:
-            raise ValueError(
-                "open-loop serving admits frames per arrival; the "
-                "pod-level fixed point is tick-batch-synchronous — "
-                "use a per-stream (pod_allocate=False) policy")
         arrivals = traffic.arrivals() if hasattr(traffic, "arrivals") \
             else list(traffic)
-        self.slo_s = slo_s
-        self.stats.slo_s = slo_s
-        self.stats.admission = self.policy.admission.name
-        self._emit_run_meta("open")
-        self._open_horizon = self.clock.now
+        self.open_loop_begin(slo_s)
         i, n = 0, len(arrivals)
         while i < n:
             self.clock.advance(arrivals[i].t_s)
@@ -874,15 +892,102 @@ class PodServer:
             while i < n and arrivals[i].t_s <= self.clock.now + 1e-12:
                 batch.append(arrivals[i])
                 i += 1
+            self.serve_open_batch(batch)
+        return self.open_loop_end()
+
+    def open_loop_begin(self, slo_s: float | None = None) -> None:
+        """Enter open-loop serving: record the SLO target and emit the
+        run's ``run_meta`` telemetry.  Called once per run by
+        :meth:`run_open_loop`; the fleet tier calls it directly on
+        every pod it creates (including pods added mid-run by the
+        elastic controller)."""
+        if self.policy.pod_allocate and slo_s is None:
+            import warnings
+            warnings.warn(
+                "open-loop serving with a pod_allocate policy but no "
+                "slo_s leaves the pod-level fixed point without a "
+                "service-level capacity envelope (the round-0 "
+                "self-referential cap only); pass slo_s= to "
+                "run_open_loop so solve_pod can clamp the envelope. "
+                "This will become an error in the next release — see "
+                "README 'Migration'.", DeprecationWarning, stacklevel=3)
+        self.slo_s = slo_s
+        self.stats.slo_s = slo_s
+        self.stats.admission = self.policy.admission.name
+        self._emit_run_meta("open")
+        self._open_horizon = self.clock.now
+
+    def serve_open_batch(self, batch: list) -> None:
+        """Serve one same-instant arrival round: advance the event
+        clock, admit every arrival (jointly under a pod-allocate
+        policy), then drain and ingest."""
+        self.clock.advance(batch[0].t_s)
+        if self.policy.pod_allocate:
+            self._admit_batch_coupled(batch)
+        else:
             for a in batch:
                 self._admit_arrival(a)
-            self._open_drain()
-            self._ingest()
-        # every busy second up to the horizon is already charged; jump
-        # the clock there so the settling flush only bills new work
+        self._open_drain()
+        self._ingest()
+
+    def open_loop_end(self) -> ServeStats:
+        """Leave open-loop serving: settle carried work and finish the
+        in-flight tail.  Every busy second up to the horizon is already
+        charged; jump the clock there so the settling flush only bills
+        new work."""
         self.clock.advance(self.clock.horizon())
         self.flush()
         return self.stats
+
+    def _admit_batch_coupled(self, batch: list) -> None:
+        """Joint admission of one same-instant arrival round under a
+        pod-allocate policy: the surviving arrivals' planning contexts
+        run through the pod-level fixed point together (with the run's
+        SLO as the capacity envelope), then each arrival passes the
+        usual marginal admission pricing with its coupled plan.  A
+        single-arrival round hits ``solve_pod``'s one-stream
+        short-circuit, so it prices exactly like the per-stream path."""
+        from repro.serving import pod_allocation
+
+        survivors = []
+        for arrival in batch:
+            s = arrival.stream
+            loop, backend = self.loops[s], self.backends[s]
+            self.stats.arrivals += 1
+            if self.telemetry.enabled:
+                self.telemetry.emit("arrival", t_s=arrival.t_s, stream=s,
+                                    frame_idx=arrival.frame_idx)
+            prev = self._stream_frame.get(s)
+            if prev is not None and not prev.complete:
+                self.stats.missed += 1
+                if self.telemetry.enabled:
+                    self._emit_admission(arrival, "missed", None, None,
+                                         None)
+                continue
+            if hasattr(backend, "set_frame"):
+                backend.set_frame(arrival.frame_idx)
+            frame = (self.frame_source(s, arrival.frame_idx)
+                     if self.frame_source is not None else None)
+            survivors.append((arrival, loop, backend,
+                              loop.frame_context(frame)))
+        if not survivors:
+            return
+        problems = [pod_allocation.StreamProblem(
+            ctx.acc, ctx.d_pre, ctx.d_inf, ctx.budget)
+            for _, _, _, ctx in survivors]
+        util = (self.stats.group_utilisation()
+                if self.placement is not None
+                and self.stats.sum_tick_inf_s > 0 else None)
+        sol = pod_allocation.solve_pod(
+            problems, self.loops[0].variants, self.loops[0].latency_model,
+            buckets=self.buckets, placement=self.placement,
+            group_utilisation=util, slo_s=self.slo_s)
+        self.stats.pod_ticks += 1
+        self.stats.pod_rounds += sol.rounds
+        self.stats.pod_converged_ticks += int(sol.converged)
+        for (arrival, loop, backend, ctx), plan in zip(survivors,
+                                                       sol.plans):
+            self._admit_planned(arrival, loop, backend, ctx, plan)
 
     def _admit_arrival(self, arrival) -> None:
         """Admission-check one arrival, emitting its requests if the
@@ -904,10 +1009,18 @@ class PodServer:
         frame = (self.frame_source(s, arrival.frame_idx)
                  if self.frame_source is not None else None)
         ctx = loop.frame_context(frame)
-        plan = dplan = None
+        plan = None
         if ctx.srois:
             plan = allocation.allocate(ctx.acc, ctx.d_pre, ctx.d_inf,
                                        ctx.budget)
+        self._admit_planned(arrival, loop, backend, ctx, plan)
+
+    def _admit_planned(self, arrival, loop, backend, ctx, plan) -> None:
+        """Admission pricing + emission of one arrival whose candidate
+        plan is already chosen (per-stream knapsack or pod-coupled)."""
+        s = arrival.stream
+        dplan = None
+        if ctx.srois:
             # the degraded alternative: rows 0..1 = skip + the P1
             # variant only (model indices stay valid on the full
             # ladder, so emit_pending needs no special casing)
@@ -963,9 +1076,7 @@ class PodServer:
             for req in pending.requests:
                 counts[req.variant.name] = counts.get(req.variant.name, 0) + 1
             self.placement.observe(counts)
-            if self.placement.maybe_rebalance() and self.telemetry.enabled:
-                self.telemetry.emit("rebalance", t_s=arrival.t_s,
-                                    groups=self.placement.device_counts())
+            self._maybe_rebalance(arrival.t_s)
 
     def _emit_admission(self, arrival, verdict: str, backlog_s,
                         plan_cost_s, degraded_cost_s) -> None:

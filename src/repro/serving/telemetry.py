@@ -89,6 +89,13 @@ EVENT_FIELDS: dict[str, frozenset] = {
     "frame_finish": frozenset({
         "t_s", "stream", "frame_idx", "event_e2e_s", "n_detections",
         "det_digest", "slo_violation"}),
+    # fleet tier (repro.serving.fleet): one routing decision binding a
+    # stream to a pod ("new" stream, "migrate" off a retired pod, or a
+    # ring move after elastic scaling)
+    "route": frozenset({"t_s", "stream", "pod", "reason"}),
+    # fleet tier: one elastic-controller action ("grow"/"shrink") with
+    # the sustained SLO pressure that triggered it
+    "scale": frozenset({"t_s", "action", "pod", "n_pods", "pressure"}),
 }
 
 
@@ -284,4 +291,15 @@ def format_timeline_report(events) -> list[str]:
             f"(max {max(c['total'] for c in carries)} requests)")
     if by_type.get("rebalance"):
         lines.append(f"placement rebalances: {len(by_type['rebalance'])}")
+    if by_type.get("route"):
+        reasons = collections.Counter(
+            r["reason"] for r in by_type["route"])
+        lines.append(
+            f"fleet routing over {len(by_type['route'])} decisions: "
+            + ", ".join(f"{k}={c}" for k, c in sorted(reasons.items())))
+    if by_type.get("scale"):
+        acts = collections.Counter(s["action"] for s in by_type["scale"])
+        lines.append(
+            "fleet scaling: "
+            + ", ".join(f"{k}={c}" for k, c in sorted(acts.items())))
     return lines

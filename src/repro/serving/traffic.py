@@ -195,6 +195,30 @@ class ArrivalProcess:
         return len(self.arrivals()) / (self.horizon_s - self.start_s)
 
 
+def split_arrivals(arrivals: Iterable[Arrival],
+                   assignment: dict[int, int]) -> dict[int, list[Arrival]]:
+    """Partition a time-ordered arrival trace per pod.
+
+    ``assignment`` maps stream -> pod id (the fleet router's binding
+    table).  Each pod's sub-trace keeps the global order, so driving
+    every sub-trace through its own ``PodServer.run_open_loop`` is
+    equivalent to the fleet's batched round-robin when the assignment
+    is static.  Raises on a stream the assignment does not cover —
+    silently dropping traffic would break the fleet conservation law
+    (``arrivals == sum(per-pod admitted + rejected + missed)``).
+    """
+    out: dict[int, list[Arrival]] = {}
+    for a in arrivals:
+        try:
+            pod = assignment[a.stream]
+        except KeyError:
+            raise ValueError(
+                f"arrival for stream {a.stream} has no pod assignment"
+            ) from None
+        out.setdefault(pod, []).append(a)
+    return out
+
+
 def arrivals_from_records(records) -> list[Arrival]:
     """Rebuild a time-ordered :class:`Arrival` list from telemetry
     ``arrival`` records (``repro.serving.telemetry``).

@@ -1,0 +1,413 @@
+"""Fleet tier: multi-pod routing, elastic scaling, conservation.
+
+Pins the fleet's contracts: the conservation law (every arrival is
+routed to exactly one pod and lands in exactly one of that pod's
+admitted / rejected / missed buckets — across routings AND scale
+events), routing determinism under fixed seeds, the retiring-pod
+drain (in-flight frames finish, streams re-route with reason
+``migrate``), consistent-hashing arc stability on grow, and the
+1-pod fleet's bit-identity with the plain ``PodServer`` open loop.
+"""
+
+import pytest
+
+from repro.core.omnisense import OmniSenseLoop
+from repro.data.synthetic import make_video
+from repro.distributed.elastic import HealthTracker, serving_scale_plan
+from repro.serving import profiles
+from repro.serving.fleet import (AffinityRouting, ElasticController,
+                                 FleetServer, LeastLoadedRouting,
+                                 RoutingPolicy, default_affinity_key,
+                                 format_fleet_report, make_fleet_pods,
+                                 make_routing)
+from repro.serving.network import NetworkModel
+from repro.serving.replay import stats_fingerprint
+from repro.serving.runtime import make_policy
+from repro.serving.scheduler import OmniSenseLatencyModel, OracleBackend
+from repro.serving.server import PodServer
+from repro.serving.telemetry import MemorySink
+from repro.serving.traffic import Arrival, ArrivalProcess, split_arrivals
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+
+
+def _streams(n_streams, seed0=300, budget=0.9):
+    variants = profiles.make_ladder()[3:5]
+    lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
+    return make_fleet_pods(
+        n_streams,
+        make_backend=lambda s: OracleBackend(
+            make_video(n_frames=64, n_objects=30 + 5 * (s % 4),
+                       seed=seed0 + s)),
+        make_loop=lambda s, b: OmniSenseLoop(variants, lat, b,
+                                             budget_s=budget),
+        pod_server_kwargs=lambda pid: {
+            "max_batch": 8,
+            "policy": make_policy("async", admission="slo")},
+    )
+
+
+def _fleet(n_streams, pods, routing="least-loaded", elastic=None,
+           telemetry=None, seed0=300):
+    _, _, make_pod = _streams(n_streams, seed0=seed0)
+    return FleetServer(make_pod, pods, routing=routing, elastic=elastic,
+                       telemetry=telemetry)
+
+
+def _traffic(n_streams, seed=5, horizon_s=12.0, fps=0.8):
+    return ArrivalProcess(n_streams, fps=fps, jitter=0.2, seed=seed,
+                          horizon_s=horizon_s)
+
+
+def _check_conservation(fstats, n_arrivals):
+    # fleet-wide: every arrival was routed to exactly one pod
+    assert fstats.arrivals == n_arrivals
+    assert fstats.arrivals == sum(
+        s.arrivals for s in fstats.pod_stats)
+    assert fstats.arrivals == sum(
+        s.admitted + s.rejected + s.missed for s in fstats.pod_stats)
+    for s in fstats.pod_stats:  # per pod: every admitted frame finished
+        assert s.arrivals == s.admitted + s.rejected + s.missed
+        assert s.frames == s.admitted
+
+
+# ---------------------------------------------------------------------------
+# routing policies
+# ---------------------------------------------------------------------------
+
+
+class TestRouting:
+    def test_make_routing_resolves_names_and_instances(self):
+        assert isinstance(make_routing("least-loaded"), LeastLoadedRouting)
+        assert isinstance(make_routing("affinity"), AffinityRouting)
+        inst = LeastLoadedRouting()
+        assert make_routing(inst) is inst
+
+    def test_make_routing_rejects_unknown(self):
+        with pytest.raises(ValueError, match="unknown routing"):
+            make_routing("round-robin")
+        with pytest.raises(ValueError, match="unknown routing"):
+            make_routing(None)
+
+    def test_base_policy_is_abstract(self):
+        fleet = _fleet(2, 1)
+        with pytest.raises(NotImplementedError):
+            RoutingPolicy().assign(0, fleet)
+
+    def test_least_loaded_balances_new_streams(self):
+        fleet = _fleet(8, 2)
+        for s in range(8):
+            fleet._route(Arrival(stream=s, t_s=0.1 * (s + 1), frame_idx=0))
+        counts = fleet.assigned_counts()
+        assert sorted(counts.values()) == [4, 4]
+
+    def test_affinity_colocates_same_key_streams(self):
+        """The default key buckets streams by content class (s % 4):
+        all streams of one class hash to the SAME ring arc, hence the
+        same pod — that is the whole point of affinity routing."""
+        fleet = _fleet(16, 4, routing="affinity")
+        for s in range(16):
+            fleet._route(Arrival(stream=s, t_s=0.1 * (s + 1), frame_idx=0))
+        for s in range(16):
+            assert (fleet.assignment[s]
+                    == fleet.assignment[s % 4]), s
+            assert default_affinity_key(s) == f"c{s % 4}"
+
+    def test_affinity_arcs_stable_on_grow(self):
+        """Consistent hashing: adding a pod may only move keys TO the
+        new pod — no key ever moves between two old pods."""
+        fleet = _fleet(4, 3, routing="affinity")
+        keys = [f"k{i}" for i in range(64)]
+        fleet.routing.affinity_key = lambda s: keys[s]
+        before = {i: fleet.routing.assign(i, fleet) for i in range(64)}
+        new_pid = fleet.grow(t_s=1.0, pressure=0.5)
+        after = {i: fleet.routing.assign(i, fleet) for i in range(64)}
+        moved = [i for i in range(64) if after[i] != before[i]]
+        assert all(after[i] == new_pid for i in moved)
+        assert len(moved) < 64  # most arcs stay put
+
+    def test_least_loaded_marks_overflow_for_reroute_on_scale(self):
+        fleet = _fleet(6, 2)
+        for s in range(6):
+            fleet._route(Arrival(stream=s, t_s=0.1 * (s + 1), frame_idx=0))
+        fleet.grow(t_s=1.0, pressure=0.5)
+        # 6 streams over 3 pods -> balanced share 2; each old pod holds
+        # 3, so exactly one stream per old pod is marked for reroute
+        marked = [s for s in range(6) if fleet.routing.wants_reroute(s)]
+        assert len(marked) == 2
+
+
+# ---------------------------------------------------------------------------
+# fleet serving: conservation + determinism
+# ---------------------------------------------------------------------------
+
+
+class TestFleetServing:
+    @pytest.mark.parametrize("routing", ["least-loaded", "affinity"])
+    def test_conservation_across_routings(self, routing):
+        fleet = _fleet(9, 3, routing=routing)
+        traffic = _traffic(9)
+        fstats = fleet.run_open_loop(traffic, slo_s=2.0)
+        _check_conservation(fstats, len(traffic.arrivals()))
+        assert fstats.routes >= 9  # every stream was routed at least once
+
+    @pytest.mark.parametrize("routing", ["least-loaded", "affinity"])
+    def test_fixed_seed_determinism(self, routing):
+        """Two identical fleet runs produce bit-identical fingerprints:
+        per-pod ServeStats AND the routing/scaling control plane."""
+        runs = []
+        for _ in range(2):
+            fleet = _fleet(6, 2, routing=routing)
+            runs.append(stats_fingerprint(
+                fleet.run_open_loop(_traffic(6), slo_s=2.0)))
+        assert runs[0] == runs[1]
+
+    def test_single_pod_fleet_bit_identical_to_pod_server(self):
+        """A 1-pod fleet is the degenerate case: same arrivals, same
+        batching rounds, same stats as the plain PodServer open loop."""
+        fleet = _fleet(5, 1)
+        fstats = fleet.run_open_loop(_traffic(5), slo_s=2.0)
+
+        loops, backends, _ = _streams(5)
+        solo = PodServer(loops, backends, max_batch=8,
+                         policy=make_policy("async", admission="slo"))
+        sstats = solo.run_open_loop(_traffic(5), slo_s=2.0)
+        assert (stats_fingerprint(fstats)["pods"][0]
+                == stats_fingerprint(sstats))
+
+    def test_route_telemetry_tagged_with_pods(self):
+        sink = MemorySink()
+        fleet = _fleet(4, 2, telemetry=sink)
+        fleet.run_open_loop(_traffic(4, horizon_s=6.0), slo_s=2.0)
+        routes = [e for e in sink.events if e["event"] == "route"]
+        assert {e["reason"] for e in routes} == {"new"}
+        assert {e["stream"] for e in routes} == set(range(4))
+        # the _PodSink wrapper tags every per-pod server event too
+        assert all("pod" in e for e in sink.events)
+        assert any(e["event"] == "dispatch_launch" for e in sink.events)
+
+    def test_fleet_requires_at_least_one_pod(self):
+        _, _, make_pod = _streams(2)
+        with pytest.raises(ValueError, match="n_pods"):
+            FleetServer(make_pod, 0)
+
+    def test_retire_guards(self):
+        fleet = _fleet(2, 2)
+        with pytest.raises(ValueError, match="not active"):
+            fleet.retire(7, t_s=0.0, pressure=0.0)
+        fleet.retire(1, t_s=0.0, pressure=0.0)
+        with pytest.raises(ValueError, match="last active pod"):
+            fleet.retire(0, t_s=0.0, pressure=0.0)
+
+    def test_fleet_stats_aggregation_and_report(self):
+        fleet = _fleet(6, 2)
+        horizon = 12.0
+        fstats = fleet.run_open_loop(_traffic(6, horizon_s=horizon),
+                                     slo_s=2.0)
+        assert fstats.n_pods == 2
+        assert fstats.admitted == sum(s.admitted for s in fstats.pod_stats)
+        assert fstats.frames == sum(s.frames for s in fstats.pod_stats)
+        assert len(fstats.event_e2e) == sum(
+            len(s.event_e2e) for s in fstats.pod_stats)
+        pct = fstats.event_e2e_percentiles()
+        assert pct[50] <= pct[95] <= pct[99]
+        report = format_fleet_report(fstats, horizon)
+        assert any("useful goodput" in line for line in report)
+
+
+# ---------------------------------------------------------------------------
+# split_arrivals: the static-assignment equivalence helper
+# ---------------------------------------------------------------------------
+
+
+class TestSplitArrivals:
+    def test_partition_preserves_order(self):
+        arrivals = _traffic(4).arrivals()
+        assignment = {0: 0, 1: 1, 2: 0, 3: 1}
+        parts = split_arrivals(arrivals, assignment)
+        assert sum(len(sub) for sub in parts.values()) == len(arrivals)
+        for pod, sub in parts.items():
+            assert all(assignment[a.stream] == pod for a in sub)
+            assert all(a.t_s <= b.t_s for a, b in zip(sub, sub[1:]))
+
+    def test_unassigned_stream_raises(self):
+        arrivals = _traffic(3).arrivals()
+        with pytest.raises(ValueError, match="no pod assignment"):
+            split_arrivals(arrivals, {0: 0, 1: 0})
+
+
+# ---------------------------------------------------------------------------
+# elastic scaling
+# ---------------------------------------------------------------------------
+
+
+class TestElasticController:
+    def test_invalid_args_rejected(self):
+        with pytest.raises(ValueError):
+            ElasticController(min_pods=0)
+        with pytest.raises(ValueError):
+            ElasticController(min_pods=3, max_pods=2)
+        with pytest.raises(ValueError):
+            ElasticController(interval_s=0.0)
+        with pytest.raises(ValueError):
+            ElasticController(sustain=0)
+
+    def test_grow_on_sustained_pressure(self):
+        """Fabricated hot intervals (high shed fraction) grow one pod
+        per sustained window, capped at max_pods; a single hot interval
+        is NOT enough (hysteresis)."""
+        fleet = _fleet(4, 1)
+        ctl = ElasticController(min_pods=1, max_pods=3, interval_s=1.0,
+                                sustain=2)
+        t = 0.0
+        for _ in range(5):
+            t += 1.0
+            for pid in fleet.active:
+                fleet.pods[pid].stats.arrivals += 10
+                fleet.pods[pid].stats.rejected += 8  # pressure 0.8
+            ctl.control(fleet, t)
+        # hot at t=1,2 -> grow; hot at t=3,4 -> grow; capped at 3
+        assert len(fleet.active) == 3
+        assert fleet.scale_ups == 2
+        t += 1.0
+        for pid in fleet.active:
+            fleet.pods[pid].stats.arrivals += 10
+            fleet.pods[pid].stats.rejected += 8
+        ctl.control(fleet, t)
+        assert len(fleet.active) == 3  # max_pods respected
+
+    def test_shrink_on_sustained_cold_respects_min_pods(self):
+        fleet = _fleet(4, 3)
+        ctl = ElasticController(min_pods=2, max_pods=3, interval_s=1.0,
+                                sustain=2)
+        t = 0.0
+        for _ in range(6):  # zero-delta intervals: pressure 0.0
+            t += 1.0
+            ctl.control(fleet, t)
+        assert len(fleet.active) == 2  # one retire, then floored
+        assert fleet.scale_downs == 1
+
+    def test_shrink_victim_prefers_empty_then_highest_id(self):
+        fleet = _fleet(6, 3)
+        # pods 0 and 1 hold streams, pod 2 is empty -> victim is 2
+        fleet.assignment = {0: 0, 1: 0, 2: 1}
+        assert ElasticController._pick_victim(fleet) == 2
+        # all empty -> ties break to the HIGHEST id (founders persist)
+        fleet.assignment = {}
+        assert ElasticController._pick_victim(fleet) == 2
+
+    def test_catch_up_after_lull_takes_one_action(self):
+        """A long traffic lull spanning many intervals must not queue a
+        burst of back-to-back scale actions."""
+        fleet = _fleet(4, 3)
+        ctl = ElasticController(min_pods=1, max_pods=3, interval_s=1.0,
+                                sustain=1)
+        ctl.control(fleet, 50.0)  # one cold step despite 50 intervals
+        assert len(fleet.active) == 2
+        assert fleet.scale_downs == 1
+
+    def test_retiring_pod_drains_and_streams_migrate(self):
+        """The drain contract across a real scale-down: the retired
+        pod's admitted frames all finish, its streams re-route with
+        reason ``migrate``, and the fleet-wide conservation law holds
+        across the scale event."""
+        sink = MemorySink()
+        # always-cold controller: retires one pod per interval down to
+        # min_pods while traffic is still arriving
+        ctl = ElasticController(min_pods=1, max_pods=3, interval_s=3.0,
+                                grow_threshold=2.0, shrink_threshold=1.1,
+                                sustain=1)
+        fleet = _fleet(6, 3, elastic=ctl, telemetry=sink)
+        traffic = _traffic(6, horizon_s=15.0)
+        fstats = fleet.run_open_loop(traffic, slo_s=2.0)
+        assert fstats.scale_downs == 2
+        assert len(fleet.active) == 1
+        _check_conservation(fstats, len(traffic.arrivals()))
+        migrations = [e for e in sink.events if e["event"] == "route"
+                      and e["reason"] == "migrate"]
+        assert migrations and fstats.migrations >= len(migrations)
+        scale = [e for e in sink.events if e["event"] == "scale"]
+        assert [e["action"] for e in scale] == ["shrink", "shrink"]
+        # the drained pods kept nothing in flight
+        for pid in set(fleet.pods) - set(fleet.active):
+            assert not fleet.pods[pid]._inflight
+            assert not len(fleet.pods[pid].queues)
+
+    def test_grow_mid_run_serves_new_pod(self):
+        """An always-hot controller grows to max_pods mid-run; the new
+        pods receive re-routed streams and conservation holds."""
+        ctl = ElasticController(min_pods=1, max_pods=3, interval_s=3.0,
+                                grow_threshold=0.0, sustain=1)
+        fleet = _fleet(6, 1, elastic=ctl)
+        traffic = _traffic(6, horizon_s=15.0)
+        fstats = fleet.run_open_loop(traffic, slo_s=2.0)
+        assert fstats.scale_ups == 2
+        assert len(fleet.active) == 3
+        _check_conservation(fstats, len(traffic.arrivals()))
+
+    def test_health_tracker_integration(self):
+        """The controller heartbeats per-pod pressure into the training
+        stack's HealthTracker: hosts appear via ensure_host, leave via
+        remove_host, and stragglers() exposes the pressure outliers."""
+        tracker = HealthTracker(0, beat_interval=8.0)
+        fleet = _fleet(4, 3)
+        ctl = ElasticController(min_pods=1, max_pods=3, interval_s=1.0,
+                                sustain=99, tracker=tracker)
+        for pid in (0, 1):  # light pressure on the founders...
+            fleet.pods[pid].stats.arrivals += 10
+            fleet.pods[pid].stats.rejected += 1
+        fleet.pods[2].stats.arrivals += 10
+        fleet.pods[2].stats.rejected += 10  # ...pod 2 sheds everything
+        ctl.control(fleet, 1.0)
+        assert set(tracker.hosts) >= {0, 1, 2}
+        assert ctl.stragglers() == [2]
+        tracker.remove_host(2)
+        assert 2 not in tracker.hosts
+
+
+class TestServingScalePlan:
+    def test_even_split(self):
+        plan = serving_scale_plan(8, 4)
+        assert plan == {"n_pods": 4, "per_pod_devices": 2,
+                        "devices_used": 8, "devices_idle": 0}
+
+    def test_remainder_stays_idle(self):
+        plan = serving_scale_plan(8, 3)
+        assert plan["per_pod_devices"] == 2
+        assert plan["devices_used"] == 6 and plan["devices_idle"] == 2
+
+    def test_zero_devices(self):
+        plan = serving_scale_plan(0, 4)
+        assert plan["per_pod_devices"] == 0 and plan["devices_used"] == 0
+
+
+# ---------------------------------------------------------------------------
+# fleet replay: record -> check round trip
+# ---------------------------------------------------------------------------
+
+
+class TestFleetReplay:
+    def test_record_then_replay_is_bit_identical(self, tmp_path):
+        from repro.serving.replay import CorpusSpec, record, replay
+        from repro.serving.telemetry import JsonlSink
+
+        spec = CorpusSpec(mode="open", n_streams=4, frames=8,
+                          budget_s=0.9, devices=4, max_batch=8,
+                          policy="async", admission="slo", slo_s=2.0,
+                          fps=0.8, jitter=0.2, horizon_s=8.0,
+                          pods=2, routing="least-loaded")
+        log = tmp_path / "fleet.jsonl"
+        record(spec, JsonlSink(str(log)))
+        result = replay(str(log))
+        assert result.identical, result.drift
+
+    def test_fleet_spec_requires_open_mode(self):
+        from repro.serving.replay import CorpusSpec, build_fleet
+
+        spec = CorpusSpec(mode="closed", n_streams=2, frames=4,
+                          budget_s=0.9, devices=0, max_batch=8,
+                          policy="sync", pods=2)
+        with pytest.raises(ValueError):
+            build_fleet(spec)

@@ -280,6 +280,85 @@ class TestFixedPoint:
             assert not changed
 
 
+class TestSloEnvelope:
+    """``solve_pod(slo_s=...)``: the run's SLO as the capacity envelope
+    (PR 8) — ``T_cap = min(uncoupled projected tick, slo_s)``, so the
+    batching discount may upgrade plans only into device time that also
+    fits the service objective.  Replaces the per-stream budget
+    workaround (see README 'Migration')."""
+
+    def _pod(self, seed, s=4, v=3):
+        rng = np.random.default_rng(seed)
+        return [rand_problem(rng, v, 2) for _ in range(s)], _variants(v)
+
+    @staticmethod
+    def _uncoupled_tick(problems, variants, lat, buckets):
+        plans = [allocation.allocate(p.acc, p.d_pre, p.d_inf, p.budget)
+                 for p in problems]
+        counts = pa._total_counts(plans, variants)
+        load = pa.projected_group_load(counts, variants, lat, buckets)
+        return max(load.values(), default=0.0)
+
+    def test_loose_slo_is_bit_identical_to_none(self):
+        """An SLO above the uncoupled projection never binds: the clamp
+        is the identity and the solution stays byte-identical to the
+        default self-referential envelope."""
+        for seed in (0, 3, 11):
+            problems, variants = self._pod(seed)
+            lat, buckets = _lat(), ShapeBuckets()
+            a = pa.solve_pod(problems, variants, lat, buckets=buckets)
+            b = pa.solve_pod(problems, variants, lat, buckets=buckets,
+                             slo_s=1e9)
+            assert b.tick_cap == a.tick_cap
+            assert all(_plans_equal(x, y) for x, y in zip(a.plans, b.plans))
+
+    def test_tick_cap_clamps_to_min_of_uncoupled_and_slo(self):
+        problems, variants = self._pod(1)
+        lat, buckets = _lat(), ShapeBuckets()
+        u = self._uncoupled_tick(problems, variants, lat, buckets)
+        assert u > 0
+        loose = pa.solve_pod(problems, variants, lat, buckets=buckets,
+                             slo_s=10 * u)
+        tight = pa.solve_pod(problems, variants, lat, buckets=buckets,
+                             slo_s=0.5 * u)
+        assert loose.tick_cap == pytest.approx(u)
+        assert tight.tick_cap == pytest.approx(0.5 * u)
+
+    def test_clamped_envelope_gates_upgrades(self):
+        """Under a binding SLO every ADOPTED switch fits the clamped
+        envelope, and kept incumbents never exceed the uncoupled
+        round-0 projection — so the returned plans' projection is
+        bounded by max(uncoupled, cap) regardless of how tight the
+        clamp is (incumbents above the cap are hysteresis, not a
+        violation: their load was already paid for)."""
+        for seed in (0, 1, 2, 5, 9):
+            problems, variants = self._pod(seed)
+            lat, buckets = _lat(), ShapeBuckets()
+            u = self._uncoupled_tick(problems, variants, lat, buckets)
+            for frac in (0.5, 0.25):
+                sol = pa.solve_pod(problems, variants, lat,
+                                   buckets=buckets, slo_s=frac * u)
+                assert sol.tick_cap == pytest.approx(frac * u)
+                assert sol.projected_tick <= max(u, sol.tick_cap) + 1e-6
+
+    def test_single_stream_short_circuit_reports_clamp(self):
+        """S=1 keeps the calibrated per-stream plan byte-identical, but
+        the returned envelope still reflects the clamp and
+        ``projected_tick`` always reports the returned plans'
+        projection (possibly above a tiny cap)."""
+        problems, variants = self._pod(4, s=1)
+        lat, buckets = _lat(), ShapeBuckets()
+        u = self._uncoupled_tick(problems, variants, lat, buckets)
+        sol = pa.solve_pod(problems, variants, lat, buckets=buckets,
+                           slo_s=0.1 * u)
+        assert not sol.coupled and sol.rounds == 0
+        assert sol.tick_cap == pytest.approx(0.1 * u)
+        assert sol.projected_tick == pytest.approx(u)
+        base = allocation.allocate(problems[0].acc, problems[0].d_pre,
+                                   problems[0].d_inf, problems[0].budget)
+        assert _plans_equal(sol.plans[0], base)
+
+
 class TestMonotonicity:
     def _prices(self, spec, co, util=None):
         variants = _variants(2)

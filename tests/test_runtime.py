@@ -950,6 +950,34 @@ class TestTickHookResolution:
 # ---------------------------------------------------------------------------
 
 
+class TestRebalancePoint:
+    """``SchedulePolicy.rebalance_point`` (PR 8): the policy owns WHEN
+    placement rebalances may fire — PodServer consults the hook
+    wherever it used to call ``placement.maybe_rebalance()``
+    unconditionally."""
+
+    def test_barrier_policies_rebalance_every_emission(self):
+        """The base rule is every emission — bit-identical to the
+        pre-hook hard-wired timing — even while a group is busy (the
+        barrier never starts a tick with carry-in anyway)."""
+        clock = GroupClock()
+        clock.dispatch(0, 5.0)
+        for policy in (SyncTickPolicy(), DeadlineOrderPolicy()):
+            assert policy.rebalance_point(None, clock, {})
+
+    def test_async_policy_waits_for_capacity_boundary(self):
+        """Async carry prices in-flight dispatches against the current
+        partition: moving devices mid-carry would invalidate that, so
+        the hook defers until every group is free."""
+        policy = AsyncDrainPolicy()
+        clock = GroupClock()
+        assert policy.rebalance_point(None, clock, {})  # all free
+        clock.dispatch(0, 2.0)
+        assert not policy.rebalance_point(None, clock, {})  # carrying
+        clock.advance(2.0)
+        assert policy.rebalance_point(None, clock, {})  # boundary
+
+
 class TestFlushDepth:
     def test_deep_async_carry_settles_within_bound(self):
         """A pod with carried work and deep queues settles without

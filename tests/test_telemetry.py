@@ -83,13 +83,15 @@ class TestSchema:
         """Each record carries its type's required keys (enforced at
         emit), and between them the two corpora exercise every event
         type in EVENT_FIELDS except ``rebalance`` (placement-shift
-        dependent — covered by validate_event directly)."""
+        dependent — covered by validate_event directly) and the
+        fleet-tier ``route``/``scale`` (single-pod corpora never route
+        or scale — emitted and checked in tests/test_fleet.py)."""
         seen = set()
         for events, _ in (closed_log, open_log):
             for e in events:
                 assert EVENT_FIELDS[e["event"]] <= e.keys()
                 seen.add(e["event"])
-        optional = {"rebalance"}
+        optional = {"rebalance", "route", "scale"}
         assert set(EVENT_FIELDS) - seen <= optional
         validate_event({"event": "rebalance", "t_s": 0.0,
                         "groups": {"v": 2}})

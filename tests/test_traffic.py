@@ -290,11 +290,26 @@ class TestOpenLoopServing:
         assert (runs["slo"].useful_goodput_frames
                 > runs[None].useful_goodput_frames)
 
-    def test_pod_allocate_policy_rejected(self):
+    def test_pod_allocate_policy_served_with_slo_envelope(self):
+        """Pod-allocate policies run open-loop since solve_pod accepts
+        the SLO capacity envelope directly: same-instant arrivals plan
+        jointly through the fixed point and conservation holds."""
+        server = _open_pod(3, policy=SyncTickPolicy(pod_allocate=True))
+        stats = server.run_open_loop(
+            ArrivalProcess(3, fps=0.8, jitter=0.2, seed=5, horizon_s=12.0),
+            slo_s=2.5)
+        self._conservation(stats)
+        assert stats.pod_ticks > 0
+        assert not len(server.queues) and not server._inflight
+
+    def test_pod_allocate_without_slo_deprecated(self):
+        """The envelope-less regime (pod fixed point with no SLO) is
+        the one-PR deprecation window: it still runs, but warns."""
         server = _open_pod(2, policy=SyncTickPolicy(pod_allocate=True))
-        with pytest.raises(ValueError, match="open-loop"):
-            server.run_open_loop(
-                ArrivalProcess(2, fps=1.0, seed=0, horizon_s=2.0))
+        with pytest.warns(DeprecationWarning, match="slo_s"):
+            stats = server.run_open_loop(
+                ArrivalProcess(2, fps=0.5, seed=0, horizon_s=6.0))
+        self._conservation(stats)
 
     def test_causality_and_report(self):
         server = _open_pod(3, policy=AsyncDrainPolicy())
