@@ -34,7 +34,19 @@ When the snapshots carry a ``fleet_grid`` section (PR 8,
 ``serving_bench.py --fleet``), the fleet-tier dominance floor is
 gated: on the same fixed device budget the best-routing fleet must
 match the monolithic pod's useful goodput at every grid point and
-STRICTLY beat it at >= 128 streams (deterministic, gated exactly).
+STRICTLY beat it at >= 128 streams (deterministic, gated exactly),
+and (PR 9) no routing arm's p99 E2E may exceed the sweep's SLO
+envelope by more than the 5% per-pod-envelope band (see
+``fleet_p99_within_slo``).
+
+BENCH_NMS.json (PR 9) additionally carries the fused-tick grid and
+the bf16 SphIoU flip measurement; the schema REQUIRES both (the
+committed snapshot has them, so a fresh one without means the bench
+vanished — the NMS lane is schema-only, with no baseline to diff),
+and ``--schema-only`` also enforces the fused acceptance floor:
+f32 bit-identity, strict projection-stage win at B >= 8, a
+no-regress band on the full tick, and the bf16 keep-mask flip
+bound.
 
 Both snapshots are validated against an EXPLICIT schema first
 (required keys per grid section, per nested policy/admission arm), so
@@ -74,14 +86,21 @@ SERVE_SCHEMAS: dict[str, tuple[frozenset, dict[str, frozenset]]] = {
                   {"admit_all": frozenset({"useful_goodput", "rejected"}),
                    "slo": frozenset({"useful_goodput", "rejected"})}),
     "fleet_grid": (frozenset({"streams", "pods", "goodput_ratio"}),
-                   {"mono": frozenset({"useful_goodput", "rejected"}),
+                   {"mono": frozenset({"useful_goodput", "rejected",
+                                       "p99_e2e_s"}),
                     "least_loaded": frozenset({"useful_goodput",
-                                               "rejected", "routes"}),
+                                               "rejected", "routes",
+                                               "p99_e2e_s"}),
                     "affinity": frozenset({"useful_goodput", "rejected",
-                                           "routes"})}),
+                                           "routes", "p99_e2e_s"})}),
 }
 
 NMS_ENTRY_KEYS = frozenset({"b", "n", "host_us", "batch_us", "speedup"})
+NMS_FUSED_KEYS = frozenset({"b", "staged_us", "fused_us", "speedup",
+                            "staged_project_us", "fused_project_us",
+                            "project_speedup", "bit_identical"})
+NMS_BF16_KEYS = frozenset({"flip_rate", "flips", "entries",
+                           "far_row_flips", "far_rows", "bound"})
 
 
 def _check_entry(entry, required: frozenset, where: str, log) -> bool:
@@ -136,16 +155,37 @@ def validate_serve(snapshot: dict, label: str, log=print) -> bool:
 
 
 def validate_nms(snapshot: dict, label: str, log=print) -> bool:
-    """Validate a BENCH_NMS.json snapshot (no ratio gate exists for
-    NMS, so this schema check is its whole nightly validation)."""
+    """Validate a BENCH_NMS.json snapshot.
+
+    Besides the per-entry key checks, the ``fused_grid`` and ``bf16``
+    sections (PR 9, the fused-tick bench) are REQUIRED: the committed
+    snapshot carries them, so a fresh snapshot without them means the
+    fused-tick bench silently vanished from the nightly — the
+    schema-only NMS lane has no baseline to diff against, so the
+    armed-gate check lives here instead.
+    """
     entries = snapshot.get("grid")
     if not isinstance(entries, list) or not entries:
         log(f"::error::{label}: NMS snapshot has no grid entries")
         return False
     ok = all(_check_entry(e, NMS_ENTRY_KEYS, f"{label}: grid[{i}]", log)
              for i, e in enumerate(entries))
+    fused = snapshot.get("fused_grid")
+    if not isinstance(fused, list) or not fused:
+        log(f"::error::{label}: NMS snapshot has no fused_grid entries; "
+            "did the fused-tick bench run? (kernels_bench.nms_bench "
+            "emits it by default — fused=False must not reach CI)")
+        ok = False
+    else:
+        ok = all(_check_entry(e, NMS_FUSED_KEYS,
+                              f"{label}: fused_grid[{i}]", log)
+                 for i, e in enumerate(fused)) and ok
+    if not _check_entry(snapshot.get("bf16"), NMS_BF16_KEYS,
+                        f"{label}: bf16", log):
+        ok = False
     if ok:
-        log(f"schema ok [{label}]: grid({len(entries)})")
+        log(f"schema ok [{label}]: grid({len(entries)}), "
+            f"fused_grid({len(fused)}), bf16")
     return ok
 
 
@@ -347,6 +387,109 @@ def fleet_dominates(fresh: dict, strict_min_streams: int = 128,
     return ok
 
 
+def fleet_p99_within_slo(fresh: dict, band: float = 0.05,
+                         log=print) -> bool:
+    """Fleet-level p99-E2E gate: every routed arm near the envelope.
+
+    For every fresh ``fleet_grid`` entry each routing arm's
+    ``p99_e2e_s`` must stay <= the sweep's ``slo_s`` (recorded in the
+    ``fleet`` meta section) plus a ``band`` allowance.  The band is
+    not measurement noise (the sweep is deterministic): each pod
+    currently admits against its OWN capacity envelope, so at >= 4
+    pods the thinner per-pod device slices overshoot the global SLO
+    by up to ~3.5% on the committed frontier (the fleet-global
+    ``solve_pod`` envelope is the open ROADMAP follow-on that
+    removes it).  Gating at SLO+5% pins today's overshoot so any
+    admission or router change that widens the tail fails loudly —
+    a regression the goodput dominance gate alone would not catch.
+    """
+    entries = fresh.get("fleet_grid", [])
+    if not entries:
+        log("check_regression: no fleet_grid entries for the p99 gate")
+        return False
+    slo = fresh.get("fleet", {}).get("slo_s")
+    if slo is None:
+        log("::error::fleet_grid present but the fleet meta section "
+            "has no slo_s; cannot gate p99 E2E")
+        return False
+    ceiling = slo * (1 + band)
+    ok = True
+    for e in entries:
+        worst = max(e["least_loaded"]["p99_e2e_s"],
+                    e["affinity"]["p99_e2e_s"])
+        good = worst <= ceiling + 1e-9
+        log(f"  fleet streams={e['streams']:>3} pods={e['pods']}  "
+            f"p99 least_loaded={e['least_loaded']['p99_e2e_s']:.4f}  "
+            f"affinity={e['affinity']['p99_e2e_s']:.4f}  "
+            f"slo={slo} (+{band:.0%})"
+            f"{'' if good else '  <-- BLOWS THE SLO BAND'}")
+        if not good:
+            log(f"::error::fleet p99 E2E blows the SLO band at "
+                f"{e['streams']} streams / {e['pods']} pods: "
+                f"{worst:.4f}s > {ceiling:.4f}s ({slo}s + {band:.0%})")
+            ok = False
+    return ok
+
+
+def fused_dominates(fresh: dict, min_b: int = 8, tick_band: float = 0.15,
+                    log=print) -> bool:
+    """The fused-tick acceptance floor (PR 9).
+
+    For every fresh ``fused_grid`` entry the f32 fused path must be
+    ``bit_identical`` to the staged path (exact — the crop cache and
+    batched projection are exactness-preserving by construction), and
+    at >= ``min_b`` crops the fused projection stage must STRICTLY
+    beat the staged per-crop dispatch loop (``project_speedup > 1``;
+    measured ~9x, so exact gating does not flap) while the full tick
+    stays within a ``tick_band`` no-regress band (on CPU the detector
+    forward dominates both paths, so the tick ratio is ~1 with up to
+    ~8% wall-clock noise either way — the band is sized so only a
+    real regression moves it).  The ``bf16`` keep-mask flip rate must
+    stay under its recorded bound with ZERO flips on rows that have no
+    IoU pair near the threshold.
+    """
+    entries = fresh.get("fused_grid", [])
+    if not entries:
+        log("check_regression: no fused_grid entries")
+        return False
+    ok = True
+    for e in entries:
+        strict = e["b"] >= min_b
+        good = bool(e["bit_identical"])
+        if strict:
+            good = (good and e["fused_project_us"] < e["staged_project_us"]
+                    and e["fused_us"] <= e["staged_us"] * (1 + tick_band))
+        log(f"  fused b={e['b']:>2}  tick {e['staged_us']:.0f}->"
+            f"{e['fused_us']:.0f}us  project {e['staged_project_us']:.0f}"
+            f"->{e['fused_project_us']:.0f}us "
+            f"({e['project_speedup']:.2f}x)  "
+            f"bit_identical={e['bit_identical']}"
+            f"{'' if good else '  <-- FAILS fused floor'}")
+        if not good:
+            log(f"::error::fused tick fails the acceptance floor at "
+                f"b={e['b']}: bit_identical={e['bit_identical']} "
+                f"project {e['fused_project_us']}us vs staged "
+                f"{e['staged_project_us']}us, tick {e['fused_us']}us "
+                f"vs staged {e['staged_us']}us (+{tick_band:.0%} band)")
+            ok = False
+    bf16 = fresh.get("bf16")
+    if not bf16:
+        log("::error::fused_grid present but no bf16 section; did the "
+            "flip measurement run?")
+        return False
+    flips_ok = (bf16["flip_rate"] <= bf16["bound"]
+                and bf16["far_row_flips"] == 0)
+    log(f"  bf16 flip_rate={bf16['flip_rate']} (bound {bf16['bound']})  "
+        f"far_row_flips={bf16['far_row_flips']}/{bf16['far_rows']}"
+        f"{'' if flips_ok else '  <-- FAILS flip bound'}")
+    if not flips_ok:
+        log(f"::error::bf16 SphIoU keep-mask flips out of bound: "
+            f"rate={bf16['flip_rate']} (bound {bf16['bound']}), "
+            f"far-row flips={bf16['far_row_flips']} (must be 0)")
+        ok = False
+    return ok
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", default="BENCH_SERVE.json",
@@ -373,7 +516,14 @@ def main(argv=None) -> int:
         ok = True
         for path in args.schema_only:
             with open(path) as f:
-                ok = validate_snapshot(json.load(f), path) and ok
+                snapshot = json.load(f)
+            ok = validate_snapshot(snapshot, path) and ok
+            if snapshot.get("bench") == "spherical_nms" \
+                    and snapshot.get("fused_grid"):
+                # the fused-tick floor needs no baseline (bit-identity
+                # and within-snapshot ratios), so the NMS schema lane
+                # gates it too
+                ok = fused_dominates(snapshot) and ok
         return 0 if ok else 1
     if args.fresh is None:
         ap.error("--fresh is required (or use --schema-only)")
@@ -431,6 +581,8 @@ def main(argv=None) -> int:
         # the fleet must match the monolith everywhere and beat it in
         # the >= 128-stream regime it exists for
         ok = fleet_dominates(fresh) and ok
+        # ...without ever letting a routed arm's p99 E2E blow the SLO
+        ok = fleet_p99_within_slo(fresh) and ok
     return 0 if ok else 1
 
 

@@ -461,6 +461,7 @@ def _policy_metrics(stats) -> dict:
         p99_e2e_s=round(pct[99], 4),
         dispatches=stats.dispatches,
         carried_requests=stats.carried_requests,
+        carry_tick_slots=stats.carry_tick_slots,
     )
 
 

@@ -137,7 +137,8 @@ def main():
     pct = stats.event_e2e_percentiles()
     print(f"event clock: mean tick {stats.mean_tick:.3f}s, E2E "
           f"p50/p95/p99 = {pct[50]:.2f}/{pct[95]:.2f}/{pct[99]:.2f}s, "
-          f"{stats.carried_requests} carried requests")
+          f"{stats.carried_requests} carried requests "
+          f"({stats.carry_tick_slots} request-ticks)")
     for line in format_group_report(stats, placement):
         print(line)
     if args.open_loop:

@@ -412,10 +412,12 @@ def nms_auto_backend(b: int, n: int) -> str:
             else "host")
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+@functools.partial(
+    jax.jit, static_argnames=("interpret", "use_pallas", "iou_dtype"))
 def _sph_nms_batch_device(
     boxes: Array, scores: Array, mask: Array, iou_threshold: Array,
     *, interpret: bool = False, use_pallas: bool = True,
+    iou_dtype=None,
 ) -> Array:
     """(B, N) keep-mask: batched SphIoU + on-device greedy loop.
 
@@ -424,14 +426,22 @@ def _sph_nms_batch_device(
     terminating after max-survivors-per-row iterations.  The IoU block
     is the batched Pallas kernel (``use_pallas``, the TPU path) or the
     vmapped jnp oracle (XLA-fused; the fast compiled path on CPU where
-    Pallas would run in interpret mode).
+    Pallas would run in interpret mode).  ``iou_dtype`` (e.g.
+    ``jnp.bfloat16``) selects the IoU compute precision — cheaper VPU
+    work at the cost of keep flips for near-threshold pairs (bound
+    measured in the kernel bench and gated nightly).
     """
     _NMS_DEVICE_TRACES[0] += 1  # runs at trace time only
     b, n, _ = boxes.shape
     if use_pallas:
         from repro.kernels.sphiou.ops import sphiou_matrix_batch
 
-        iou = sphiou_matrix_batch(boxes, boxes, interpret=interpret)
+        iou = sphiou_matrix_batch(boxes, boxes, interpret=interpret,
+                                  dtype=iou_dtype or jnp.float32)
+    elif iou_dtype is not None:
+        iou = jax.vmap(sph_iou_matrix)(
+            boxes.astype(iou_dtype), boxes.astype(iou_dtype)
+        ).astype(jnp.float32)
     else:
         iou = jax.vmap(sph_iou_matrix)(boxes, boxes)
     cols = jnp.arange(n)[None, :]
@@ -479,6 +489,7 @@ def sph_nms_batch(
     max_out: int | None = None,
     *,
     backend: str = "auto",
+    iou_dtype=None,
 ) -> np.ndarray:
     """Batched greedy spherical NMS over padded rows -> (B, N) bool.
 
@@ -506,6 +517,11 @@ def sph_nms_batch(
     Inputs keep their dtype on the host path (the float64 serving
     boxes/scores are compared at full precision, exactly like
     ``sph_nms_host``); only the device/jit dispatch casts to float32.
+
+    ``iou_dtype`` (device/jit backends only) lowers the IoU compute
+    precision — ``jnp.bfloat16`` halves the VPU element width on TPU.
+    Near-threshold pairs can flip their keep decision; the flip rate is
+    measured in ``benchmarks/kernels_bench.py`` and gated nightly.
     """
     boxes = np.asarray(boxes)
     scores = np.asarray(scores)
@@ -520,6 +536,8 @@ def sph_nms_batch(
     if backend == "auto":
         backend = nms_auto_backend(b, n)
     if backend == "host":
+        if iou_dtype is not None:
+            raise ValueError("iou_dtype needs the device or jit backend")
         keep = _sph_nms_batch_host(boxes, scores, mask, iou_threshold)
     elif backend in ("device", "jit"):
         chunk = max(1, _DEVICE_CHUNK_ELEMS // max(n * n, 1))
@@ -533,6 +551,7 @@ def sph_nms_batch(
                 jnp.asarray(iou_threshold, jnp.float32),
                 interpret=jax.default_backend() != "tpu",
                 use_pallas=backend == "device",
+                iou_dtype=iou_dtype,
             )))
         keep = np.concatenate(parts, axis=0)
     else:
@@ -573,6 +592,88 @@ def pad_detection_rows(rows, pad_n=None, total_rows: int | None = None
             scores[r, :k] = [d.score for d in dets]
             mask[r, :k] = True
     return boxes, scores, mask
+
+
+class IncrementalNms:
+    """Cross-tick batched NMS that recomputes only the changed rows.
+
+    Consecutive ticks of a mostly-static scene re-suppress near-identical
+    per-stream detection rows; since :func:`sph_nms_batch` rows are
+    independent, a row whose (boxes, scores) are *exactly* the ones it
+    was suppressed with last tick can reuse last tick's keep-mask and
+    skip its (N, N) SphIoU block entirely.  Changed rows batch into one
+    ``sph_nms_batch`` call over the changed subset, so the result is
+    bit-identical to a full recompute by construction (pinned by the
+    fused-tick property tests).
+
+    Rows are addressed by a caller-stable ``key`` (the serving tier uses
+    the per-stream loop identity); padding does not participate in the
+    comparison, so reuse survives tick-to-tick changes of the padded N.
+    """
+
+    def __init__(self, iou_threshold: float = 0.6, *, backend: str = "auto",
+                 iou_dtype=None, capacity: int = 4096):
+        self.iou_threshold = iou_threshold
+        self.backend = backend
+        self.iou_dtype = iou_dtype
+        self.capacity = capacity
+        self.hits = 0
+        self.misses = 0
+        self._rows: dict = {}  # key -> (k, boxes bytes, scores bytes, keep)
+
+    def clear(self) -> None:
+        self._rows.clear()
+
+    @staticmethod
+    def _canon(boxes_r: np.ndarray, scores_r: np.ndarray, mask_r: np.ndarray
+               ) -> tuple[int, bytes, bytes]:
+        k = int(mask_r.sum())
+        return (k, np.ascontiguousarray(boxes_r[:k]).tobytes(),
+                np.ascontiguousarray(scores_r[:k]).tobytes())
+
+    def suppress(
+        self,
+        keys,                 # length-B sequence of stable row keys
+        boxes: np.ndarray,    # (B, N, 4) padded (mask prefix-contiguous)
+        scores: np.ndarray,   # (B, N)
+        mask: np.ndarray | None = None,
+        *,
+        max_out: int | None = None,
+    ) -> np.ndarray:
+        boxes = np.asarray(boxes)
+        scores = np.asarray(scores)
+        b, n = scores.shape
+        if mask is None:
+            mask = np.ones((b, n), dtype=bool)
+        else:
+            mask = np.asarray(mask, dtype=bool)
+        keep = np.zeros((b, n), dtype=bool)
+        canon = [self._canon(boxes[r], scores[r], mask[r]) for r in range(b)]
+        changed = []
+        for r, key in enumerate(keys):
+            ent = self._rows.get(key)
+            if ent is not None and ent[:3] == canon[r]:
+                self.hits += 1
+                k, kept = ent[0], ent[3]
+                keep[r, :k] = kept
+            else:
+                self.misses += 1
+                changed.append(r)
+        if changed:
+            sub = np.asarray(changed)
+            sub_keep = sph_nms_batch(
+                boxes[sub], scores[sub], mask[sub],
+                iou_threshold=self.iou_threshold, backend=self.backend,
+                iou_dtype=self.iou_dtype)
+            keep[sub] = sub_keep
+            for r in changed:
+                if len(self._rows) >= self.capacity:
+                    self._rows.pop(next(iter(self._rows)))
+                k = canon[r][0]
+                self._rows[keys[r]] = canon[r] + (keep[r, :k].copy(),)
+        if max_out is not None:
+            keep = _apply_max_out_np(keep, scores, max_out)
+        return keep
 
 
 # --------------------------------------------------------------------------

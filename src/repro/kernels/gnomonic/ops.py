@@ -8,11 +8,13 @@ to the jnp oracle.  Interpret mode is used automatically off-TPU.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.projection import gnomonic_coords
+from repro.core.projection import gnomonic_coords, sample_erp_bilinear
 from repro.kernels.gnomonic import gnomonic as _g
 from repro.kernels.gnomonic.ref import gnomonic_sample_ref
 
@@ -72,6 +74,51 @@ def gnomonic_sample(
         erp_h=erp_h,
         interpret=interpret,
     )
+
+
+@functools.partial(jax.jit, static_argnames=("out_size",))
+def _project_srois_jit(
+    erps: jax.Array,     # (B, H, W, C)
+    centers: jax.Array,  # (B, 2) (theta, phi)
+    fovs: jax.Array,     # (B, 2) (h, v) radians
+    *,
+    out_size: tuple[int, int],
+) -> jax.Array:
+    """ONE dispatch for a whole tick's crops: vmapped gnomonic coords +
+    bilinear ERP sampling.  Rows are independent, so the same compiled
+    program called at B=1 produces bit-identical rows to the B=k call —
+    the invariant the fused-tick exactness tests pin.
+    """
+    erp_size = erps.shape[1:3]
+
+    def one(erp, center, fov):
+        u, v = gnomonic_coords(center[0], center[1], (fov[0], fov[1]),
+                               out_size, erp_size)
+        return sample_erp_bilinear(erp, u, v)
+
+    return jax.vmap(one)(erps, centers, fovs)
+
+
+def project_srois_batched(
+    frames, centers, fovs, out_size: tuple[int, int]
+) -> jax.Array:
+    """Batched SRoI -> PI projection: (B frames, B regions) -> (B, S, S, C).
+
+    The staged path issues one ``project_sroi`` dispatch per crop (each
+    itself several kernels: coords, rotation, sampling) and re-enters
+    Python between crops; this entry stacks the tick's frames and region
+    geometry once and projects every crop in a single jitted program.
+    The jit cache is keyed by (B, ERP shape, out_size) — callers pad B
+    to a ``ShapeBuckets`` batch rung to bound compile counts.
+
+    ``frames``: sequence of (H, W, C) arrays (one per crop — repeats
+    are fine and common); ``centers``/``fovs``: (B, 2) array-likes.
+    """
+    erps = jnp.stack([jnp.asarray(f) for f in frames])
+    centers = jnp.asarray(np.asarray(centers, dtype=np.float32))
+    fovs = jnp.asarray(np.asarray(fovs, dtype=np.float32))
+    return _project_srois_jit(erps, centers, fovs,
+                              out_size=(int(out_size[0]), int(out_size[1])))
 
 
 def project_sroi_kernel(

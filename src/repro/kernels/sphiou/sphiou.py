@@ -51,8 +51,16 @@ def _intersection(ta, pa, ha, va, tb, pb, hb, vb):
     return lon_w * jnp.maximum(lat_w, 0.0)
 
 
-def _iou_tile(a, b):
-    """(4, BN) x (4, BM) -> (BN, BM) SphIoU tile (shared kernel body)."""
+def _iou_tile(a, b, dtype=jnp.float32):
+    """(4, BN) x (4, BM) -> (BN, BM) SphIoU tile (shared kernel body).
+
+    ``dtype`` is the compute precision: bf16 halves the VPU element
+    width for ~2x elementwise throughput.  Inputs arrive f32 (memory
+    layout stays sublane-8 aligned); the cast happens in-register and
+    the tile is emitted back as f32.
+    """
+    a = a.astype(dtype)
+    b = b.astype(dtype)
     ta, pa = a[0, :], a[1, :]
     ha, va = a[2, :] * 0.5, a[3, :] * 0.5  # half FoVs
     tb, pb = b[0, :], b[1, :]
@@ -67,20 +75,22 @@ def _iou_tile(a, b):
 
     area_a = 4.0 * ha * jnp.sin(va)  # 2 * dtheta * sin(dphi/2)
     area_b = 4.0 * hb * jnp.sin(vb)
-    return inter / jnp.maximum(area_a + area_b - inter, 1e-12)
+    iou = inter / jnp.maximum(area_a + area_b - inter, 1e-12)
+    return iou.astype(jnp.float32)
 
 
-def _kernel(a_ref, b_ref, out_ref):
+def _kernel(a_ref, b_ref, out_ref, *, dtype):
     # a_ref: (4, BN), b_ref: (4, BM) -> out_ref: (BN, BM)
-    out_ref[...] = _iou_tile(a_ref[...], b_ref[...])
+    out_ref[...] = _iou_tile(a_ref[...], b_ref[...], dtype=dtype)
 
 
-def _kernel_batch(a_ref, b_ref, out_ref):
+def _kernel_batch(a_ref, b_ref, out_ref, *, dtype):
     # a_ref: (1, 4, BN), b_ref: (1, 4, BM) -> out_ref: (1, BN, BM)
-    out_ref[0] = _iou_tile(a_ref[0], b_ref[0])
+    out_ref[0] = _iou_tile(a_ref[0], b_ref[0], dtype=dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_m", "interpret", "dtype"))
 def sphiou_pallas(
     boxes_a_t: jax.Array,  # (4, N) f32
     boxes_b_t: jax.Array,  # (4, M) f32
@@ -88,11 +98,12 @@ def sphiou_pallas(
     block_n: int = 256,
     block_m: int = 256,
     interpret: bool = False,
+    dtype: jnp.dtype = jnp.float32,
 ) -> jax.Array:
     n, m = boxes_a_t.shape[1], boxes_b_t.shape[1]
     grid = (pl.cdiv(n, block_n), pl.cdiv(m, block_m))
     return pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, dtype=dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((4, block_n), lambda i, j: (0, i)),
@@ -104,7 +115,8 @@ def sphiou_pallas(
     )(boxes_a_t, boxes_b_t)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_m", "interpret", "dtype"))
 def sphiou_pallas_batch(
     boxes_a_t: jax.Array,  # (B, 4, N) f32
     boxes_b_t: jax.Array,  # (B, 4, M) f32
@@ -112,6 +124,7 @@ def sphiou_pallas_batch(
     block_n: int = 256,
     block_m: int = 256,
     interpret: bool = False,
+    dtype: jnp.dtype = jnp.float32,
 ) -> jax.Array:
     """Per-row SphIoU matrices: (B, 4, N) x (B, 4, M) -> (B, N, M).
 
@@ -124,7 +137,7 @@ def sphiou_pallas_batch(
     m = boxes_b_t.shape[2]
     grid = (b, pl.cdiv(n, block_n), pl.cdiv(m, block_m))
     return pl.pallas_call(
-        _kernel_batch,
+        functools.partial(_kernel_batch, dtype=dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 4, block_n), lambda r, i, j: (r, 0, i)),

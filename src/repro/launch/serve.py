@@ -241,7 +241,8 @@ def main() -> None:
     pct = stats.event_e2e_percentiles()
     print(f"event-clock tick: mean={stats.mean_tick:.3f}s  "
           f"E2E p50/p95/p99={pct[50]:.2f}/{pct[95]:.2f}/{pct[99]:.2f}s  "
-          f"carried requests: {stats.carried_requests}")
+          f"carried requests: {stats.carried_requests} "
+          f"({stats.carry_tick_slots} request-ticks)")
     if placement is not None:
         from repro.serving.server import format_group_report
 

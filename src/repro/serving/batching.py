@@ -184,6 +184,16 @@ class VariantQueues:
         q = self._queues.get(name)
         return q[0] if q else None
 
+    def newly_carried(self) -> int:
+        """Queued requests that were carried for the FIRST time by the
+        drain that just ran (``age == 1``: :meth:`drain_ops` ages every
+        left-behind request once per drain).  Summing this per tick
+        counts each carried request exactly once, however many ticks it
+        ends up waiting — the unique-requests carry counter
+        (``ServeStats.carried_requests``)."""
+        return sum(1 for q in self._queues.values()
+                   for item in q if item.age == 1)
+
     def full_drain_ops(self) -> list[tuple[str, int]]:
         """The plan covering EVERY queued request: variants in
         sorted-name order, one op per bucket-capped chunk

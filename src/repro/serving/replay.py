@@ -377,7 +377,8 @@ def replay(log, policy=None, admission=None) -> ReplayResult:
 
 # which fingerprint fields the policy-diff table shows, in order
 _DIFF_FIELDS = (
-    "frames", "ticks", "dispatches", "carried_requests", "sum_tick_inf_s",
+    "frames", "ticks", "dispatches", "carried_requests", "carry_tick_slots",
+    "sum_tick_inf_s",
     "sum_plan_value", "arrivals", "admitted", "degraded", "rejected",
     "missed", "empty_frames", "slo_violations", "total_detections",
 )

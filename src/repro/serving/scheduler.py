@@ -367,7 +367,8 @@ class JaxDetectorBackend:
     """
 
     def __init__(self, variants_cfg, params_per_variant, conf: float = 0.25,
-                 use_kernel: bool = True, max_det: int = 16, buckets=None):
+                 use_kernel: bool = True, max_det: int = 16, buckets=None,
+                 fused: bool = True, crop_cache_size: int = 256):
         from repro.serving.batching import ShapeBuckets
 
         self.cfgs = list(variants_cfg)
@@ -379,6 +380,15 @@ class JaxDetectorBackend:
             resolutions=tuple(sorted({c.input_size for c in self.cfgs})))
         self._jit_cache: dict = {}
         self.trace_count = 0  # incremented at trace time only
+        # fused tick: batched gnomonic projection (one dispatch per
+        # chunk instead of one `_project` per crop) + a cross-tick crop
+        # cache keyed on pitch-quantised region geometry.  `fused=False`
+        # restores the staged per-crop path (the bench baseline).
+        self.fused = fused
+        self.crop_cache_size = crop_cache_size if fused else 0
+        self._crop_cache: dict = {}  # key -> (guard, pi, ct, cp, fx, fy)
+        self.crop_cache_hits = 0
+        self.crop_cache_misses = 0
 
     def _project(self, frame_img, region: sroi_mod.SRoI, size: int):
         """SRoI -> (size, size, 3) PI; shared by both execution paths
@@ -399,21 +409,33 @@ class JaxDetectorBackend:
                             region.fov, (size, size))
 
     def _row_to_dets(self, boxes, scores, classes,
-                     region: sroi_mod.SRoI, size: int):
-        """Back-project one row of decoded PI boxes to SphBB detections."""
+                     region: sroi_mod.SRoI, size: int, geom=None):
+        """Back-project one row of decoded PI boxes to SphBB detections.
+
+        ONE vectorised ``pi_box_to_sphbb`` dispatch over the row's live
+        detections (``pi_box_to_sphbb`` broadcasts over leading axes;
+        bit-identical to the per-detection loop it replaced, pinned by
+        ``tests/test_fused_tick.py``).  ``geom`` overrides the
+        back-projection geometry — a cache hit reuses the PI projected
+        at the anchor region, so its boxes must lift through the anchor
+        geometry, not the (sub-pixel-drifted) query region's.
+        """
         import jax.numpy as jnp
 
-        dets = []
-        for b, s, c in zip(np.asarray(boxes), np.asarray(scores),
-                           np.asarray(classes)):
-            if s <= 0:
-                continue
-            sphbb = np.asarray(pi_box_to_sphbb(
-                jnp.asarray(b), jnp.asarray(region.center[0]),
-                jnp.asarray(region.center[1]), region.fov, (size, size)))
-            dets.append(sroi_mod.Detection(box=sphbb, category=int(c),
-                                           score=float(s)))
-        return dets
+        boxes = np.asarray(boxes)
+        scores = np.asarray(scores)
+        classes = np.asarray(classes)
+        live = np.flatnonzero(scores > 0)
+        if live.size == 0:
+            return []
+        ct, cp, fov = (geom if geom is not None
+                       else (region.center[0], region.center[1], region.fov))
+        sphbbs = np.asarray(pi_box_to_sphbb(
+            jnp.asarray(boxes[live]), jnp.asarray(ct), jnp.asarray(cp),
+            fov, (size, size)))
+        return [sroi_mod.Detection(box=sphbbs[i], category=int(classes[r]),
+                                   score=float(scores[r]))
+                for i, r in enumerate(live)]
 
     def infer_sroi(self, frame_img, region: sroi_mod.SRoI,
                    variant: acc_mod.ModelProfile):
@@ -475,6 +497,94 @@ class JaxDetectorBackend:
             fn = self._jit_cache[key] = jax.jit(traced)
         return fn
 
+    # ---- cross-tick crop cache -------------------------------------
+    #
+    # Static scenes re-project near-identical SRoIs tick after tick.
+    # A crop is reusable when (a) the source frame is the same array
+    # (identity + a strided content guard, so id() reuse after gc can
+    # never alias a different frame) and (b) the region geometry moved
+    # less than the bucket's pixel pitch (fov / size): quantising
+    # centre and fov at the pitch makes sub-pixel drift hash to the
+    # anchor's key.  Hits return the anchor's PI *and geometry*, so
+    # back-projection is bit-identical to re-serving the anchor region.
+
+    @staticmethod
+    def _frame_guard(frame_img) -> bytes:
+        h, w = frame_img.shape[:2]
+        sample = np.asarray(frame_img[::max(1, h // 8), ::max(1, w // 8)])
+        return np.ascontiguousarray(sample).tobytes()
+
+    @staticmethod
+    def _crop_key(frame_img, region: sroi_mod.SRoI, size: int):
+        fx, fy = float(region.fov[0]), float(region.fov[1])
+        px, py = fx / size, fy / size  # radians per output pixel
+        return (id(frame_img), frame_img.shape[:2], size,
+                round(float(region.center[0]) / px),
+                round(float(region.center[1]) / py),
+                round(fx / px), round(fy / py))
+
+    def _cache_put(self, key, guard, pi, region: sroi_mod.SRoI) -> None:
+        if len(self._crop_cache) >= self.crop_cache_size:
+            self._crop_cache.pop(next(iter(self._crop_cache)))
+        self._crop_cache[key] = (
+            guard, pi, float(region.center[0]), float(region.center[1]),
+            (float(region.fov[0]), float(region.fov[1])))
+
+    def _project_chunk(self, chunk, size: int):
+        """Project one chunk's crops: cache lookups + ONE batched
+        gnomonic dispatch for the misses (padded to a batch rung so the
+        projector compiles once per (bucket, ERP shape, size)).
+
+        Returns ``(pis, geoms)`` — the (b, S, S, 3) PI stack and the
+        per-item back-projection geometry (the anchor's for hits).
+        """
+        import jax.numpy as jnp
+
+        from repro.kernels.gnomonic.ops import project_srois_batched
+
+        b = len(chunk)
+        rows: list = [None] * b
+        geoms: list = [None] * b
+        miss: list[int] = []
+        guards: dict[int, bytes] = {}  # per distinct frame per chunk
+        keys: list = [None] * b
+        for i, (frame_img, region) in enumerate(chunk):
+            geoms[i] = (region.center[0], region.center[1],
+                        (float(region.fov[0]), float(region.fov[1])))
+            if not self.crop_cache_size:
+                miss.append(i)
+                continue
+            key = keys[i] = self._crop_key(frame_img, region, size)
+            ent = self._crop_cache.get(key)
+            if ent is not None:
+                guard = guards.get(id(frame_img))
+                if guard is None:
+                    guard = guards[id(frame_img)] = self._frame_guard(frame_img)
+                if ent[0] == guard:
+                    self.crop_cache_hits += 1
+                    rows[i] = ent[1]
+                    geoms[i] = (ent[2], ent[3], ent[4])
+                    continue
+            self.crop_cache_misses += 1
+            miss.append(i)
+        if miss:
+            b_proj = self.buckets.pad_batch(len(miss))
+            pad = [miss[-1]] * (b_proj - len(miss))
+            sel = miss + pad
+            fresh = project_srois_batched(
+                [chunk[i][0] for i in sel],
+                [chunk[i][1].center for i in sel],
+                [chunk[i][1].fov for i in sel], (size, size))
+            for j, i in enumerate(miss):
+                rows[i] = fresh[j]
+                if self.crop_cache_size:
+                    guard = guards.get(id(chunk[i][0]))
+                    if guard is None:
+                        guard = guards[id(chunk[i][0])] = self._frame_guard(
+                            chunk[i][0])
+                    self._cache_put(keys[i], guard, fresh[j], chunk[i][1])
+        return jnp.stack(rows), geoms
+
     def launch_srois_batched(self, items, variant: acc_mod.ModelProfile,
                              group=None):
         """Launch the padded batched forward(s) for a tick's
@@ -485,18 +595,28 @@ class JaxDetectorBackend:
         that launches every replica group's forward before resolving
         any of them overlaps the V variants' inference across their
         disjoint device groups — the multi-device tick.
+
+        With ``fused=True`` (default) the chunk's crops project in ONE
+        batched gnomonic dispatch (cache hits skip projection entirely)
+        instead of one ``_project`` per crop; ``fused=False`` keeps the
+        staged per-crop path as the measured baseline.
         """
         import jax.numpy as jnp
 
         idx = variant.index - 1
         cfg = self.cfgs[idx]
         size = self.buckets.bucket_resolution(cfg.input_size)
-        launched = []  # (chunk, boxes, scores, classes)
+        launched = []  # (chunk, geoms, boxes, scores, classes)
         lo = 0
         for b in self.buckets.split(len(items)):
             chunk = items[lo:lo + b]
             lo += b
-            pis = jnp.stack([self._project(f, r, size) for f, r in chunk])
+            if self.fused:
+                pis, geoms = self._project_chunk(chunk, size)
+            else:
+                pis = jnp.stack([self._project(f, r, size)
+                                 for f, r in chunk])
+                geoms = [None] * b
             b_pad = self.buckets.pad_batch(b)
             if group is not None and group.n_devices > 1:
                 # pad further to a group-width multiple so the batch
@@ -508,14 +628,15 @@ class JaxDetectorBackend:
             valid = jnp.arange(b_pad) < b
             boxes, scores, classes = self._batched_fn(idx, b_pad, group)(
                 self.params[idx], pis, valid)
-            launched.append((chunk, boxes, scores, classes))
+            launched.append((chunk, geoms, boxes, scores, classes))
 
         def resolve() -> list[list]:
             out: list[list] = []
-            for chunk, boxes, scores, classes in launched:
+            for chunk, geoms, boxes, scores, classes in launched:
                 for r, (_, region) in enumerate(chunk):
                     out.append(self._row_to_dets(
-                        boxes[r], scores[r], classes[r], region, size))
+                        boxes[r], scores[r], classes[r], region, size,
+                        geom=geoms[r]))
             return out
 
         return resolve

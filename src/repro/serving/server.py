@@ -57,8 +57,8 @@ import numpy as np
 
 from repro.core import allocation
 from repro.core.omnisense import OmniSenseLoop
-from repro.core.sphere import (nms_auto_backend, pad_detection_rows,
-                               sph_nms_batch)
+from repro.core.sphere import (IncrementalNms, nms_auto_backend,
+                               pad_detection_rows, sph_nms_batch)
 from repro.serving.batching import QueuedRequest, ShapeBuckets, VariantQueues
 from repro.serving.runtime import (DEGRADE, REJECT, DispatchEvent, GroupClock,
                                    SyncTickPolicy, TickTimeline, make_policy)
@@ -102,9 +102,15 @@ class ServeStats:
     # emission time on the event clock (the policy-sensitive E2E the
     # bench's policy_grid reports as p50/p95/p99)
     event_e2e: list = dataclasses.field(default_factory=list)
-    # request-ticks spent waiting in a queue past the tick that
-    # emitted them (async carry-over volume; 0 under sync/deadline)
+    # UNIQUE requests that waited in a queue past the tick that emitted
+    # them (async carry-over reach; 0 under sync/deadline).  A request
+    # counts once no matter how many ticks it waits — the old counter
+    # snapshotted the whole queue every tick, so one request carried k
+    # ticks counted k times.
     carried_requests: int = 0
+    # request-ticks spent waiting (the old per-tick queue-snapshot sum:
+    # carry-over VOLUME, still useful as a backlog-pressure integral)
+    carry_tick_slots: int = 0
     # open-loop traffic accounting (all zero under closed-loop run():
     # ticks admit everything and no SLO is configured)
     slo_s: float | None = None
@@ -296,7 +302,8 @@ class PodServer:
                  max_batch: int = 8, marginal_batch_cost: float | None = None,
                  buckets: ShapeBuckets | None = None,
                  frame_source: Callable[[int, int], np.ndarray] | None = None,
-                 placement=None, policy=None, telemetry=None):
+                 placement=None, policy=None, telemetry=None,
+                 incremental_nms: bool = True):
         assert len(loops) == len(backends)
         self.loops = loops
         self.backends = backends
@@ -374,6 +381,13 @@ class PodServer:
         # monotone dispatch id joining each telemetry launch/complete
         # record pair across the whole run
         self._dispatch_seq = 0
+        # cross-tick incremental NMS: rows whose detections are exactly
+        # last tick's reuse last tick's keep-mask instead of paying the
+        # (N, N) SphIoU block again (bit-identical by row independence;
+        # see repro.core.sphere.IncrementalNms).  Instantiated lazily at
+        # the first single-threshold suppression.
+        self.incremental_nms = incremental_nms
+        self._nms_inc: IncrementalNms | None = None
 
     def _emit_run_meta(self, mode: str) -> None:
         """One ``run_meta`` telemetry record per run entry point."""
@@ -601,7 +615,8 @@ class PodServer:
         self._emit_policy_decision(timeline, ops)
         self._execute(ops, timeline, self.policy.close_tick)
         self.stats.ticks += 1
-        self.stats.carried_requests += len(self.queues)
+        self.stats.carry_tick_slots += len(self.queues)
+        self.stats.carried_requests += self.queues.newly_carried()
 
         # ---- ingestion: frames whose last request resolved finish now ----
         self._ingest()
@@ -761,8 +776,18 @@ class PodServer:
                     total_rows=len(plans))
             else:
                 boxes, scores, mask = pad_detection_rows(row_dets)
-            keep = sph_nms_batch(boxes, scores, mask,
-                                 iou_threshold=thresholds.pop())
+            thr = thresholds.pop()
+            if self.incremental_nms:
+                # per-stream loop identity is the stable row key; the
+                # all-masked padding rows get a shared sentinel (their
+                # canonical form is empty, so they always reuse)
+                if self._nms_inc is None or self._nms_inc.iou_threshold != thr:
+                    self._nms_inc = IncrementalNms(thr)
+                keys = [id(loop) for loop, _ in rows]
+                keys += [("pad", r) for r in range(len(keys), len(boxes))]
+                keep = self._nms_inc.suppress(keys, boxes, scores, mask)
+            else:
+                keep = sph_nms_batch(boxes, scores, mask, iou_threshold=thr)
             for r, (_, res) in enumerate(rows):
                 keeps[id(res)] = keep[r, : len(res.detections)]
         elif rows:  # heterogeneous thresholds: per-stream single rows
@@ -1155,7 +1180,8 @@ class PodServer:
         self._execute(ops, timeline, self._open_close)
         if timeline.events:
             self.stats.ticks += 1
-        self.stats.carried_requests += len(self.queues)
+        self.stats.carry_tick_slots += len(self.queues)
+        self.stats.carried_requests += self.queues.newly_carried()
 
     def _open_close(self, clock: GroupClock, timeline: TickTimeline,
                     tick_lat=None, overlap_lat=None) -> tuple[float, float]:
