@@ -35,9 +35,16 @@ When the snapshots carry a ``fleet_grid`` section (PR 8,
 gated: on the same fixed device budget the best-routing fleet must
 match the monolithic pod's useful goodput at every grid point and
 STRICTLY beat it at >= 128 streams (deterministic, gated exactly),
-and (PR 9) no routing arm's p99 E2E may exceed the sweep's SLO
-envelope by more than the 5% per-pod-envelope band (see
-``fleet_p99_within_slo``).
+and (PR 9, tightened to exact in PR 10) no routing arm's p99 E2E may
+exceed the sweep's SLO envelope (see ``fleet_p99_within_slo``).
+
+When the snapshots carry a ``task_grid`` section (PR 10,
+``serving_bench.py --tasks mixed``), the multi-task no-collapse floor
+is gated: the mixed pod's per-task accuracy proxies must each stay
+within a floor fraction of the same task served alone at the same
+stream count, and both tasks must finish frames (deterministic, gated
+exactly) — the coupled allocator may trade capacity across the two
+ladders but must not starve either task (see ``mixed_no_collapse``).
 
 BENCH_NMS.json (PR 9) additionally carries the fused-tick grid and
 the bf16 SphIoU flip measurement; the schema REQUIRES both (the
@@ -93,6 +100,17 @@ SERVE_SCHEMAS: dict[str, tuple[frozenset, dict[str, frozenset]]] = {
                                                "p99_e2e_s"}),
                     "affinity": frozenset({"useful_goodput", "rejected",
                                            "routes", "p99_e2e_s"})}),
+    "task_grid": (frozenset({"streams", "mixed_detection_ratio",
+                             "mixed_action_ratio"}),
+                  {"detection": frozenset({"accuracy_proxy",
+                                           "accuracy_proxy_by_task",
+                                           "frames_by_task"}),
+                   "action": frozenset({"accuracy_proxy",
+                                        "accuracy_proxy_by_task",
+                                        "frames_by_task"}),
+                   "mixed": frozenset({"accuracy_proxy",
+                                       "accuracy_proxy_by_task",
+                                       "frames_by_task"})}),
 }
 
 NMS_ENTRY_KEYS = frozenset({"b", "n", "host_us", "batch_us", "speedup"})
@@ -387,21 +405,22 @@ def fleet_dominates(fresh: dict, strict_min_streams: int = 128,
     return ok
 
 
-def fleet_p99_within_slo(fresh: dict, band: float = 0.05,
+def fleet_p99_within_slo(fresh: dict, band: float = 0.0,
                          log=print) -> bool:
-    """Fleet-level p99-E2E gate: every routed arm near the envelope.
+    """Fleet-level p99-E2E gate: every routed arm inside the envelope.
 
     For every fresh ``fleet_grid`` entry each routing arm's
     ``p99_e2e_s`` must stay <= the sweep's ``slo_s`` (recorded in the
-    ``fleet`` meta section) plus a ``band`` allowance.  The band is
-    not measurement noise (the sweep is deterministic): each pod
-    currently admits against its OWN capacity envelope, so at >= 4
-    pods the thinner per-pod device slices overshoot the global SLO
-    by up to ~3.5% on the committed frontier (the fleet-global
-    ``solve_pod`` envelope is the open ROADMAP follow-on that
-    removes it).  Gating at SLO+5% pins today's overshoot so any
-    admission or router change that widens the tail fails loudly —
-    a regression the goodput dominance gate alone would not catch.
+    ``fleet`` meta section).  The gate is exact (``band`` 0): the
+    sweep is deterministic, and since PR 10 the deadline-aware
+    ``AsyncDrainPolicy`` carry plus the fleet-global ``solve_slo_s``
+    envelope (``FleetServer.run_open_loop`` tightens every pod's
+    capacity cap by the worst residual backlog each control round)
+    keep every routed arm's p99 under the SLO on the committed
+    frontier — the historical >= 4-pod ~3.5% overshoot, and the 5%
+    allowance band that pinned it, are gone.  Any admission, carry or
+    router change that pushes a tail past the SLO fails loudly — a
+    regression the goodput dominance gate alone would not catch.
     """
     entries = fresh.get("fleet_grid", [])
     if not entries:
@@ -427,6 +446,48 @@ def fleet_p99_within_slo(fresh: dict, band: float = 0.05,
             log(f"::error::fleet p99 E2E blows the SLO band at "
                 f"{e['streams']} streams / {e['pods']} pods: "
                 f"{worst:.4f}s > {ceiling:.4f}s ({slo}s + {band:.0%})")
+            ok = False
+    return ok
+
+
+def mixed_no_collapse(fresh: dict, floor: float = 0.5, log=print) -> bool:
+    """The multi-task acceptance floor (PR 10, strict, not a band).
+
+    Every fresh ``task_grid`` entry (``serving_bench.py --tasks
+    mixed``) compares the MIXED pod's per-task accuracy proxy against
+    the same task served alone at the same stream count on the same
+    device budget.  The coupled allocator prices both variant ladders
+    in one capacity envelope, so it may trade capacity across tasks —
+    but a mixed pod that starves one task to feed the other has
+    collapsed: each per-task ratio must stay >= ``floor``, and every
+    task must actually finish frames.  (The committed frontier sits at
+    0.91-1.0, so the 0.5 floor only trips on a real starvation
+    regression, not allocator drift.)  The sweep is deterministic
+    (oracle backends, virtual slots, calibrated latency models — no
+    wall clock), so exact gating does not flap.
+    """
+    entries = fresh.get("task_grid", [])
+    if not entries:
+        log("check_regression: no task_grid entries")
+        return False
+    ok = True
+    for e in entries:
+        frames = e["mixed"]["frames_by_task"]
+        served = all(frames.get(t, 0) > 0
+                     for t in ("detection", "action_recognition"))
+        good = (e["mixed_detection_ratio"] >= floor
+                and e["mixed_action_ratio"] >= floor and served)
+        log(f"  task streams={e['streams']:>3}  "
+            f"mixed/detection={e['mixed_detection_ratio']:.4f}  "
+            f"mixed/action={e['mixed_action_ratio']:.4f}  "
+            f"frames_by_task={frames}"
+            f"{'' if good else '  <-- TASK COLLAPSED'}")
+        if not good:
+            log(f"::error::mixed-task pod collapsed a task at "
+                f"{e['streams']} streams: detection ratio="
+                f"{e['mixed_detection_ratio']:.4f}, action ratio="
+                f"{e['mixed_action_ratio']:.4f} (floor {floor}), "
+                f"frames_by_task={frames}")
             ok = False
     return ok
 
@@ -583,6 +644,15 @@ def main(argv=None) -> int:
         ok = fleet_dominates(fresh) and ok
         # ...without ever letting a routed arm's p99 E2E blow the SLO
         ok = fleet_p99_within_slo(fresh) and ok
+    if baseline.get("task_grid") and not fresh.get("task_grid"):
+        # armed multi-task gate, missing fresh grid: the --tasks mixed
+        # bench step did not run (or its merge failed) — fail loudly
+        print("::error::baseline has task_grid but fresh snapshot "
+              "does not; did the --tasks mixed bench step run?")
+        ok = False
+    elif fresh.get("task_grid"):
+        # the mixed pod must keep both tasks alive under one envelope
+        ok = mixed_no_collapse(fresh) and ok
     return 0 if ok else 1
 
 

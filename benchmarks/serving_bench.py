@@ -61,6 +61,17 @@ best-routing fleet >= mono everywhere, strictly better at >= 128
 streams.  Results merge into ``BENCH_SERVE.json`` under
 ``fleet_grid``.
 
+``--tasks mixed`` (PR 10) measures the MULTI-TASK pod sweep
+(``repro.serving.tasks``): detection-only vs action-recognition-only
+vs the alternating mixed pod at 8-32 streams, all under the coupled
+allocator on one fixed device budget — ``solve_pod`` prices the two
+variant ladders (single-frame detection vs tubelet clips) jointly in
+one capacity envelope.  Deterministic, so the gate is exact: the
+mixed pod's per-task accuracy proxies must each stay within a floor
+fraction of the same task's single-task pod (no task collapses to
+feed the other).  Results merge into ``BENCH_SERVE.json`` under
+``task_grid``.
+
 Sweeps stream counts and emits one CSV line per config plus
 ``BENCH_SERVE.json`` so future snapshots track the trajectory (the
 nightly regression gate ``benchmarks/check_regression.py`` compares
@@ -102,7 +113,13 @@ POD_BUDGET_S = 1.8
 
 POLICY_GRID = (2, 4, 8, 16)     # streams for the drain-policy frontier
 POLICY_FRAMES = 12
-POLICY_DEVICES = 1              # one shared group: ordering + carry both bite
+# two per-variant replica groups: the async win shows both of its
+# mechanisms — residual carry where the DEADLINE-AWARE vote allows it
+# (low occupancy) and cross-group overlap where it does not (a single
+# shared group at pod scale has a backlog >= any sane budget, so the
+# deadline vote correctly refuses every carry there and async would
+# degenerate to the sync barrier)
+POLICY_DEVICES = 2
 POLICIES = ("sync", "deadline", "async")
 
 OPEN_GRID = (8, 16, 32)         # streams for the open-loop offered-load sweep
@@ -124,6 +141,12 @@ OPEN_SAT_HORIZON_S = 40.0
 OPEN_LIGHT_POD_FPS = 0.6
 OPEN_LIGHT_JITTER = 0.3
 OPEN_LIGHT_HORIZON_S = 160.0
+
+TASK_GRID = (8, 16, 32)         # streams for the multi-task pod sweep
+TASK_FRAMES = 10
+TASK_DEVICES = 8
+TASK_BUDGET_S = 2.4
+TASK_MODES = ("detection", "action", "mixed")
 
 FLEET_GRID = (64, 128, 256)     # streams for the fleet-tier sweep
 FLEET_PODS = (2, 4, 8)          # virtual pod counts vs the 1-pod monolith
@@ -474,19 +497,24 @@ def run_policy_grid(csv=print, grid=POLICY_GRID, json_path=SERVE_JSON_PATH,
     Per stream count and policy, records the event-clock mean tick and
     the per-frame E2E distribution (p50/p95/p99 of each frame's last
     dispatch completion minus its emission time).  Streams carry a
-    spread of latency budgets (the deadline policy's ordering signal)
-    and the ladder pairs the cheapest variant with the most expensive
+    spread of latency budgets (the deadline policy's ordering signal
+    AND the deadline-aware carry vote's due dates) and the ladder
+    pairs the cheapest variant with the most expensive
     (``_policy_variants``).  Fully deterministic — oracle backend,
     virtual device slots, calibrated latency model, no wall clock — so
     ``check_regression.py`` gates the async-vs-sync mean-tick ratio
     exactly: at >= 8 streams async drain must strictly undercut the
-    sync barrier.  Merges a ``policy_grid`` section into ``json_path``
-    without touching ``grid``/``pod_grid``.
+    sync barrier (via deadline-safe residual carry at low occupancy,
+    cross-group overlap at pod scale).  Merges a ``policy_grid``
+    section into ``json_path`` without touching ``grid``/``pod_grid``.
     """
     variants = _policy_variants()
 
-    def budget_fn(s):  # deterministic per-stream deadline spread
-        return 1.2 + 0.4 * (s % 3)
+    def budget_fn(s):  # deterministic per-stream deadline spread, loose
+        # enough that low-occupancy residual carries pass the
+        # deadline-aware vote (a tight spread would force every chunk
+        # to dispatch immediately — by design)
+        return 2.0 + 0.8 * (s % 3)
 
     entries = []
     for n_streams in grid:
@@ -745,6 +773,114 @@ def run_fleet_grid(csv=print, grid=FLEET_GRID, json_path=SERVE_JSON_PATH
     return out
 
 
+def _task_serve(n_streams: int, mode: str,
+                events_tag: str | None = None):
+    """One deterministic multi-task pod run: ``mode`` names the task
+    mix (``repro.serving.tasks.stream_tasks_for``), streams built
+    through the registry, served closed-loop under the coupled
+    pod-level allocator on ``TASK_DEVICES`` virtual slots."""
+    from repro.data.synthetic import make_video
+    from repro.serving import tasks as task_registry
+    from repro.serving.placement import VariantPlacement
+    from repro.serving.runtime import make_policy
+    from repro.serving.server import PodServer
+
+    stream_tasks = task_registry.stream_tasks_for(mode, n_streams)
+    videos = [make_video(n_frames=TASK_FRAMES + 8,
+                         n_objects=30 + 5 * (s % 4), seed=100 + s)
+              for s in range(n_streams)]
+    variants, loops, backends, cost_fn = task_registry.build_task_streams(
+        stream_tasks, videos, [TASK_BUDGET_S] * n_streams)
+    telemetry = _events_sink(events_tag) if events_tag else None
+    server = PodServer(
+        loops, backends, max_batch=8,
+        placement=VariantPlacement.virtual(variants, TASK_DEVICES,
+                                           cost_fn=cost_fn),
+        policy=make_policy("sync", pod_allocate=True), telemetry=telemetry)
+    stats = server.run(range(TASK_FRAMES))
+    if telemetry is not None:
+        telemetry.close()
+    return stats
+
+
+def _task_metrics(stats) -> dict:
+    return dict(
+        frames=stats.frames,
+        accuracy_proxy=round(stats.accuracy_proxy, 4),
+        frames_by_task=dict(sorted(stats.frames_by_task.items())),
+        accuracy_proxy_by_task={
+            t: round(p, 4)
+            for t, p in stats.accuracy_proxy_by_task.items()},
+        tick_s=round(stats.sum_tick_inf_s / max(stats.ticks, 1), 4),
+        dispatches=stats.dispatches,
+        rounds_per_tick=round(stats.pod_rounds / max(stats.pod_ticks, 1), 2),
+        converged_ticks=f"{stats.pod_converged_ticks}/{stats.pod_ticks}",
+    )
+
+
+def run_task_grid(csv=print, grid=TASK_GRID,
+                  json_path=SERVE_JSON_PATH) -> dict:
+    """The multi-task pod sweep (``--tasks mixed``): detection-only vs
+    action-only vs the alternating MIXED pod at every stream count, all
+    on the same ``TASK_DEVICES``-slot budget under the coupled
+    allocator (``solve_pod`` pricing both variant ladders jointly in
+    one capacity envelope).
+
+    The gated property is NO COLLAPSE: the mixed pod's per-task
+    accuracy proxy must stay within a floor fraction of the same
+    task's single-task pod at the same stream count — the joint
+    allocator may trade capacity across the heterogeneous ladders but
+    must not starve either task to feed the other.  Fully
+    deterministic (oracle backends, virtual slots, calibrated latency
+    models — no wall clock), so ``check_regression.py`` gates exactly.
+    Merges a ``task_grid`` section into ``json_path`` without touching
+    the other sections.
+    """
+    from repro.serving import tasks as task_registry
+
+    entries = []
+    for n_streams in grid:
+        runs = {mode: _task_serve(n_streams, mode,
+                                  events_tag=f"task_s{n_streams}_{mode}")
+                for mode in TASK_MODES}
+        entry = dict(streams=n_streams, frames=TASK_FRAMES,
+                     **{mode: _task_metrics(runs[mode])
+                        for mode in TASK_MODES})
+        mixed = entry["mixed"]["accuracy_proxy_by_task"]
+        entry["mixed_detection_ratio"] = round(
+            mixed.get("detection", 0.0)
+            / max(entry["detection"]["accuracy_proxy"], 1e-9), 4)
+        entry["mixed_action_ratio"] = round(
+            mixed.get("action_recognition", 0.0)
+            / max(entry["action"]["accuracy_proxy"], 1e-9), 4)
+        entries.append(entry)
+        csv(f"serving,task_s{n_streams}_mixed,mixed_detection_ratio,"
+            f"{entry['mixed_detection_ratio']},"
+            f"action_ratio={entry['mixed_action_ratio']} "
+            f"det_only={entry['detection']['accuracy_proxy']} "
+            f"act_only={entry['action']['accuracy_proxy']} "
+            f"mixed={mixed}")
+    out = {}
+    if json_path and os.path.exists(json_path):
+        with open(json_path) as f:
+            out = json.load(f)
+    out["tasks"] = {
+        "modes": list(TASK_MODES),
+        "detection_variants": [
+            v.name for v in task_registry.get_task("detection").make_ladder()],
+        "action_variants": [
+            v.name for v in
+            task_registry.get_task("action_recognition").make_ladder()],
+        "devices": TASK_DEVICES, "budget_s": TASK_BUDGET_S,
+        "frames": TASK_FRAMES, "policy": "sync", "pod_allocate": True}
+    out["task_grid"] = entries
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        csv(f"serving,task_json,path,0,{json_path}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--devices", type=int, default=0,
@@ -780,6 +916,14 @@ def main() -> None:
                          "goodput/shedding/routing into a fleet_grid "
                          "section (virtual device slots — no jax devices "
                          "needed)")
+    ap.add_argument("--tasks", choices=("mixed",), default=None,
+                    help="measure the multi-task pod sweep instead: "
+                         "detection-only vs action-only vs the mixed "
+                         "pod (repro.serving.tasks registry) under the "
+                         "coupled allocator on one device budget, "
+                         "recording per-task accuracy proxies into a "
+                         "task_grid section (virtual device slots — no "
+                         "jax devices needed)")
     ap.add_argument("--json", default=SERVE_JSON_PATH)
     ap.add_argument("--events-dir", default=None, metavar="DIR",
                     help="also write one JSONL telemetry event log per "
@@ -790,6 +934,9 @@ def main() -> None:
     if args.events_dir:
         global EVENTS_DIR
         EVENTS_DIR = args.events_dir
+    if args.tasks:
+        run_task_grid(json_path=args.json)
+        return
     if args.fleet:
         run_fleet_grid(json_path=args.json)
         return

@@ -79,6 +79,11 @@ def _add_record(sub) -> None:
     ap.add_argument("--routing", choices=("least-loaded", "affinity"),
                     default="least-loaded",
                     help="fleet stream-routing policy (with --pods)")
+    ap.add_argument("--tasks", choices=("detection", "action", "mixed"),
+                    default="detection",
+                    help="analytics task mix for the corpus "
+                         "(repro.serving.tasks registry; mixed "
+                         "alternates detection / action recognition)")
 
 
 def _cmd_record(args) -> int:
@@ -86,13 +91,19 @@ def _cmd_record(args) -> int:
         print("--pods requires --open-loop (the fleet tier serves "
               "arrival-clocked traffic)", file=sys.stderr)
         return 2
+    tasks = ()
+    if args.tasks != "detection":
+        from repro.serving.tasks import stream_tasks_for
+
+        tasks = tuple(stream_tasks_for(args.tasks, args.streams))
     spec = CorpusSpec(
         mode="open" if args.open_loop else "closed",
         n_streams=args.streams, frames=args.frames, budget_s=args.budget,
         devices=args.devices, max_batch=args.max_batch, policy=args.policy,
         pod_allocate=args.pod_allocate, admission=args.admission,
         slo_s=args.slo, fps=args.fps, jitter=args.jitter,
-        horizon_s=args.horizon, pods=args.pods, routing=args.routing)
+        horizon_s=args.horizon, pods=args.pods, routing=args.routing,
+        tasks=tasks)
     stats = record(spec, JsonlSink(args.out))
     fleet = f", {spec.pods} pods ({spec.routing} routing)" if spec.pods \
         else ""

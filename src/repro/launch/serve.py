@@ -132,6 +132,14 @@ def main() -> None:
                          "sticky least-loaded balance, or consistent "
                          "hashing on content affinity so co-variant "
                          "streams batch together")
+    ap.add_argument("--tasks", choices=("detection", "action", "mixed"),
+                    default="detection",
+                    help="analytics task mix (repro.serving.tasks "
+                         "registry): homogeneous detection (default, "
+                         "honours --bandwidth-mbps), homogeneous "
+                         "action recognition, or an alternating mixed "
+                         "pod whose two variant ladders share one "
+                         "capacity envelope")
     args = ap.parse_args()
     if args.pods and not args.open_loop:
         ap.error("--pods requires --open-loop (the fleet tier serves "
@@ -141,27 +149,39 @@ def main() -> None:
                          admission=args.admission if args.open_loop
                          else None)
 
-    variants = profiles.make_ladder()
-    lat = OmniSenseLatencyModel(profiles.paper_profile(),
-                                NetworkModel(args.bandwidth_mbps))
-    costs = [lat._pre(v) + lat._inf(v) for v in variants]
+    if args.tasks == "detection":
+        variants = profiles.make_ladder()
+        lat = OmniSenseLatencyModel(profiles.paper_profile(),
+                                    NetworkModel(args.bandwidth_mbps))
+        costs = [lat._pre(v) + lat._inf(v) for v in variants]
+        cost_fn = lat._inf
+        loops, backends = [], []
+        for s in range(args.streams):
+            video = make_video(n_frames=args.frames + 8,
+                               n_objects=30 + 5 * (s % 4), seed=100 + s)
+            backend = OracleBackend(video)
+            backends.append(backend)
+            loops.append(OmniSenseLoop(variants, lat, backend,
+                                       budget_s=args.budget,
+                                       explore_costs=costs))
+    else:
+        from repro.serving import tasks as task_registry
 
-    loops, backends = [], []
-    for s in range(args.streams):
-        video = make_video(n_frames=args.frames + 8,
-                           n_objects=30 + 5 * (s % 4), seed=100 + s)
-        backend = OracleBackend(video)
-        backends.append(backend)
-        loops.append(OmniSenseLoop(variants, lat, backend,
-                                   budget_s=args.budget,
-                                   explore_costs=costs))
+        stream_tasks = task_registry.stream_tasks_for(args.tasks,
+                                                      args.streams)
+        videos = [make_video(n_frames=args.frames + 8,
+                             n_objects=30 + 5 * (s % 4), seed=100 + s)
+                  for s in range(args.streams)]
+        variants, loops, backends, cost_fn = \
+            task_registry.build_task_streams(
+                stream_tasks, videos, [args.budget] * args.streams)
 
     placement = None
     if args.devices > 0:
         from repro.serving.placement import VariantPlacement
 
         placement = VariantPlacement.virtual(variants, args.devices,
-                                             cost_fn=lat._inf)
+                                             cost_fn=cost_fn)
 
     telemetry = None
     if args.events:
@@ -183,7 +203,7 @@ def main() -> None:
                 from repro.serving.placement import VariantPlacement
 
                 pod_placement = VariantPlacement.virtual(
-                    variants, per_pod, cost_fn=lat._inf)
+                    variants, per_pod, cost_fn=cost_fn)
             pol = make_policy(args.policy or "sync",
                               pod_allocate=args.pod_allocate,
                               admission=args.admission)
@@ -229,6 +249,12 @@ def main() -> None:
         from repro.serving.server import format_pod_allocation_report
 
         print(format_pod_allocation_report(stats))
+    if len(server.tasks) > 1:
+        per = ", ".join(
+            f"{t}: {stats.frames_by_task.get(t, 0)} frames, "
+            f"proxy {p:.3f}"
+            for t, p in stats.accuracy_proxy_by_task.items())
+        print(f"per-task ({'+'.join(server.tasks)} pod): {per}")
     print(f"control-plane overhead: "
           f"{1e3 * stats.sum_overhead / stats.frames:.2f} ms/frame")
     if stats.batch_sizes:

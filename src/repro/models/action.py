@@ -1,0 +1,126 @@
+"""Temporal action-recognition head over per-frame patch embeddings.
+
+The second analytics workload (``repro.serving.tasks``): a tubelet of
+``clip_len`` consecutive SRoI crops is embedded frame-by-frame with the
+ViT patch stem from ``repro.models.vision`` (patch conv + spatial mean
+pool), then a small temporal transformer — ``vision._mha_full`` over
+the ``clip_len`` frame embeddings — classifies the action.  The model
+is deliberately tiny: the serving claim is about scheduling a second
+cost curve, not about action-recognition accuracy.
+
+API (mirrors the vision families):
+    init_params(rng, cfg) -> params
+    apply(params, clips, cfg) -> (B, n_actions) logits
+``clips`` is ``(B, T, S, S, 3)`` with ``T == cfg.clip_len``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.vision import _mha_full
+
+Array = jax.Array
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ActionConfig:
+    name: str
+    input_size: int
+    clip_len: int
+    patch: int = 16
+    d_model: int = 64
+    n_layers: int = 1
+    n_heads: int = 2
+    d_ff: int = 128
+    n_actions: int = 16
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+
+    @property
+    def policy(self) -> L.DtypePolicy:
+        return L.DtypePolicy(self.param_dtype, self.compute_dtype)
+
+    @property
+    def n_patches(self) -> int:
+        return (self.input_size // self.patch) ** 2
+
+    @property
+    def n_params(self) -> int:
+        d, f = self.d_model, self.d_ff
+        per = 4 * d * d + 2 * d * f + 4 * d
+        stem = self.patch * self.patch * 3 * d
+        return self.n_layers * per + stem + self.clip_len * d \
+            + d * self.n_actions
+
+    @property
+    def flops_per_clip(self) -> float:
+        """Rough forward FLOPs for one tubelet (profile costing)."""
+        d, f, t = self.d_model, self.d_ff, self.clip_len
+        stem = 2.0 * t * self.n_patches * self.patch ** 2 * 3 * d
+        attn = self.n_layers * (2.0 * t * 4 * d * d + 4.0 * t * t * d)
+        mlp = self.n_layers * 4.0 * t * d * f
+        return stem + attn + mlp + 2.0 * d * self.n_actions
+
+
+def init_params(rng, cfg: ActionConfig) -> Params:
+    dt = cfg.param_dtype
+    rngs = jax.random.split(rng, 8)
+    d, lyr = cfg.d_model, cfg.n_layers
+
+    def stacked(key, shape, scale):
+        return (jax.random.uniform(key, (lyr,) + shape, jnp.float32,
+                                   -scale, scale).astype(dt))
+
+    s = (1.0 / d) ** 0.5
+    sf = (1.0 / cfg.d_ff) ** 0.5
+    return {
+        "patch": L.init_conv(rngs[0], cfg.patch, cfg.patch, 3, d, dtype=dt),
+        "tpos": jax.random.normal(rngs[1], (1, cfg.clip_len, d),
+                                  jnp.float32).astype(dt) * 0.02,
+        "layers": {
+            "ln1": {"scale": jnp.ones((lyr, d), dt),
+                    "bias": jnp.zeros((lyr, d), dt)},
+            "wqkv": stacked(rngs[2], (d, 3 * d), s),
+            "wo": stacked(rngs[3], (d, d), s),
+            "ln2": {"scale": jnp.ones((lyr, d), dt),
+                    "bias": jnp.zeros((lyr, d), dt)},
+            "w1": stacked(rngs[4], (d, cfg.d_ff), s),
+            "b1": jnp.zeros((lyr, cfg.d_ff), dt),
+            "w2": stacked(rngs[5], (cfg.d_ff, d), sf),
+            "b2": jnp.zeros((lyr, d), dt),
+        },
+        "ln_f": L.init_layernorm(d, dt),
+        "head": L.init_dense(rngs[6], d, cfg.n_actions, dtype=dt),
+    }
+
+
+def apply(params: Params, clips: Array, cfg: ActionConfig) -> Array:
+    """Classify tubelets: ``(B, T, S, S, 3)`` -> ``(B, n_actions)``."""
+    pol = cfg.policy
+    b, t, s, _, _ = clips.shape
+    x = L.conv2d(params["patch"], clips.reshape(b * t, s, s, 3),
+                 stride=cfg.patch, padding="VALID", policy=pol)
+    # spatial mean pool -> one embedding per frame of the clip
+    x = x.mean(axis=(1, 2)).reshape(b, t, cfg.d_model)
+    x = x + params["tpos"].astype(pol.compute_dtype)
+
+    def body(x, lp):
+        h1 = L.layernorm({"scale": lp["ln1"]["scale"],
+                          "bias": lp["ln1"]["bias"]}, x)
+        x = x + _mha_full(h1, lp["wqkv"], lp["wo"], cfg.n_heads, pol)
+        h2 = L.layernorm({"scale": lp["ln2"]["scale"],
+                          "bias": lp["ln2"]["bias"]}, x)
+        y = L.gelu(L.dense({"w": lp["w1"], "b": lp["b1"]}, h2, pol))
+        x = x + L.dense({"w": lp["w2"], "b": lp["b2"]}, y, pol)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.layernorm(params["ln_f"], x)
+    return L.dense(params["head"], x.mean(axis=1), pol).astype(jnp.float32)

@@ -128,6 +128,11 @@ class QueuedRequest:
     launch before it); ``age`` counts whole ticks the request has
     waited in the queue (bumped by every drain that leaves it behind —
     the async carry-over staleness bound).
+
+    ``task`` names the owning analytics task (``repro.serving.tasks``).
+    Queues still key on the variant NAME — task ladders own disjoint
+    name spaces, so (task, variant) and the name are the same key —
+    but the tag rides along for per-task accounting and telemetry.
     """
 
     request: Any                  # repro.core.omnisense.InferenceRequest
@@ -137,6 +142,7 @@ class QueuedRequest:
     deadline: float | None = None
     emitted_s: float = 0.0
     age: int = 0
+    task: str = "detection"
     # the stream frame index the request was emitted for.  Simulation
     # backends (``set_frame``) sample ground truth by CURRENT frame, so
     # a request carried across ticks must be replayed at its emission

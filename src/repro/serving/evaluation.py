@@ -80,6 +80,39 @@ def sph_ap(preds: list[tuple[int, Detection]],
     return float(np.sum((mrec[idx + 1] - mrec[idx]) * mpre[idx + 1]))
 
 
+def action_top1(preds: list[tuple[int, Detection]],
+                gts: list[tuple[int, Detection]],
+                iou_threshold: float = 0.5) -> float:
+    """Top-1 action accuracy over localised ground-truth instances.
+
+    The action task's offline proxy (``repro.serving.tasks``): items
+    are (frame_idx, detection) with ``category`` = action class.  A
+    ground-truth instance counts as correct when some same-frame
+    prediction overlaps it at ``iou_threshold`` SphIoU AND carries its
+    action label — classification accuracy conditioned on
+    localisation, the top-1 analogue of detection's Sph-mAP matching.
+    """
+    if not gts:
+        return float("nan")
+    preds_by_frame: dict[int, list[Detection]] = collections.defaultdict(list)
+    for f, d in preds:
+        preds_by_frame[f].append(d)
+    correct = 0
+    for f, gt in gts:
+        cands = preds_by_frame.get(f)
+        if not cands:
+            continue
+        ious = sph_iou_matrix_np(
+            np.stack([c.box for c in cands]), gt.box[None])[:, 0]
+        order = np.argsort([-c.score for c in cands], kind="stable")
+        for i in order:
+            if ious[i] >= iou_threshold:
+                if cands[i].category == gt.category:
+                    correct += 1
+                break  # top-1: only the best-scored overlap counts
+    return correct / len(gts)
+
+
 def sph_map(predictions: list[tuple[int, Detection]],
             ground_truth: list[tuple[int, Detection]],
             iou_threshold: float = 0.5) -> float:

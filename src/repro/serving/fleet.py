@@ -612,6 +612,20 @@ class FleetServer:
                 i += 1
             if self.elastic is not None:
                 self.elastic.control(self, t)
+            if slo_s is not None:
+                # fleet-global SLO envelope: each pod's fixed point
+                # prices this round against the FLEET's residual budget
+                # — the SLO minus the worst busy horizon any active pod
+                # has already committed past now — instead of a private
+                # per-pod envelope.  Pods co-scheduled behind one
+                # router share the tail; admitting against the full
+                # SLO while a sibling's backlog has spent part of it is
+                # exactly the ≥4-pod p99 overshoot this closes.
+                worst = max((max(0.0, self.pods[pid].clock.horizon() - t)
+                             for pid in self.active), default=0.0)
+                env = max(0.0, slo_s - worst)
+                for pid in self.active:
+                    self.pods[pid].solve_slo_s = env
             per_pod: dict[int, list] = {}
             for a in batch:
                 per_pod.setdefault(self._route(a), []).append(a)

@@ -97,29 +97,48 @@ class StreamProblem:
     Mirrors ``OmniSenseLoop.FrameContext``: (1 + M, R) matrices with
     the zero-cost skip row 0, or ``None`` matrices when the frame
     predicted no SRoIs (the stream then plans nothing).
+
+    ``variants``/``latency_model`` override the pod-level defaults for
+    MIXED-TASK pods (``repro.serving.tasks``): the stream's matrices
+    are shaped by ITS task's ladder and priced on ITS task's latency
+    curve, while the solver still couples every stream under one
+    capacity envelope over the union ladder.  ``None`` (the default)
+    means "the shared pod ladder" — the single-task path, bit-identical
+    to the pre-task-registry solver.
     """
 
     acc: np.ndarray | None
     d_pre: np.ndarray | None
     d_inf: np.ndarray | None
     budget: float
+    variants: tuple | None = None
+    latency_model: object | None = None
 
 
 @dataclasses.dataclass(frozen=True)
 class VariantPrice:
     """Coupled repricing terms of one variant for one stream.
 
-    ``coupled_d_inf = (d_inf * factor + extra) * mult`` — identity
-    (1.0, 0.0, 1.0) exactly when the stream has no co-streams and the
-    group is idle, which is what pins the degenerate cases.
+    ``coupled_d_inf = (d_inf * factor + extra) * mult`` and
+    ``coupled_d_pre = d_pre * pre_factor`` — identity
+    (1.0, 0.0, 1.0, 1.0) exactly when the stream has no co-streams and
+    the group is idle, which is what pins the degenerate cases.
     """
 
     factor: float  # batching amortization (<= 1: Q(n) <= n * Q(1))
     extra: float   # co-stream queue wait of the variant's group, seconds
     mult: float    # observed-utilisation congestion inflation (>= 1)
+    # mobile-side d_pre amortization: projection/encode also batch when
+    # co-streams share the variant (``pre_amortization``'s shallower
+    # curve); == 1.0 EXACTLY at b=1, the identity pin that keeps
+    # uncoupled d_pre pricing byte-identical
+    pre_factor: float = 1.0
 
     def apply(self, d_inf: float) -> float:
         return (d_inf * self.factor + self.extra) * self.mult
+
+    def apply_pre(self, d_pre: float) -> float:
+        return d_pre * self.pre_factor
 
 
 @dataclasses.dataclass
@@ -148,12 +167,41 @@ def _plan_counts(plan, variants) -> dict[str, int]:
     return out
 
 
-def _total_counts(plans, variants) -> dict[str, int]:
+def _total_counts(plans, variants, problems=None) -> dict[str, int]:
+    """Joint per-variant counts.  ``variants`` is the (union) key
+    space; with ``problems``, each plan's model indices resolve through
+    its stream's OWN ladder (mixed-task pods)."""
     out = {v.name: 0 for v in variants}
-    for plan in plans:
-        for name, c in _plan_counts(plan, variants).items():
-            out[name] += c
+    for s, plan in enumerate(plans):
+        svars = variants
+        if problems is not None and problems[s].variants is not None:
+            svars = problems[s].variants
+        for name, c in _plan_counts(plan, svars).items():
+            out[name] = out.get(name, 0) + c
     return out
+
+
+def _union_ladder(problems, variants, latency_model):
+    """The pod's union ladder: the shared base ladder first (in its
+    given order — the float-sum order every single-task projection
+    already uses), then per-stream override extras in first-seen
+    order.  Returns ``(union, lat_by_name)``; base variants price on
+    the base latency model, extras on their stream's override.
+    """
+    union = list(variants)
+    seen = {v.name for v in variants}
+    lat_by = {v.name: latency_model for v in variants}
+    for p in problems:
+        if p.variants is None:
+            continue
+        lat = p.latency_model if p.latency_model is not None \
+            else latency_model
+        for v in p.variants:
+            if v.name not in seen:
+                seen.add(v.name)
+                union.append(v)
+                lat_by[v.name] = lat
+    return union, lat_by
 
 
 def _group_of(placement, name):
@@ -166,27 +214,32 @@ def _group_of(placement, name):
 
 
 def projected_group_load(counts: dict, variants: Sequence, latency_model,
-                         buckets: ShapeBuckets,
-                         placement=None) -> dict[int, float]:
+                         buckets: ShapeBuckets, placement=None,
+                         latency_models: dict | None = None
+                         ) -> dict[int, float]:
     """Per replica group, the chunked drain seconds of serving
     ``counts`` requests/variant (``variant_queue_cost`` — the same
     curve ``tick_schedule_delay`` prices).  The shared load projection:
     :func:`projected_tick` takes its max for the capacity envelope, and
     the serving runtime's drain policies consume it for carry-over
     decisions (``solve_pod`` exports it per tick so neither recomputes
-    the other's numbers).
+    the other's numbers).  ``latency_models`` optionally maps variant
+    name -> that variant's task latency model (mixed-task pods); absent
+    entries fall back to ``latency_model``.
     """
+    lat_by = latency_models or {}
     group_load: dict[int, float] = {}
     for v in variants:
         gidx, n_dev = _group_of(placement, v.name)
         group_load[gidx] = group_load.get(gidx, 0.0) + \
-            latency_model.variant_queue_cost(
+            lat_by.get(v.name, latency_model).variant_queue_cost(
                 v, counts.get(v.name, 0), buckets, n_dev)
     return group_load
 
 
 def projected_tick(counts: dict, variants: Sequence, latency_model,
-                   buckets: ShapeBuckets, placement=None) -> float:
+                   buckets: ShapeBuckets, placement=None,
+                   latency_models: dict | None = None) -> float:
     """Device-aware tick cost of serving ``counts`` requests/variant.
 
     Max over replica groups of :func:`projected_group_load` — the
@@ -196,7 +249,8 @@ def projected_tick(counts: dict, variants: Sequence, latency_model,
     on the curve.
     """
     return max(projected_group_load(counts, variants, latency_model,
-                                    buckets, placement).values(),
+                                    buckets, placement,
+                                    latency_models).values(),
                default=0.0)
 
 
@@ -209,6 +263,8 @@ def stream_prices(
     group_utilisation: dict | None = None,
     queue_weight: float = DEFAULT_QUEUE_WEIGHT,
     util_weight: float = DEFAULT_UTIL_WEIGHT,
+    all_variants: Sequence | None = None,
+    latency_models: dict | None = None,
 ) -> dict[str, VariantPrice]:
     """One stream's coupled repricing terms, per variant.
 
@@ -229,30 +285,42 @@ def stream_prices(
         toward idle groups.
 
     A stream with no co-streams and an idle group gets the exact
-    identity (1.0, 0.0, 1.0): coupling can never perturb a lone
+    identity (1.0, 0.0, 1.0, 1.0): coupling can never perturb a lone
     stream's plan.
+
+    ``all_variants`` widens the queue-depth accumulation past the
+    stream's OWN ladder (``variants``, the output keys) to the pod's
+    union ladder, so a mixed-task stream pays for the OTHER task's
+    load serialising in its replica groups; ``latency_models`` maps
+    union variant names to their task's latency model.  Both default
+    to the single-task identity.
     """
+    lat_by = latency_models or {}
+    pool = variants if all_variants is None else all_variants
     co = {v.name: max(0, int(round(co_counts.get(v.name, 0))))
-          for v in variants}
+          for v in pool}
     # co-stream queue depth per group, in device-busy seconds
     group_load: dict[int, float] = {}
     cost: dict[str, float] = {}
-    for v in variants:
+    for v in pool:
         gidx, n_dev = _group_of(placement, v.name)
-        cost[v.name] = latency_model.variant_queue_cost(
+        cost[v.name] = lat_by.get(v.name, latency_model).variant_queue_cost(
             v, co[v.name], buckets, n_dev)
         group_load[gidx] = group_load.get(gidx, 0.0) + cost[v.name]
     out: dict[str, VariantPrice] = {}
     for v in variants:
         gidx, n_dev = _group_of(placement, v.name)
-        factor = latency_model.pod_amortization(
-            v, 1 + co[v.name], buckets, n_dev)
+        lm = lat_by.get(v.name, latency_model)
+        factor = lm.pod_amortization(v, 1 + co[v.name], buckets, n_dev)
+        pre_fn = getattr(lm, "pre_amortization", None)
         wait = group_load[gidx] - cost[v.name]  # other variants' queue
         util = (group_utilisation or {}).get(gidx, 0.0)
         out[v.name] = VariantPrice(
             factor=factor,
             extra=queue_weight * wait,
             mult=1.0 + util_weight * util,
+            pre_factor=(pre_fn(v, 1 + co[v.name])
+                        if pre_fn is not None else 1.0),
         )
     return out
 
@@ -267,7 +335,7 @@ def price_hook(prices: dict[str, VariantPrice],
         del j
         if i == 0:
             return d_pre, d_inf
-        return d_pre, by_row[i].apply(d_inf)
+        return by_row[i].apply_pre(d_pre), by_row[i].apply(d_inf)
 
     return hook
 
@@ -299,24 +367,27 @@ def best_response(
     convergent :func:`solve_pod` run a checkable fixed point.
     """
     plans = list(plans)
-    counts = _total_counts(plans, variants)
+    union, lat_by = _union_ladder(problems, variants, latency_model)
+    counts = _total_counts(plans, union, problems)
     changed = False
     switches = 0
     for s, prob in enumerate(problems):
         old = plans[s]
         if prob.acc is None or prob.acc.shape[1] == 0:
             continue
-        own = _plan_counts(old, variants)
-        co = {name: counts[name] - own[name] for name in own}
+        svars = prob.variants if prob.variants is not None else variants
+        own = _plan_counts(old, svars)
+        co = {name: c - own.get(name, 0) for name, c in counts.items()}
         prices = stream_prices(
-            variants, co, latency_model, buckets, placement,
-            group_utilisation, queue_weight, util_weight)
+            svars, co, latency_model, buckets, placement,
+            group_utilisation, queue_weight, util_weight,
+            all_variants=union, latency_models=lat_by)
         # the materialised hook matrices serve both the knapsack and
         # the incumbent re-pricing below (allocate(d_pre_c, d_inf_c)
         # == allocate(cost_hook=hook) bit-for-bit, without running the
         # hook loop twice)
         d_pre_c, d_inf_c = allocation.apply_cost_hook(
-            price_hook(prices, variants), prob.d_pre, prob.d_inf)
+            price_hook(prices, svars), prob.d_pre, prob.d_inf)
         cand = allocation.allocate(prob.acc, d_pre_c, d_inf_c, prob.budget)
         keep = cand is None
         forced = False  # incumbent priced out of its budget
@@ -331,11 +402,11 @@ def best_response(
         cand_counts = None
         if not keep and (old is None or cand.models != old.models):
             cand_counts = dict(counts)
-            for name, c in _plan_counts(cand, variants).items():
+            for name, c in _plan_counts(cand, svars).items():
                 cand_counts[name] += c - own[name]
             if tick_cap is not None and projected_tick(
-                    cand_counts, variants, latency_model, buckets,
-                    placement) > tick_cap + _TOL:
+                    cand_counts, union, latency_model, buckets,
+                    placement, latency_models=lat_by) > tick_cap + _TOL:
                 # capacity envelope: the upgrade must fit inside the
                 # device time the incumbent schedule was already paying
                 # for.  A FORCED switch that busts the envelope still
@@ -398,17 +469,18 @@ def solve_pod(
     ``projected_tick`` always reports the returned plans' projection.
     """
     buckets = buckets or ShapeBuckets()
+    union, lat_by = _union_ladder(problems, variants, latency_model)
     plans = [
         allocation.allocate(p.acc, p.d_pre, p.d_inf, p.budget)
         if p.acc is not None and p.acc.shape[1] > 0 else None
         for p in problems]
-    counts = _total_counts(plans, variants)
-    cap_load = projected_group_load(counts, variants, latency_model, buckets,
-                                    placement)
+    counts = _total_counts(plans, union, problems)
+    cap_load = projected_group_load(counts, union, latency_model, buckets,
+                                    placement, lat_by)
     uncoupled_tick = max(cap_load.values(), default=0.0)
     tick_cap = uncoupled_tick if slo_s is None \
         else min(uncoupled_tick, slo_s)
-    if len(problems) <= 1 or len(variants) <= 1:
+    if len(problems) <= 1 or len(union) <= 1:
         # one stream has no co-streams to share a batch with; one
         # variant has no cross-variant choice to arbitrate — both keep
         # the calibrated per-stream plans byte-identical.
@@ -428,9 +500,9 @@ def solve_pod(
         if not changed:
             converged = True
             break
-    counts = _total_counts(plans, variants)
-    load = projected_group_load(counts, variants, latency_model, buckets,
-                                placement)
+    counts = _total_counts(plans, union, problems)
+    load = projected_group_load(counts, union, latency_model, buckets,
+                                placement, lat_by)
     return PodSolution(
         plans, rounds=rounds, converged=converged, counts=counts,
         coupled=True, tick_cap=tick_cap,
@@ -464,18 +536,20 @@ def solve_pod_bruteforce(
     import itertools
 
     buckets = buckets or ShapeBuckets()
+    union, lat_by = _union_ladder(problems, variants, latency_model)
     spaces = []
     for p in problems:
         r = p.acc.shape[1] if p.acc is not None else 0
+        svars = p.variants if p.variants is not None else variants
         spaces.append(list(itertools.product(
-            range(1 + len(variants)), repeat=r)))
+            range(1 + len(svars)), repeat=r)))
     best_plans, best_value = None, -1.0
     for combo in itertools.product(*spaces):
         pseudo = [allocation.Plan(0.0, 0.0, 0.0, models) for models in combo]
-        counts = _total_counts(pseudo, variants)
+        counts = _total_counts(pseudo, union, problems)
         if tick_cap is not None and projected_tick(
-                counts, variants, latency_model, buckets,
-                placement) > tick_cap + _TOL:
+                counts, union, latency_model, buckets,
+                placement, latency_models=lat_by) > tick_cap + _TOL:
             continue
         plans = []
         total = 0.0
@@ -484,13 +558,15 @@ def solve_pod_bruteforce(
             if not models:
                 plans.append(None)
                 continue
-            own = _plan_counts(pseudo[s], variants)
-            co = {name: counts[name] - own[name] for name in own}
+            svars = prob.variants if prob.variants is not None else variants
+            own = _plan_counts(pseudo[s], svars)
+            co = {name: c - own.get(name, 0) for name, c in counts.items()}
             prices = stream_prices(
-                variants, co, latency_model, buckets, placement,
-                group_utilisation, queue_weight, util_weight)
+                svars, co, latency_model, buckets, placement,
+                group_utilisation, queue_weight, util_weight,
+                all_variants=union, latency_models=lat_by)
             d_pre_c, d_inf_c = allocation.apply_cost_hook(
-                price_hook(prices, variants), prob.d_pre, prob.d_inf)
+                price_hook(prices, svars), prob.d_pre, prob.d_inf)
             lat = allocation.plan_latency(models, d_pre_c, d_inf_c)
             if lat > prob.budget + _TOL:
                 feasible = False

@@ -54,6 +54,12 @@ class CorpusSpec:
     frames: int = 8                 # closed: tick count; open: video floor
     budget_s: float | list = 1.8    # scalar or one per stream
     variants: tuple = ("yolo-p5-896", "yolo-p6-1280")
+    # per-stream analytics tasks (repro.serving.tasks registry names,
+    # one per stream); () keeps every stream on detection — the
+    # backward-compatible reading of pre-multi-task logs.  ``variants``
+    # only subsets the DETECTION ladder; non-detection streams serve
+    # their task's full registered ladder.
+    tasks: tuple = ()
     devices: int = 8                # virtual slots; 0 = single-device pod
     max_batch: int = 8
     policy: str = "sync"
@@ -79,6 +85,7 @@ class CorpusSpec:
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["variants"] = list(d["variants"])
+        d["tasks"] = list(d["tasks"])
         d["churn"] = [list(c) for c in d["churn"]]
         d["rate_trace"] = [list(r) for r in d["rate_trace"]]
         return d
@@ -91,7 +98,7 @@ class CorpusSpec:
             raise ValueError(f"corpus_spec has unknown fields "
                              f"{sorted(unknown)}")
         d = dict(d)
-        for key in ("variants", "churn", "rate_trace"):
+        for key in ("variants", "tasks", "churn", "rate_trace"):
             if key in d:
                 d[key] = tuple(tuple(x) if isinstance(x, list) else x
                                for x in d[key])
@@ -118,38 +125,42 @@ class CorpusSpec:
 
 
 def _build_streams(spec: CorpusSpec):
-    """The spec's shared per-stream state: calibrated variant ladder,
-    latency model, seeded oracle backends and loops.  One build serves
-    a single pod or a whole fleet — every fleet pod must see the SAME
-    lists so global stream indices stay valid on any pod."""
-    from repro.core.omnisense import OmniSenseLoop
-    from repro.data.synthetic import make_video
-    from repro.serving import profiles
-    from repro.serving.network import NetworkModel
-    from repro.serving.scheduler import OmniSenseLatencyModel, OracleBackend
+    """The spec's shared per-stream state, built through the analytics
+    task registry (``repro.serving.tasks``): per-task calibrated
+    ladders and latency models, seeded oracle backends and loops.  A
+    spec with no ``tasks`` is an all-detection pod and reproduces the
+    pre-registry construction bit-identically.  One build serves a
+    single pod or a whole fleet — every fleet pod must see the SAME
+    lists so global stream indices stay valid on any pod.
 
-    ladder = {v.name: v for v in profiles.make_ladder()}
-    missing = [n for n in spec.variants if n not in ladder]
-    if missing:
-        raise ValueError(f"corpus_spec names unknown variants {missing}; "
-                         f"ladder has {sorted(ladder)}")
-    variants = [ladder[n] for n in spec.variants]
-    lat = OmniSenseLatencyModel(profiles.paper_profile(), NetworkModel())
-    costs = [lat._pre(v) + lat._inf(v) for v in variants]
+    Returns ``(variants, loops, backends, cost_fn)``: ``variants`` is
+    the union ladder over the tasks present and ``cost_fn`` prices a
+    union variant with its own task's latency model (placement
+    seeding)."""
+    from repro.data.synthetic import make_video
+    from repro.serving import tasks as task_registry
+
+    stream_tasks = list(spec.tasks) or ["detection"] * spec.n_streams
+    if len(stream_tasks) != spec.n_streams:
+        raise ValueError(
+            f"corpus_spec.tasks names {len(stream_tasks)} streams, "
+            f"n_streams is {spec.n_streams}")
     frames = spec.frames
     if spec.mode == "open":
         frames = max(frames, int(spec.horizon_s * spec.fps) + 8)
-    loops, backends = [], []
-    for s in range(spec.n_streams):
-        video = make_video(n_frames=frames + 8,
-                           n_objects=30 + 5 * (s % 4),
-                           seed=spec.seed0 + s)
-        backend = OracleBackend(video)
-        backends.append(backend)
-        loops.append(OmniSenseLoop(variants, lat, backend,
-                                   budget_s=spec.budget_for(s),
-                                   explore_costs=costs))
-    return variants, lat, loops, backends
+    videos = [make_video(n_frames=frames + 8,
+                         n_objects=30 + 5 * (s % 4),
+                         seed=spec.seed0 + s)
+              for s in range(spec.n_streams)]
+    budgets = [spec.budget_for(s) for s in range(spec.n_streams)]
+    try:
+        return task_registry.build_task_streams(
+            stream_tasks, videos, budgets,
+            detection_variants=spec.variants)
+    except ValueError as e:
+        if "unknown variants" in str(e):
+            raise ValueError(f"corpus_spec names {e}") from None
+        raise
 
 
 def build_pod(spec: CorpusSpec, policy=None, admission=None,
@@ -162,11 +173,11 @@ def build_pod(spec: CorpusSpec, policy=None, admission=None,
     from repro.serving.placement import VariantPlacement
     from repro.serving.server import PodServer
 
-    variants, lat, loops, backends = _build_streams(spec)
+    variants, loops, backends, cost_fn = _build_streams(spec)
     placement = None
     if spec.devices > 0:
         placement = VariantPlacement.virtual(variants, spec.devices,
-                                             cost_fn=lat._inf)
+                                             cost_fn=cost_fn)
     if policy is None:
         policy = _spec_policy(spec, admission)
     elif admission is not None:
@@ -200,7 +211,7 @@ def build_fleet(spec: CorpusSpec, policy=None, admission=None,
                          f"{spec.pods}")
     if spec.mode != "open":
         raise ValueError("fleet corpora are open-loop; set mode='open'")
-    variants, lat, loops, backends = _build_streams(spec)
+    variants, loops, backends, cost_fn = _build_streams(spec)
     per_pod = serving_scale_plan(spec.devices, spec.pods)["per_pod_devices"]
     if policy is not None and admission is not None:
         raise ValueError("pass admission inside the policy instance or "
@@ -210,7 +221,7 @@ def build_fleet(spec: CorpusSpec, policy=None, admission=None,
         placement = None
         if per_pod > 0:
             placement = VariantPlacement.virtual(variants, per_pod,
-                                                 cost_fn=lat._inf)
+                                                 cost_fn=cost_fn)
         pol = policy if policy is not None \
             else _spec_policy(spec, admission)
         return PodServer(loops, backends, max_batch=spec.max_batch,

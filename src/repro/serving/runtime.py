@@ -60,6 +60,7 @@ drain decisions can never disagree on what a queue costs.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Sequence
 
 _EPS = 1e-12
@@ -488,6 +489,16 @@ class AsyncDrainPolicy(SchedulePolicy):
     Carried requests age by one tick and are dispatched once any of
     them reaches ``max_carry`` ticks waited, bounding staleness.
 
+    Carry-over is additionally DEADLINE-AWARE: a residual chunk is
+    withheld only while the merged batch it would join still meets the
+    tightest ABSOLUTE due time (emission + latency budget) among the
+    withheld requests — the carried chunk cannot complete before the
+    group's expected drain horizon plus its own forward, so when that
+    projection busts a member's deadline the chunk dispatches NOW
+    instead.  This bounds the event-E2E tail that pure
+    batch-efficiency carry paid (the ROADMAP deadline-aware-carry
+    follow-on); requests without deadlines are always carry-eligible.
+
     :meth:`close_tick` advances to the earliest busy-group completion
     (``GroupClock.next_free``) instead of the barrier and charges the
     elapsed event time, so the mean tick is the true interleaved
@@ -526,6 +537,9 @@ class AsyncDrainPolicy(SchedulePolicy):
             g = self._group_index(placement, name)
             if (chunks[-1] < buckets.max_batch
                     and self._may_carry(queues.peek(name), chunks[-1])
+                    and self._deadline_allows(
+                        queues.peek(name), chunks[-1], name, g,
+                        clock, expected, chunk_cost)
                     and (clock.busy(g)
                          or expected.get(g, 0.0) >= critical - _EPS)):
                 chunks = chunks[:-1]
@@ -537,6 +551,26 @@ class AsyncDrainPolicy(SchedulePolicy):
         carrying is allowed only while all of them are fresher than
         ``max_carry`` ticks (so no request waits unboundedly)."""
         return all(it.age < self.max_carry for it in items[-residual:])
+
+    def _deadline_allows(self, items: Sequence, residual: int, name: str,
+                         group: int, clock, expected, chunk_cost) -> bool:
+        """Carry only while the merged batch still meets the tightest
+        withheld member's absolute due time.
+
+        A carried chunk cannot complete before the group's expected
+        drain horizon (carry-in plus this tick's projected load, which
+        already prices the residual itself) plus the merged forward it
+        joins next tick — lower-bounded by the residual's own chunk
+        cost.  When that projection busts ``emitted_s + deadline`` for
+        any withheld request, the chunk must dispatch now.
+        """
+        due = min((it.emitted_s + it.deadline for it in items[-residual:]
+                   if it.deadline is not None), default=math.inf)
+        if due == math.inf:
+            return True
+        cost = chunk_cost(name, residual) if chunk_cost is not None else 0.0
+        eta = clock.now + expected.get(group, 0.0) + cost
+        return eta <= due + _EPS
 
     def _group_load(self, queues, buckets, placement, chunk_cost,
                     projected_load) -> dict[int, float]:

@@ -43,7 +43,8 @@ from repro.serving.profiles import StageCosts
 class OmniSenseLatencyModel:
     def __init__(self, costs: StageCosts, network: NetworkModel,
                  profiler: PassiveProfiler | None = None,
-                 batch_marginal: float = 0.15):
+                 batch_marginal: float = 0.15,
+                 pre_batch_marginal: float = 0.35):
         self.costs = costs
         self.network = network
         # a defaulted profiler inherits the link's RTT floor so its
@@ -52,6 +53,10 @@ class OmniSenseLatencyModel:
         # marginal cost of each item beyond the first in a batched
         # forward (the standard sub-linear batching curve)
         self.batch_marginal = batch_marginal
+        # same curve for the mobile-side projection/encode stage —
+        # shallower batching than the edge forward (the mobile SoC
+        # pipelines crops but streams encode mostly serially)
+        self.pre_batch_marginal = pre_batch_marginal
 
     def _pre(self, variant: acc_mod.ModelProfile) -> float:
         mpix = variant.input_size ** 2 / 1e6
@@ -187,6 +192,37 @@ class OmniSenseLatencyModel:
         total = self.variant_queue_cost(variant, batch_size, buckets,
                                         n_devices)
         return total / (batch_size * self.batched_inference_delay(variant, 1))
+
+    def batched_pre_delay(self, variant: acc_mod.ModelProfile,
+                          batch_size: int) -> float:
+        """Cost of projecting/encoding ``batch_size`` PIs as one batch.
+
+        The :meth:`_pre` stage follows the same sub-linear curve as the
+        edge forward, with its own (shallower) ``pre_batch_marginal``;
+        ``batch_size == 1`` reduces exactly to the per-request term.
+        """
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        return self._pre(variant) * (
+            1.0 + (batch_size - 1) * self.pre_batch_marginal)
+
+    def pre_amortization(self, variant: acc_mod.ModelProfile,
+                         batch_size: int) -> float:
+        """Per-request share of the batched mobile-side stage, relative
+        to the b=1 projection/encode.
+
+        ``== 1.0`` EXACTLY at ``batch_size == 1`` (the identity pin
+        that keeps uncoupled d_pre pricing byte-identical), decreasing
+        as co-streams share the mobile stage.  ``solve_pod``'s coupled
+        price scales each stream's ``d_pre`` row by this factor.
+        """
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        pre = self._pre(variant)
+        if pre <= 0.0:
+            return 1.0
+        return self.batched_pre_delay(variant, batch_size) / \
+            (batch_size * pre)
 
     def tick_schedule_delay(self, schedule):
         """Price a whole tick's dispatch schedule on the pure curve.

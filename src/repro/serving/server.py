@@ -125,6 +125,17 @@ class ServeStats:
     # per dispatched request: launch minus emission on the event clock
     # (pure queueing delay, before the forward itself runs)
     queue_delays: list = dataclasses.field(default_factory=list)
+    # per-task accounting (keys = AnalyticsTask names; a bare detection
+    # pod records everything under "detection").  The open-loop
+    # conservation invariant holds PER TASK:
+    #   arrivals_by_task[t] == admitted + rejected + missed (each [t])
+    arrivals_by_task: dict = dataclasses.field(default_factory=dict)
+    admitted_by_task: dict = dataclasses.field(default_factory=dict)
+    degraded_by_task: dict = dataclasses.field(default_factory=dict)
+    rejected_by_task: dict = dataclasses.field(default_factory=dict)
+    missed_by_task: dict = dataclasses.field(default_factory=dict)
+    frames_by_task: dict = dataclasses.field(default_factory=dict)
+    plan_value_by_task: dict = dataclasses.field(default_factory=dict)
 
     @property
     def mean_e2e(self) -> float:
@@ -156,6 +167,15 @@ class ServeStats:
     def accuracy_proxy(self) -> float:
         """Mean allocator plan value per stream-frame."""
         return self.sum_plan_value / max(self.frames, 1)
+
+    @property
+    def accuracy_proxy_by_task(self) -> dict:
+        """Per-task mean plan value per finished stream-frame — the
+        mixed-pod bench's no-collapse signal (each task's proxy is in
+        ITS OWN ladder's units; compare same-task across pod mixes,
+        never across tasks)."""
+        return {t: self.plan_value_by_task.get(t, 0.0) / max(n, 1)
+                for t, n in sorted(self.frames_by_task.items())}
 
     @property
     def mean_tick(self) -> float:
@@ -198,6 +218,11 @@ class ServeStats:
             return {q: 0.0 for q in qs}
         arr = np.asarray(self.event_e2e)
         return {q: float(np.percentile(arr, q)) for q in qs}
+
+
+def _bump(counter: dict, task: str, amount=1) -> None:
+    """Increment one per-task ServeStats counter dict."""
+    counter[task] = counter.get(task, 0) + amount
 
 
 def format_group_report(stats: ServeStats, placement) -> list[str]:
@@ -312,14 +337,33 @@ class PodServer:
             else SyncTickPolicy()
         self.telemetry = telemetry if telemetry is not None \
             else TelemetrySink()
-        if self.policy.pod_allocate:
-            ladder = tuple(v.name for v in loops[0].variants)
-            for loop in loops:
-                if tuple(v.name for v in loop.variants) != ladder:
+        # task dimension: each loop serves ONE analytics task (the
+        # registry's loop factories stamp ``loop.task``; bare loops
+        # default to detection).  Task ladders own disjoint variant-name
+        # spaces, so the plain NAME strings that key the queues,
+        # placement groups and telemetry already encode (task, variant).
+        self.tasks: tuple[str, ...] = tuple(dict.fromkeys(
+            self._task(loop) for loop in loops))
+        self._variant_task: dict[str, str] = {}
+        for loop in loops:
+            task = self._task(loop)
+            for v in loop.variants:
+                prev = self._variant_task.setdefault(v.name, task)
+                if prev != task:
                     raise ValueError(
-                        "pod-level allocation needs every stream on the "
-                        f"same variant ladder; got {ladder} vs "
-                        f"{tuple(v.name for v in loop.variants)}")
+                        f"variant name {v.name!r} is claimed by tasks "
+                        f"{prev!r} and {task!r}; task ladders must own "
+                        "disjoint name spaces (names key the queues)")
+        if self.policy.pod_allocate:
+            ladders: dict[str, tuple] = {}
+            for loop in loops:
+                task = self._task(loop)
+                ladder = tuple(v.name for v in loop.variants)
+                if ladders.setdefault(task, ladder) != ladder:
+                    raise ValueError(
+                        "pod-level allocation needs every stream of a "
+                        f"task on the same variant ladder; task {task!r} "
+                        f"got {ladders[task]} vs {ladder}")
         # repro.serving.placement.VariantPlacement: routes each drained
         # chunk to its variant's replica group and switches the tick
         # model to max-over-groups; None = single-device pod (every
@@ -376,6 +420,13 @@ class PodServer:
         # busy horizon already charged to sum_tick_inf_s, and each
         # stream's newest in-flight frame (the depth-1 camera buffer)
         self.slo_s: float | None = None
+        # the capacity envelope the pod-level fixed point prices
+        # against.  Defaults to the pod's own slo_s; the fleet tier
+        # overwrites it per arrival round with the FLEET-global
+        # residual envelope (slo minus the fleet's worst busy horizon),
+        # so co-scheduled pods stop over-admitting against a private
+        # budget the shared tail has already spent.
+        self.solve_slo_s: float | None = None
         self._open_horizon = 0.0
         self._stream_frame: dict[int, _InFlightFrame] = {}
         # monotone dispatch id joining each telemetry launch/complete
@@ -389,6 +440,12 @@ class PodServer:
         self.incremental_nms = incremental_nms
         self._nms_inc: IncrementalNms | None = None
 
+    @staticmethod
+    def _task(loop) -> str:
+        """The analytics task a loop serves (registry loop factories
+        stamp ``loop.task``; bare loops are detection)."""
+        return getattr(loop, "task", "detection")
+
     def _emit_run_meta(self, mode: str) -> None:
         """One ``run_meta`` telemetry record per run entry point."""
         if not self.telemetry.enabled:
@@ -399,7 +456,8 @@ class PodServer:
             max_batch=self.max_batch,
             devices=self.placement.n_devices if self.placement is not None
             else 0,
-            variants=[v.name for v in self.loops[0].variants],
+            variants=list(self._variant_task),
+            tasks=list(self.tasks),
             slo_s=self.slo_s)
 
     def _resolve_curve_hook(self, attr: str):
@@ -522,8 +580,17 @@ class PodServer:
             ctx = loop.frame_context(frame)
             ctx_durations.append(time.perf_counter() - ctx.t0)
             ctxs.append(ctx)
+        # a multi-task pod prices the two ladders' cost curves JOINTLY:
+        # each stream's problem carries its own (variants, latency
+        # model) override and solve_pod unions them onto one capacity
+        # envelope.  Single-task pods pass no overrides, keeping the
+        # pre-task solve arithmetic bit-identical.
+        multi = len(self.tasks) > 1
         problems = [pod_allocation.StreamProblem(
-            ctx.acc, ctx.d_pre, ctx.d_inf, ctx.budget) for ctx in ctxs]
+            ctx.acc, ctx.d_pre, ctx.d_inf, ctx.budget,
+            variants=tuple(loop.variants) if multi else None,
+            latency_model=loop.latency_model if multi else None)
+            for loop, ctx in zip(self.loops, ctxs)]
         util = (self.stats.group_utilisation()
                 if self.placement is not None and self.stats.sum_tick_inf_s > 0
                 else None)
@@ -575,17 +642,20 @@ class PodServer:
                                    frame_idx=frame_idx, stream=s)
             self._inflight.append(entry)
             self._by_owner[id(pending)] = entry
+            task = self._task(loop)
             if pending.plan is not None:
                 self.stats.sum_plan_value += pending.plan.value
+                _bump(self.stats.plan_value_by_task, task,
+                      pending.plan.value)
             for req in pending.requests:
                 self.queues.put(QueuedRequest(
                     request=req, owner=pending, backend=backend,
                     latency_model=loop.latency_model,
                     deadline=loop.budget_s, emitted_s=self.clock.now,
-                    frame_idx=frame_idx))
+                    frame_idx=frame_idx, task=task))
             if self.telemetry.enabled:
                 self.telemetry.emit(
-                    "emit", t_s=self.clock.now, stream=s,
+                    "emit", t_s=self.clock.now, stream=s, task=task,
                     frame_idx=frame_idx, n_requests=len(pending.requests),
                     plan_value=pending.plan.value
                     if pending.plan is not None else 0.0,
@@ -671,6 +741,7 @@ class PodServer:
                 self.telemetry.emit(
                     "dispatch_launch", tick=event.tick,
                     dispatch=self._dispatch_seq, variant=event.variant,
+                    task=self._variant_task.get(event.variant, "detection"),
                     b=event.b, padded=event.padded, group=gidx,
                     n_devices=n_dev, cost_s=batched, launch_s=launch,
                     emitted_s=event.emitted_s, carried=event.carried,
@@ -727,6 +798,7 @@ class PodServer:
 
         for e, (_, result) in zip(finishing, plans):
             self.stats.frames += 1
+            _bump(self.stats.frames_by_task, self._task(e.loop))
             self.stats.total_detections += len(result.detections)
             self.stats.sum_e2e += result.planned_latency
             self.stats.sum_overhead += result.overhead_s
@@ -742,6 +814,7 @@ class PodServer:
             if self.telemetry.enabled:
                 self.telemetry.emit(
                     "frame_finish", t_s=e.done_s, stream=e.stream,
+                    task=self._task(e.loop),
                     frame_idx=e.frame_idx, event_e2e_s=e2e,
                     n_detections=len(result.detections),
                     det_digest=detections_digest(result.detections),
@@ -937,6 +1010,7 @@ class PodServer:
                 "This will become an error in the next release — see "
                 "README 'Migration'.", DeprecationWarning, stacklevel=3)
         self.slo_s = slo_s
+        self.solve_slo_s = slo_s
         self.stats.slo_s = slo_s
         self.stats.admission = self.policy.admission.name
         self._emit_run_meta("open")
@@ -979,12 +1053,14 @@ class PodServer:
             s = arrival.stream
             loop, backend = self.loops[s], self.backends[s]
             self.stats.arrivals += 1
+            _bump(self.stats.arrivals_by_task, self._task(loop))
             if self.telemetry.enabled:
                 self.telemetry.emit("arrival", t_s=arrival.t_s, stream=s,
                                     frame_idx=arrival.frame_idx)
             prev = self._stream_frame.get(s)
             if prev is not None and not prev.complete:
                 self.stats.missed += 1
+                _bump(self.stats.missed_by_task, self._task(loop))
                 if self.telemetry.enabled:
                     self._emit_admission(arrival, "missed", None, None,
                                          None)
@@ -997,16 +1073,19 @@ class PodServer:
                               loop.frame_context(frame)))
         if not survivors:
             return
+        multi = len(self.tasks) > 1
         problems = [pod_allocation.StreamProblem(
-            ctx.acc, ctx.d_pre, ctx.d_inf, ctx.budget)
-            for _, _, _, ctx in survivors]
+            ctx.acc, ctx.d_pre, ctx.d_inf, ctx.budget,
+            variants=tuple(loop.variants) if multi else None,
+            latency_model=loop.latency_model if multi else None)
+            for _, loop, _, ctx in survivors]
         util = (self.stats.group_utilisation()
                 if self.placement is not None
                 and self.stats.sum_tick_inf_s > 0 else None)
         sol = pod_allocation.solve_pod(
             problems, self.loops[0].variants, self.loops[0].latency_model,
             buckets=self.buckets, placement=self.placement,
-            group_utilisation=util, slo_s=self.slo_s)
+            group_utilisation=util, slo_s=self.solve_slo_s)
         self.stats.pod_ticks += 1
         self.stats.pod_rounds += sol.rounds
         self.stats.pod_converged_ticks += int(sol.converged)
@@ -1020,12 +1099,14 @@ class PodServer:
         s = arrival.stream
         loop, backend = self.loops[s], self.backends[s]
         self.stats.arrivals += 1
+        _bump(self.stats.arrivals_by_task, self._task(loop))
         if self.telemetry.enabled:
             self.telemetry.emit("arrival", t_s=arrival.t_s, stream=s,
                                 frame_idx=arrival.frame_idx)
         prev = self._stream_frame.get(s)
         if prev is not None and not prev.complete:
             self.stats.missed += 1
+            _bump(self.stats.missed_by_task, self._task(loop))
             if self.telemetry.enabled:
                 self._emit_admission(arrival, "missed", None, None, None)
             return
@@ -1064,13 +1145,17 @@ class PodServer:
         if self.telemetry.enabled:
             self._emit_admission(arrival, verdict, backlog, plan_cost,
                                  degraded_cost)
+        task = self._task(loop)
         if verdict == REJECT:
             self.stats.rejected += 1
+            _bump(self.stats.rejected_by_task, task)
             return
         if verdict == DEGRADE:
             plan = dplan
             self.stats.degraded += 1
+            _bump(self.stats.degraded_by_task, task)
         self.stats.admitted += 1
+        _bump(self.stats.admitted_by_task, task)
         pending = loop.emit_pending(ctx, plan)
         if not pending.requests:
             self.stats.empty_frames += 1
@@ -1082,15 +1167,16 @@ class PodServer:
         self._stream_frame[s] = entry
         if pending.plan is not None:
             self.stats.sum_plan_value += pending.plan.value
+            _bump(self.stats.plan_value_by_task, task, pending.plan.value)
         for req in pending.requests:
             self.queues.put(QueuedRequest(
                 request=req, owner=pending, backend=backend,
                 latency_model=loop.latency_model,
                 deadline=loop.budget_s, emitted_s=arrival.t_s,
-                frame_idx=arrival.frame_idx))
+                frame_idx=arrival.frame_idx, task=task))
         if self.telemetry.enabled:
             self.telemetry.emit(
-                "emit", t_s=arrival.t_s, stream=s,
+                "emit", t_s=arrival.t_s, stream=s, task=task,
                 frame_idx=arrival.frame_idx,
                 n_requests=len(pending.requests),
                 plan_value=pending.plan.value
@@ -1109,6 +1195,7 @@ class PodServer:
         frames never reach the policy, so their cost fields are null)."""
         self.telemetry.emit(
             "admission", t_s=arrival.t_s, stream=arrival.stream,
+            task=self._task(self.loops[arrival.stream]),
             frame_idx=arrival.frame_idx, verdict=verdict,
             backlog_s=backlog_s, plan_cost_s=plan_cost_s,
             degraded_cost_s=degraded_cost_s, slo_s=self.slo_s)

@@ -48,7 +48,7 @@ EVENT_FIELDS: dict[str, frozenset] = {
     # its rebuildable corpus parameters separately, in ``corpus_spec``)
     "run_meta": frozenset({
         "schema", "mode", "n_streams", "policy", "max_batch", "devices",
-        "variants", "slo_s"}),
+        "variants", "tasks", "slo_s"}),
     # repro.serving.replay.CorpusSpec as a dict — everything needed to
     # rebuild the pod and re-drive the run
     "corpus_spec": frozenset({"spec"}),
@@ -58,20 +58,21 @@ EVENT_FIELDS: dict[str, frozenset] = {
     # open loop: one frame hitting the pod's front door
     "arrival": frozenset({"t_s", "stream", "frame_idx"}),
     # open loop: the admission verdict for one arrival
-    # (admit / degrade / reject / missed)
+    # (admit / degrade / reject / missed).  ``task`` is the stream's
+    # analytics task — mixed-task replays diff per task.
     "admission": frozenset({
-        "t_s", "stream", "frame_idx", "verdict", "backlog_s",
+        "t_s", "stream", "task", "frame_idx", "verdict", "backlog_s",
         "plan_cost_s", "degraded_cost_s", "slo_s"}),
     # one frame's requests entering the variant queues
     "emit": frozenset({
-        "t_s", "stream", "frame_idx", "n_requests", "plan_value",
+        "t_s", "stream", "task", "frame_idx", "n_requests", "plan_value",
         "variants"}),
     # the drain plan the schedule policy returned for one tick
     "policy_decision": frozenset({"tick", "t_s", "policy", "ops"}),
     # one batched forward booked on the event clock (launch half);
     # ``queue_delays`` is the per-request launch-minus-emission list
     "dispatch_launch": frozenset({
-        "tick", "dispatch", "variant", "b", "padded", "group",
+        "tick", "dispatch", "variant", "task", "b", "padded", "group",
         "n_devices", "cost_s", "launch_s", "emitted_s", "carried",
         "queue_delays"}),
     # its completion half (same ``dispatch`` id joins the two)
@@ -87,8 +88,8 @@ EVENT_FIELDS: dict[str, frozenset] = {
     # one frame finishing (post-NMS): the detection digest is what the
     # replay-determinism gate compares for drift
     "frame_finish": frozenset({
-        "t_s", "stream", "frame_idx", "event_e2e_s", "n_detections",
-        "det_digest", "slo_violation"}),
+        "t_s", "stream", "task", "frame_idx", "event_e2e_s",
+        "n_detections", "det_digest", "slo_violation"}),
     # fleet tier (repro.serving.fleet): one routing decision binding a
     # stream to a pod ("new" stream, "migrate" off a retired pod, or a
     # ring move after elastic scaling)

@@ -625,11 +625,16 @@ class TestAsyncDrain:
         tiny, csp = variants[0], variants[2]
         buckets = ShapeBuckets((1, 2, 4, 8))
 
+        # loose deadlines: this test exercises the busy/critical-path
+        # carry mechanics alone (the synthetic chunk costs dwarf a real
+        # budget, and deadline-aware carry would rightly refuse); the
+        # deadline interplay is pinned by
+        # test_deadline_aware_carry_staggered below
         def fill(q):
             for i in range(9):  # csp: chunks [8, 1] — 1 is residual
-                q.put(_queued(csp, 1.8, slot=i))
+                q.put(_queued(csp, 50.0, slot=i))
             for i in range(2):  # tiny: single sub-bucket chunk [2]
-                q.put(_queued(tiny, 1.8, slot=9 + i))
+                q.put(_queued(tiny, 50.0, slot=9 + i))
 
         cost = {csp.name: 0.5, tiny.name: 0.01}
 
@@ -674,6 +679,41 @@ class TestAsyncDrain:
                                             chunk_cost=chunk_cost)
         assert [(o.variant, o.take) for o in ops] == [
             (csp.name, 8), (csp.name, 1)]
+
+    def test_deadline_aware_carry_staggered(self):
+        """A residual chunk carries only while the merged batch still
+        meets the TIGHTEST withheld member's absolute due time; with
+        staggered deadlines the tightest member governs, and deadlines
+        outside the withheld residual have no vote."""
+        variants = profiles.make_ladder(seed=0)
+        csp = variants[2]
+        buckets = ShapeBuckets((1, 2, 4, 8))
+
+        def drain(deadlines):
+            q = VariantQueues(buckets)
+            for i, d in enumerate(deadlines):
+                q.put(_queued(csp, d, slot=i))
+            return AsyncDrainPolicy().plan_drain(
+                q, buckets, None, GroupClock(),
+                chunk_cost=lambda name, b: 0.2 * b)
+
+        # 9 requests -> chunks [8, 1]; the single group is trivially
+        # critical, and the carried residual's projected completion is
+        # expected load (1.8s) + its own merged forward (0.2s) = 2.0s
+        ops = drain([2.5] * 9)
+        assert [(o.variant, o.take) for o in ops] == [(csp.name, 8)]
+        # stagger the residual member tighter: 2.0s > 1.9s due, so the
+        # chunk dispatches NOW instead of carrying past its deadline
+        ops = drain([2.5] * 8 + [1.9])
+        assert [(o.variant, o.take) for o in ops] == [
+            (csp.name, 8), (csp.name, 1)]
+        # a tight deadline OUTSIDE the withheld residual has no vote
+        # (that request dispatches this tick anyway)
+        ops = drain([1.9] + [2.5] * 8)
+        assert [(o.variant, o.take) for o in ops] == [(csp.name, 8)]
+        # deadline-free requests are always carry-eligible
+        ops = drain([None] * 9)
+        assert [(o.variant, o.take) for o in ops] == [(csp.name, 8)]
 
     def test_carry_age_bound_forces_dispatch(self):
         """A request carried once (age >= max_carry) pins its chunk

@@ -1,0 +1,431 @@
+"""Multi-task analytics: task registry + mixed-task pods (PR 10).
+
+Pins the ``repro.serving.tasks`` subsystem:
+
+  * registry discipline: duplicate task names and cross-task variant
+    name collisions are rejected (plain NAME strings key the queues,
+    so task ladders must own disjoint name spaces);
+  * detection THROUGH the registry is bit-identical to the
+    pre-registry construction (same fingerprint, same digests — the
+    refactor moved the wiring, not the numbers);
+  * the oracle action backend's semantic batch equals its inline path
+    and its tubelet window warms up / resets deterministically;
+  * the Jax action backend's jit cache is bounded by
+    (variants x batch buckets), like the detector's;
+  * a mixed-task pod serves both tasks end to end: per-task frame
+    counters and accuracy proxies, per-task open-loop conservation
+    (``arrivals == admitted + rejected + missed`` per task);
+  * coupled pricing generalises: ``pre_amortization`` is the identity
+    at b=1 for BOTH tasks' curves, and ``solve_pod`` with per-stream
+    overrides equal to the pod ladder returns the single-task answer;
+  * the fleet-global SLO envelope reaches every active pod's
+    ``solve_slo_s``.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import accuracy as acc_mod
+from repro.core import sroi as sroi_mod
+from repro.data.synthetic import make_video
+from repro.serving import pod_allocation as pa
+from repro.serving import profiles
+from repro.serving import tasks as task_registry
+from repro.serving.batching import ShapeBuckets
+from repro.serving.network import NetworkModel
+from repro.serving.replay import (CorpusSpec, build_fleet, build_pod,
+                                  record, stats_fingerprint)
+from repro.serving.scheduler import OmniSenseLatencyModel
+from repro.serving.tasks import (ACTION_LADDER, AnalyticsTask,
+                                 OracleActionBackend, action_ladder,
+                                 build_task_streams, get_task,
+                                 register_task, stream_tasks_for,
+                                 task_for_variant)
+from repro.serving.telemetry import MemorySink
+
+MIXED6 = ("detection", "action_recognition") * 3
+
+CLOSED_MIXED = CorpusSpec(mode="closed", n_streams=6, frames=5,
+                          budget_s=2.4, devices=8, tasks=MIXED6)
+OPEN_MIXED = CorpusSpec(mode="open", n_streams=6, frames=4, budget_s=2.4,
+                        devices=8, policy="async", admission="slo",
+                        slo_s=2.0, fps=0.5, jitter=0.2, horizon_s=10.0,
+                        tasks=MIXED6)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+class TestRegistry:
+    def test_both_tasks_registered(self):
+        det = get_task("detection")
+        act = get_task("action_recognition")
+        assert det.accuracy_proxy == "sph_map"
+        assert act.accuracy_proxy == "action_top1"
+        assert act.ladder_names() == tuple(n for n, _, _ in ACTION_LADDER)
+        # disjoint name spaces: (task, variant) == name
+        assert not set(det.ladder_names()) & set(act.ladder_names())
+
+    def test_duplicate_task_name_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_task(dataclasses.replace(get_task("detection")))
+
+    def test_cross_task_variant_collision_rejected(self):
+        clone = dataclasses.replace(get_task("detection"),
+                                    name="detection_v2")
+        with pytest.raises(ValueError, match="already registered to task"):
+            register_task(clone)
+        assert "detection_v2" not in task_registry.TASKS
+
+    def test_unknown_task_is_a_named_error(self):
+        with pytest.raises(ValueError, match="unknown task"):
+            get_task("segmentation")
+
+    def test_task_for_variant(self):
+        assert task_for_variant("act-p2-8x96") == "action_recognition"
+        for v in profiles.make_ladder():
+            assert task_for_variant(v.name) == "detection"
+        # unregistered toy ladders keep the pre-registry default
+        assert task_for_variant("toy-variant") == "detection"
+
+    def test_registry_entries_are_analytics_tasks(self):
+        for task in task_registry.TASKS.values():
+            assert isinstance(task, AnalyticsTask)
+            assert task.ladder_names()
+
+
+# ---------------------------------------------------------------------------
+# stream builders
+# ---------------------------------------------------------------------------
+
+
+class TestBuildStreams:
+    def test_stream_tasks_for_modes(self):
+        assert stream_tasks_for("detection", 3) == ["detection"] * 3
+        assert stream_tasks_for("action", 2) == ["action_recognition"] * 2
+        assert stream_tasks_for("mixed", 4) == [
+            "detection", "action_recognition",
+            "detection", "action_recognition"]
+        with pytest.raises(ValueError, match="unknown task mode"):
+            stream_tasks_for("tracking", 4)
+
+    def _videos(self, n, frames=6):
+        return [make_video(n_frames=frames, n_objects=20, seed=100 + s)
+                for s in range(n)]
+
+    def test_mixed_union_ladder_and_per_task_pricing(self):
+        variants, loops, backends, cost_fn = build_task_streams(
+            ["detection", "action_recognition"], self._videos(2),
+            [1.8, 1.8])
+        det_names = get_task("detection").ladder_names()
+        act_names = get_task("action_recognition").ladder_names()
+        # union in first-seen task order, each full ladder contiguous
+        assert tuple(v.name for v in variants) == det_names + act_names
+        assert [loop.task for loop in loops] == ["detection",
+                                                 "action_recognition"]
+        # cost_fn prices each union variant on ITS task's curve: the
+        # action rungs scale by clip length, which detection's
+        # single-frame curve would not reproduce
+        act_lat = loops[1].latency_model
+        for v in loops[1].variants:
+            assert cost_fn(v) == act_lat._inf(v)
+
+    def test_unknown_detection_variants_rejected(self):
+        with pytest.raises(ValueError, match="unknown variants"):
+            build_task_streams(["detection"], self._videos(1), [1.8],
+                               detection_variants=("no-such-rung",))
+
+    def test_shape_buckets_union(self):
+        buckets = task_registry.shape_buckets_for(
+            ["detection", "action_recognition"])
+        sizes = {v.input_size
+                 for t in ("detection", "action_recognition")
+                 for v in get_task(t).make_ladder()}
+        assert set(buckets.resolutions) == sizes
+
+
+# ---------------------------------------------------------------------------
+# detection through the registry: bit-identical
+# ---------------------------------------------------------------------------
+
+
+class TestDetectionBitIdentity:
+    def test_registry_construction_is_bit_identical(self):
+        """A spec with ``tasks=()`` (the pre-registry default) and one
+        naming detection explicitly build the SAME pod: identical
+        stats fingerprint, identical per-frame digests."""
+        base = CorpusSpec(mode="closed", n_streams=3, frames=4, devices=4)
+        named = dataclasses.replace(base, tasks=("detection",) * 3)
+        sink_a, sink_b = MemorySink(), MemorySink()
+        stats_a = record(base, sink_a)
+        stats_b = record(named, sink_b)
+        assert stats_fingerprint(stats_a) == stats_fingerprint(stats_b)
+        digests = [(e["stream"], e["frame_idx"], e["det_digest"])
+                   for e in sink_a.events if e["event"] == "frame_finish"]
+        assert digests == [
+            (e["stream"], e["frame_idx"], e["det_digest"])
+            for e in sink_b.events if e["event"] == "frame_finish"]
+        assert digests
+
+    def test_spec_tasks_round_trip(self):
+        spec = CLOSED_MIXED
+        assert CorpusSpec.from_dict(spec.to_dict()) == spec
+        with pytest.raises(ValueError, match="names 2 streams"):
+            record(dataclasses.replace(
+                spec, tasks=("detection", "action_recognition")),
+                MemorySink())
+
+
+# ---------------------------------------------------------------------------
+# oracle action backend
+# ---------------------------------------------------------------------------
+
+
+class TestOracleActionBackend:
+    def _regions(self, k):
+        return [sroi_mod.SRoI(center=(0.6 * i - 1.0, 0.1 * i), fov=(1.0, 0.9))
+                for i in range(k)]
+
+    def test_batched_equals_inline(self):
+        """The semantic batch is bit-identical to per-request calls —
+        the batched-vs-inline equivalence every backend must hold."""
+        video = make_video(n_frames=6, n_objects=25, seed=3)
+        inline, batched = OracleActionBackend(video), \
+            OracleActionBackend(video)
+        variant = action_ladder()[1]
+        frame_img = np.zeros((4, 8, 3), np.float32)
+        regions = self._regions(3)
+        for f in range(4):
+            inline.set_frame(f)
+            batched.set_frame(f)
+            want = [inline.infer_sroi(frame_img, r, variant)
+                    for r in regions]
+            got = batched.infer_srois_batched(
+                [(frame_img, r) for r in regions], variant)
+            assert len(got) == len(want)
+            for a, b in zip(got, want):
+                assert [(tuple(d.box), d.category, d.score) for d in a] \
+                    == [(tuple(d.box), d.category, d.score) for d in b]
+
+    def test_window_fill_warms_up_and_resets(self):
+        backend = OracleActionBackend(make_video(n_frames=20, seed=0))
+        variant = action_ladder()[1]  # clip_len 8
+        region = self._regions(1)[0]
+        fills = []
+        for f in (0, 1, 2, 3):
+            backend.set_frame(f)
+            fills.append(backend._window_fill(region, variant))
+        assert fills == [1 / 8, 2 / 8, 3 / 8, 4 / 8]
+        # a repeat observation of the same frame is idempotent
+        assert backend._window_fill(region, variant) == 4 / 8
+        # a gap (frames the scheduler skipped this region) resets
+        backend.set_frame(9)
+        assert backend._window_fill(region, variant) == 1 / 8
+        # a full consecutive run saturates at 1.0
+        for f in range(10, 10 + 8):
+            backend.set_frame(f)
+            fill = backend._window_fill(region, variant)
+        assert fill == 1.0
+
+
+# ---------------------------------------------------------------------------
+# jax action backend: compile discipline
+# ---------------------------------------------------------------------------
+
+
+class TestJaxActionBackend:
+    def test_trace_count_bounded_by_variants_x_buckets(self):
+        from repro.models import action as act_mod
+        from repro.serving.tasks import JaxActionBackend
+
+        import jax
+
+        cfgs = [act_mod.ActionConfig(name=f"t{i}", input_size=16,
+                                     clip_len=2 + 2 * i, patch=8,
+                                     d_model=8, n_heads=2, d_ff=16,
+                                     n_actions=4)
+                for i in range(2)]
+        params = [act_mod.init_params(jax.random.PRNGKey(i), c)
+                  for i, c in enumerate(cfgs)]
+        backend = JaxActionBackend(
+            cfgs, params, use_kernel=False,
+            buckets=ShapeBuckets((1, 2), resolutions=(16,)))
+        variants = [acc_mod.ModelProfile(
+            name=c.name, index=i + 1, input_size=16, location="edge",
+            gav=np.full(12, 0.5), infer_s=0.01, model_bytes=2 ** 20)
+            for i, c in enumerate(cfgs)]
+        frame_img = np.random.default_rng(0).random((32, 64, 3)) \
+            .astype(np.float32)
+        regions = [sroi_mod.SRoI(center=(0.3 * k, 0.0), fov=(1.0, 1.0))
+                   for k in range(2)]
+        for f in range(3):
+            backend.set_frame(f)
+            for v in variants:
+                for b in (1, 2):
+                    out = backend.infer_srois_batched(
+                        [(frame_img, r) for r in regions[:b]], v)
+                    assert len(out) == b
+                    assert all(len(dets) == 1 for dets in out)
+        # every (variant, padded batch) compiled once — repeats hit the
+        # jit cache, so a serving lifetime is bounded like the detector
+        assert backend.trace_count <= len(cfgs) * 2
+        before = backend.trace_count
+        backend.infer_sroi(frame_img, regions[0], variants[0])
+        assert backend.trace_count == before
+
+
+# ---------------------------------------------------------------------------
+# mixed-task pods end to end
+# ---------------------------------------------------------------------------
+
+
+class TestMixedPod:
+    def test_closed_mixed_pod_counts_both_tasks(self):
+        server = build_pod(CLOSED_MIXED)
+        assert server.tasks == ("detection", "action_recognition")
+        stats = server.run(range(CLOSED_MIXED.frames))
+        n_each = CLOSED_MIXED.frames * 3
+        assert stats.frames_by_task == {"detection": n_each,
+                                        "action_recognition": n_each}
+        proxies = stats.accuracy_proxy_by_task
+        assert set(proxies) == {"detection", "action_recognition"}
+        assert all(p > 0 for p in proxies.values())
+        # per-task proxies partition the pod-level one
+        total = sum(stats.plan_value_by_task.values())
+        assert total == pytest.approx(
+            stats.accuracy_proxy * stats.frames, rel=1e-9)
+
+    def test_cross_task_variant_collision_rejected_by_pod(self):
+        from repro.core.omnisense import OmniSenseLoop
+        from repro.serving.scheduler import OracleBackend
+        from repro.serving.server import PodServer
+
+        variants = profiles.make_ladder()[:2]
+        lat = OmniSenseLatencyModel(profiles.paper_profile(),
+                                    NetworkModel())
+        loops, backends = [], []
+        for s, task in enumerate(("detection", "action_recognition")):
+            backend = OracleBackend(make_video(n_frames=4, seed=s))
+            loop = OmniSenseLoop(variants, lat, backend, budget_s=1.8)
+            loop.task = task  # same variant NAMES, different task
+            loops.append(loop)
+            backends.append(backend)
+        with pytest.raises(ValueError, match="disjoint name spaces"):
+            PodServer(loops, backends)
+
+    def test_open_loop_per_task_conservation(self):
+        stats = record(OPEN_MIXED, MemorySink())
+        tasks = ("detection", "action_recognition")
+        for t in tasks:
+            assert stats.arrivals_by_task[t] == (
+                stats.admitted_by_task.get(t, 0)
+                + stats.rejected_by_task.get(t, 0)
+                + stats.missed_by_task.get(t, 0)), t
+        # the per-task splits partition the pod-level totals
+        assert sum(stats.arrivals_by_task.values()) == stats.arrivals
+        assert sum(stats.admitted_by_task.values()) == stats.admitted
+        assert sum(stats.rejected_by_task.values()) == stats.rejected
+        assert sum(stats.missed_by_task.values()) == stats.missed
+        assert all(stats.arrivals_by_task[t] > 0 for t in tasks)
+
+    def test_mixed_replay_bit_identical(self):
+        from repro.serving.replay import replay
+
+        sink = MemorySink()
+        record(OPEN_MIXED, sink)
+        result = replay(sink.events)
+        assert result.identical, "\n".join(result.drift())
+
+    def test_task_tags_in_telemetry(self):
+        sink = MemorySink()
+        record(OPEN_MIXED, sink)
+        meta = next(e for e in sink.events if e["event"] == "run_meta")
+        assert meta["tasks"] == ["detection", "action_recognition"]
+        tasks_seen = {e["task"] for e in sink.events
+                      if e["event"] == "admission"}
+        assert tasks_seen == {"detection", "action_recognition"}
+        for ev in ("emit", "dispatch_launch", "frame_finish"):
+            assert all("task" in e for e in sink.events
+                       if e["event"] == ev)
+
+
+# ---------------------------------------------------------------------------
+# coupled pricing across two curves
+# ---------------------------------------------------------------------------
+
+
+class TestCoupledPricing:
+    def test_pre_amortization_identity_at_b1_both_tasks(self):
+        det_lat = get_task("detection").make_latency_model()
+        act_lat = get_task("action_recognition").make_latency_model()
+        for lat, ladder in ((det_lat, profiles.make_ladder()),
+                            (act_lat, action_ladder())):
+            for v in ladder:
+                assert lat.pre_amortization(v, 1) == 1.0
+                assert lat.pre_amortization(v, 4) < 1.0
+
+    def test_solve_pod_overrides_equal_base_is_identity(self):
+        """Per-stream overrides naming the pod's own ladder + latency
+        model must reproduce the no-override solution exactly — the
+        seam the mixed-task solver rests on."""
+        rng = np.random.default_rng(7)
+        variants = tuple(profiles.make_ladder(seed=0)[:3])
+        lat = OmniSenseLatencyModel(profiles.paper_profile(),
+                                    NetworkModel())
+        buckets = ShapeBuckets((1, 2, 4, 8))
+
+        def problem(overridden):
+            m, r = len(variants), 2
+            acc = np.vstack([np.zeros((1, r)),
+                             rng.uniform(0.2, 1.0, (m, r))])
+            d_pre = np.vstack([np.zeros((1, r)),
+                               rng.uniform(0.01, 0.1, (m, r))])
+            d_inf = np.vstack([np.zeros((1, r)),
+                               rng.uniform(0.05, 0.6, (m, r))])
+            return pa.StreamProblem(
+                acc, d_pre, d_inf, budget=1.2,
+                variants=variants if overridden else None,
+                latency_model=lat if overridden else None)
+
+        rng_state = rng.bit_generator.state
+        base = pa.solve_pod([problem(False) for _ in range(4)],
+                            variants, lat, buckets=buckets)
+        rng.bit_generator.state = rng_state
+        over = pa.solve_pod([problem(True) for _ in range(4)],
+                            variants, lat, buckets=buckets)
+        assert base.counts == over.counts
+        assert base.projected_tick == over.projected_tick
+        for p, q in zip(base.plans, over.plans):
+            assert (p is None) == (q is None)
+            if p is not None:
+                assert p.models == q.models
+                assert p.value == q.value
+
+
+# ---------------------------------------------------------------------------
+# fleet-global SLO envelope
+# ---------------------------------------------------------------------------
+
+
+class TestSloEnvelope:
+    def test_open_loop_begin_sets_solve_slo(self):
+        server = build_pod(CLOSED_MIXED)
+        assert server.solve_slo_s is None
+        server.open_loop_begin(slo_s=2.0)
+        assert server.solve_slo_s == 2.0
+
+    def test_fleet_envelope_reaches_active_pods(self):
+        spec = dataclasses.replace(OPEN_MIXED, pods=2)
+        fleet = build_fleet(spec)
+        fleet.run_open_loop(spec.traffic(), slo_s=spec.slo_s)
+        assert fleet.active
+        for pid in fleet.active:
+            env = fleet.pods[pid].solve_slo_s
+            assert env is not None
+            # the fleet-global envelope is the SLO minus the worst
+            # residual backlog — never looser than the SLO itself
+            assert 0.0 <= env <= spec.slo_s

@@ -33,9 +33,12 @@ from repro.serving.telemetry import (EVENT_FIELDS, JsonlSink, MemorySink,
 from repro.serving.traffic import Arrival, arrivals_from_records
 
 # small corpora keep the module in the fast tier; churn + async carry
-# exercise the interesting event types (carry, admission, rebalance)
-CLOSED_SPEC = CorpusSpec(mode="closed", n_streams=3, frames=4,
-                         policy="async", devices=4)
+# exercise the interesting event types (carry, admission, rebalance).
+# The closed corpus needs a budget loose enough that DEADLINE-AWARE
+# carry still withholds residual chunks (a tight budget now forces
+# immediate dispatch — by design).
+CLOSED_SPEC = CorpusSpec(mode="closed", n_streams=3, frames=6,
+                         policy="async", devices=4, budget_s=3.0)
 OPEN_SPEC = CorpusSpec(mode="open", n_streams=3, frames=4, budget_s=0.9,
                        devices=4, admission="slo", slo_s=2.0, fps=0.8,
                        jitter=0.2, horizon_s=8.0,

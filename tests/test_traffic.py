@@ -198,11 +198,15 @@ class TestOpenLoopServing:
         """With async carry a stream's previous frame can still be in
         flight when the next arrival fires; the depth-1 camera buffer
         drops (and counts) the newcomer instead of fabricating a queue
-        behind it."""
-        server = _open_pod(3, policy=AsyncDrainPolicy(max_carry=3))
+        behind it.  The budget must be loose: deadline-aware carry
+        refuses to withhold chunks a tight deadline could not survive,
+        and without carry nothing stays in flight long enough to miss."""
+        server = _open_pod(3, policy=AsyncDrainPolicy(max_carry=3),
+                           budget=6.0)
         stats = server.run_open_loop(
             ArrivalProcess(3, fps=3.0, jitter=0.1, seed=2, horizon_s=8.0))
         self._conservation(stats)
+        assert stats.carried_requests > 0  # carry actually engaged
         assert stats.missed > 0
 
     def test_churned_stream_serves_both_sessions(self):
